@@ -1,0 +1,286 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+for a scan-over-layers model that undercounts FLOPs/bytes/collectives by the
+layer count (verified experimentally; see EXPERIMENTS.md §Roofline
+methodology).  This module re-derives costs from the optimized HLO text:
+
+  * computations are parsed into op lists with result types;
+  * ``while`` ops multiply their body cost by ``known_trip_count`` (emitted
+    by XLA for scan-style loops; fallback: condition-constant parse, else 1);
+  * ``fusion``/``call`` ops recurse into their called computations;
+  * ``conditional`` takes the max across branches;
+  * dot FLOPs = 2 x |result| x |contracting dims| (from operand shapes);
+    elementwise/reduce FLOPs = |shape|;
+  * collective bytes = result-buffer bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (async -start counted,
+    -done skipped).  The per-device HLO means all numbers are per-device.
+
+HBM-byte accounting: ops INSIDE a fusion computation stay in registers/VMEM,
+so bytes are charged only at materialization boundaries — each top-level op
+(in ENTRY or a while body) charges its result bytes (one write) plus its
+operands' bytes (one read per consumer edge); fusion internals contribute
+FLOPs but no bytes.  This is the standard "is_scheduled" HBM-traffic model.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DT_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+             "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+             "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+             "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'known_trip_count"?:\{"?n"?:"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:true_computation=%?([\w\.\-]+).*?false_computation=%?([\w\.\-]+))"
+    r"|branch_computations=\{([^}]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "tanh", "logistic", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "select", "clamp", "compare",
+    "and", "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "atan2", "remainder", "cosine", "sine",
+    "erf", "cbrt",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def _first_shape_elems(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, 0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0               # rough HBM proxy: op results
+    transcendentals: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self._parse(text)
+        self.entry = self._find_entry(text)
+        self._memo: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                continue
+            if line.startswith("}") or line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                self.computations[cur].append(
+                    _Op(m.group(1), m.group(2), m.group(3), line))
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    return m.group(1)
+        return next(iter(self.computations))
+
+    # -- cost evaluation ---------------------------------------------------
+
+    def cost(self, comp_name: str | None = None, in_fusion: bool = False) -> Cost:
+        comp_name = comp_name or self.entry
+        key = (comp_name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total                # breaks accidental cycles
+        ops = {op.name: op for op in self.computations.get(comp_name, [])}
+        for op in self.computations.get(comp_name, []):
+            total.add(self._op_cost(op, ops, in_fusion))
+        return total
+
+    _NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota", "partition-id",
+                   "replica-id"}
+
+    def _traffic(self, op: _Op, ops: dict) -> float:
+        """result write + operand reads (HBM edges of one top-level op)."""
+        total = float(_type_bytes(op.type_str))
+        for name in self._operands(op):
+            if name in ops and ops[name].opcode not in ("constant",):
+                total += _type_bytes(ops[name].type_str)
+        return total
+
+    def _operands(self, op: _Op) -> list[str]:
+        inner = op.line.split(op.opcode + "(", 1)[1]
+        depth, out, cur = 1, [], ""
+        for ch in inner:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                out.append(cur.strip())
+                cur = ""
+            else:
+                cur += ch
+        if cur.strip():
+            out.append(cur.strip())
+        names = []
+        for o in out:
+            o = o.strip()
+            if o.startswith("%"):
+                names.append(o[1:])
+        return names
+
+    def _op_cost(self, op: _Op, ops: dict, in_fusion: bool) -> Cost:
+        c = Cost()
+        oc = op.opcode
+        if oc == "while":
+            m = _COND_BODY_RE.search(op.line)
+            trips = 1
+            tm = _TRIP_RE.search(op.line)
+            if tm:
+                trips = int(tm.group(1))
+            elif m:
+                cond = m.group(1)
+                for cop in self.computations.get(cond, []):
+                    if cop.opcode == "constant":
+                        cm = re.search(r"constant\((\d+)\)", cop.line)
+                        if cm:
+                            trips = max(trips, int(cm.group(1)))
+            if m:
+                c.add(self.cost(m.group(2), in_fusion), trips)
+            return c
+        if oc in ("fusion", "call", "async-start"):
+            m = _CALLS_RE.search(op.line) or re.search(r"to=%?([\w\.\-]+)",
+                                                       op.line)
+            if m:
+                # flops recurse; bytes charge only at this boundary
+                c.add(self.cost(m.group(1), in_fusion=True))
+            if not in_fusion:
+                c.bytes += self._traffic(op, ops)
+            return c
+        if oc == "conditional":
+            m = _BRANCHES_RE.search(op.line)
+            if m:
+                branches = ([m.group(1), m.group(2)] if m.group(1)
+                            else [b.strip().lstrip("%") for b in
+                                  m.group(3).split(",")])
+                costs = [self.cost(b, in_fusion) for b in branches if b]
+                if costs:
+                    c.add(max(costs, key=lambda x: x.flops))
+            return c
+
+        base = oc[:-6] if oc.endswith("-start") else oc
+        if base in _COLLECTIVES and not oc.endswith("-done"):
+            c.collectives[base] = (c.collectives.get(base, 0.0)
+                                   + _type_bytes(op.type_str))
+            if not in_fusion:
+                c.bytes += self._traffic(op, ops)
+            return c
+
+        if oc == "dot":
+            _, out_elems = _first_shape_elems(op.type_str)
+            contract = 1
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+            operands = self._operands(op)
+            if m and operands and operands[0] in ops:
+                lhs_dims, _ = _first_shape_elems(ops[operands[0]].type_str)
+                if lhs_dims:
+                    for d in m.group(1).split(","):
+                        if d:
+                            contract *= lhs_dims[int(d)]
+            c.flops += 2.0 * out_elems * contract
+        elif oc == "convolution":
+            _, out_elems = _first_shape_elems(op.type_str)
+            operands = self._operands(op)
+            kelems = 1
+            if len(operands) > 1 and operands[1] in ops:
+                _, kelems = _first_shape_elems(ops[operands[1]].type_str)
+            c.flops += 2.0 * out_elems * max(kelems, 1)
+        elif oc in ("reduce", "reduce-window"):
+            operands = self._operands(op)
+            if operands and operands[0] in ops:
+                _, in_elems = _first_shape_elems(ops[operands[0]].type_str)
+                c.flops += float(in_elems)
+        elif oc in _ELEMENTWISE:
+            _, out_elems = _first_shape_elems(op.type_str)
+            c.flops += float(out_elems)
+            if oc in ("exponential", "log", "tanh", "logistic", "rsqrt",
+                      "sqrt", "power", "cosine", "sine", "erf"):
+                c.transcendentals += float(out_elems)
+
+        if not in_fusion and oc not in self._NO_TRAFFIC:
+            c.bytes += self._traffic(op, ops)
+        return c
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.cost()
+    coll_total = sum(c.collectives.values())
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "transcendentals": c.transcendentals,
+        "collective_bytes": dict(c.collectives, total=coll_total),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(analyze(open(sys.argv[1]).read()), indent=2))

@@ -1,0 +1,119 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts.
+
+    compute_term    = HLO_FLOPs_per_dev / peak_FLOP/s          (197e12 bf16)
+    memory_term     = HLO_bytes_per_dev / HBM_bw               (819e9 B/s)
+    collective_term = collective_bytes_per_dev / link_bw       (50e9 B/s)
+
+HLO numbers come from the trip-count-aware analyzer (hlo_analysis.py) because
+XLA's cost_analysis counts while bodies once (§Roofline methodology in
+EXPERIMENTS.md).  All quantities are per-device (the SPMD module IS the
+per-device program), so the spec's "X / (chips x BW)" and our "X_per_dev / BW"
+are the same number.  ``bytes`` is an upper-bound traffic proxy (sums op
+result bytes incl. fusion internals); see the methodology note.
+
+MODEL_FLOPS: train = 6*N(+active for MoE)*tokens; prefill = 2*N_active*tokens;
+decode = 2*N_active*batch (one token) + KV-read bytes dominate memory instead.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+_IMPROVE = {
+    "compute": ("shard the remaining replicated einsums / cut remat "
+                "recompute (dots policy) to shrink HLO FLOPs toward 6ND"),
+    "memory": ("shrink resident working set: microbatch harder, sequence-"
+               "shard saved carries, quantize/per-layer-alias KV caches"),
+    "collective": ("reduce-scatter instead of all-reduce, overlap weight "
+                   "gathers with compute (latency-hiding scheduler), "
+                   "gradient compression (dist.collectives)"),
+}
+
+
+def model_flops_per_dev(rec):
+    seq_batch = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                 "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+    seq, batch = seq_batch[rec["shape"]]
+    n_act = rec["active_params"]
+    n_dev = rec["n_devices"]
+    if rec["shape"].startswith("train"):
+        return 6.0 * n_act * seq * batch / n_dev
+    if rec["shape"].startswith("prefill"):
+        return 2.0 * n_act * seq * batch / n_dev
+    return 2.0 * n_act * batch / n_dev          # decode: one token
+
+
+def terms(rec):
+    c = rec["flops"] / PEAK
+    m = rec["hlo_bytes_est"] / HBM
+    k = rec["collective_bytes"]["total"] / LINK
+    dom = max(("compute", c), ("memory", m), ("collective", k),
+              key=lambda t: t[1])[0]
+    mf = model_flops_per_dev(rec)
+    useful_s = mf / PEAK
+    bound_s = max(c, m, k)
+    return {
+        "compute_s": c, "memory_s": m, "collective_s": k, "dominant": dom,
+        "model_flops_per_dev": mf,
+        "model_over_hlo": mf / rec["flops"] if rec["flops"] else 0.0,
+        "roofline_frac": useful_s / bound_s if bound_s else 0.0,
+        "improve": _IMPROVE[dom],
+    }
+
+
+def load(results_dir, tag, mesh):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(
+            results_dir, f"*__{mesh}__{tag}.json"))):
+        r = json.load(open(f))
+        recs.append(r)
+    return recs
+
+
+def table(results_dir="benchmarks/results/dryrun", tag="opt", mesh="single",
+          fmt="md"):
+    rows = []
+    for r in load(results_dir, tag, mesh):
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], None, r.get("reason", "")))
+            continue
+        rows.append((r["arch"], r["shape"], terms(r), r))
+    if fmt == "md":
+        out = [f"### Roofline — tag `{tag}`, mesh `{mesh}` "
+               f"(seconds per step, per chip)\n",
+               "| arch | shape | compute | memory | collective | dominant | "
+               "6ND/HLO | roofline-frac | bound by / next move |",
+               "|---|---|---|---|---|---|---|---|---|"]
+        for arch, shape, t, extra in rows:
+            if t is None:
+                out.append(f"| {arch} | {shape} | — | — | — | skipped | — | — "
+                           f"| {extra[:70]} |")
+                continue
+            out.append(
+                f"| {arch} | {shape} | {t['compute_s']:.3e} | "
+                f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+                f"{t['dominant']} | {t['model_over_hlo']:.2f} | "
+                f"{t['roofline_frac']:.3f} | {t['improve'][:60]}... |")
+        return "\n".join(out)
+    return rows
+
+
+def main():
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--tag", default="opt")
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--dir", default="benchmarks/results/dryrun")
+    a = p.parse_args()
+    print(table(a.dir, a.tag, a.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Benchmark harness (deliverable d): one function per paper figure/table +
+kernel micro-benches + the roofline extraction.  Prints ``name,us_per_call,
+derived`` CSV, as required.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench_kernels(rows):
+    """Per-kernel interpret-mode micro-benches vs their jnp oracles."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.kernels.moe_dispatch import moe_positions
+
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 4, 256, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+
+    def t(fn, *a, iters=2):
+        out = fn(*a)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*a)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    flops_attn = 2 * 2 * 1 * 4 * 256 * 256 * 64   # qk+av fwd
+    for impl in ("kernel", "xla", "naive"):
+        us = t(lambda impl=impl: flash_attention(q, k, v, causal=True,
+                                                 impl=impl, bq=128, bk=128))
+        rows.append((f"kernel_flash_{impl}", us, f"flops={flops_attn:.2e}"))
+
+    x = jnp.asarray(rng.randn(1, 256, 2, 16).astype(np.float32))
+    dt = jnp.asarray((np.abs(rng.randn(1, 256, 2)) * 0.1 + 0.01).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.randn(2)).astype(np.float32) - 0.1)
+    B = jnp.asarray(rng.randn(1, 256, 16).astype(np.float32) * 0.3)
+    C = jnp.asarray(rng.randn(1, 256, 16).astype(np.float32) * 0.3)
+    for impl in ("kernel", "xla"):
+        us = t(lambda impl=impl: ssd_scan(x, dt, A, B, C, chunk=64,
+                                          impl=impl)[0])
+        rows.append((f"kernel_ssd_{impl}", us, "chunk=64"))
+
+    ids = jnp.asarray(rng.randint(0, 16, (512, 2)), jnp.int32)
+    for impl in ("kernel", "xla"):
+        us = t(lambda impl=impl: moe_positions(ids, 16, impl=impl)[0])
+        rows.append((f"kernel_moe_positions_{impl}", us, "T=512,K=2,E=16"))
+
+    from repro.kernels.fadda import fadda
+    xs = jnp.asarray(rng.randn(4096).astype(np.float32))
+    us = t(lambda: fadda(xs, block=512))
+    rows.append(("kernel_fadda", us, "strictly_ordered=True"))
+
+
+def bench_roofline(rows):
+    """Roofline terms per cell from the dry-run JSONs (if present)."""
+    import glob
+    import json
+    from benchmarks import roofline as RL
+    found = False
+    for f in sorted(glob.glob("benchmarks/results/dryrun/*__single__opt.json")):
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        found = True
+        t = RL.terms(r)
+        rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                     f"compute={t['compute_s']:.3e}s;memory={t['memory_s']:.3e}s;"
+                     f"collective={t['collective_s']:.3e}s;dom={t['dominant']};"
+                     f"frac={t['roofline_frac']:.3f}"))
+    if not found:
+        rows.append(("roofline", 0.0,
+                     "no dry-run results; run python -m repro.launch.dryrun"))
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import bench_paper_figures as BF
+    rows: list = []
+    BF.bench_fig2_daxpy(rows)
+    BF.bench_fig5_strlen(rows)
+    BF.bench_fig6_linked_list(rows)
+    BF.bench_fig8_vla_scaling(rows)
+    BF.bench_table2_model_zoo(rows)
+    if not fast:
+        bench_kernels(rows)
+    bench_roofline(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

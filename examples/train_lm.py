@@ -1,0 +1,89 @@
+"""End-to-end training driver (deliverable b): data pipeline -> predicated
+model -> fused train step -> async checkpointing -> fault-tolerant loop, with
+an optional injected fault to demonstrate recovery.
+
+Defaults train a ~15M-param model for 60 steps on CPU in a few minutes; use
+``--preset 100m --steps 300`` on real hardware for the paper-scale run.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps N] [--inject-fault]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.models import ModelConfig
+from repro.runtime import FaultTolerantLoop
+from repro.train.step import init_state, make_train_step
+
+PRESETS = {
+    "15m": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                vocab_size=8192),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=32128),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="15m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-fault", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"lm-{args.preset}", family="dense",
+                      param_dtype="float32", compute_dtype="float32",
+                      **PRESETS[args.preset])
+    print(f"model: {cfg.name}  params={cfg.param_count():.3e}")
+
+    state, _ = init_state(jax.random.PRNGKey(0), cfg)
+    step_fn = jax.jit(make_train_step(cfg, peak_lr=3e-4, warmup=20,
+                                      total=args.steps,
+                                      microbatch=args.microbatch),
+                      donate_argnums=(0,))
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, seed=0)
+
+    def batch_fn(step):
+        tokens, labels, lens = data.batch(step, args.batch)
+        return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels),
+                "lens": jnp.asarray(lens)}
+
+    faults = {17} if args.inject_fault else set()
+
+    def injector(step):
+        if step in faults:
+            faults.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+    loop = FaultTolerantLoop(step_fn, batch_fn, ckpt_dir=args.ckpt_dir,
+                             save_every=10)
+    t0 = time.time()
+
+    def cb(step, metrics):
+        if step % 10 == 0 or step < 3:
+            print(f"  step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"({time.time() - t0:.1f}s)")
+
+    state, hist = loop.run(state, args.steps, metrics_cb=cb,
+                           fault_injector=injector)
+    losses = [l for _, l in hist]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}  "
+          f"recoveries={loop.recoveries}  "
+          f"stragglers={len(loop.watchdog.flagged)}")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .ckpt import (latest_step, restore_checkpoint, save_checkpoint,  # noqa: F401
+                   AsyncCheckpointer)

@@ -1,0 +1,9 @@
+"""repro.core — the paper's contribution (ARM SVE, IEEE Micro 2017) as a
+composable JAX library: vector-length agnosticism, predicate-centric
+execution, first-faulting speculation, vector partitioning and horizontal
+operations, adapted for TPU execution at lane/chip/cluster scales.
+"""
+
+from . import ffr, partition, predicate, reductions, vla  # noqa: F401
+
+__all__ = ["vla", "predicate", "partition", "ffr", "reductions"]

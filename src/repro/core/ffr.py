@@ -1,0 +1,139 @@
+"""First-faulting loads and the FFR (SVE C4), adapted to TPU/XLA.
+
+TPU has no faulting vector loads and no per-lane trap machinery, so the
+*mechanism* (suppress the trap, poison the FFR) cannot be ported.  What we
+preserve is the architectural *contract* of paper §2.3.3:
+
+  * a speculative vector load may touch addresses that are not known-safe;
+  * lanes from the first "faulting" lane onward are NOT architecturally
+    loaded, and a first-fault register (FFR) reports the safe partition;
+  * the first active lane is never suppressed — a genuine fault there is the
+    caller's to handle (in JAX: it reads the fill value and the FFR bit for
+    lane 0 is False, which the caller must check — there is no OS trap).
+
+"Faults" on TPU are bounds violations / invalid pages of a software-managed
+address space (paged KV caches, ragged token buffers, linked structures laid
+out in arrays), checked explicitly.  ``mode=fill`` gathers make the
+speculative access side-effect free, exactly like a suppressed load.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import partition as PT
+from . import predicate as P
+
+Array = jax.Array
+
+
+def fault_oob(indices: Array, lower, upper) -> Array:
+    """Fault predicate for a [lower, upper) address window."""
+    return (indices < lower) | (indices >= upper)
+
+
+def ldff(
+    base: Array,
+    indices: Array,
+    p: Array,
+    *,
+    fault: Array | None = None,
+    lower: int = 0,
+    upper: int | None = None,
+    fill=0,
+) -> tuple[Array, Array]:
+    """First-faulting gather: ``values, ffr = ldff(base, idx, p)``.
+
+    - ``base``: 1-D (or leading-dims) source array, gathered on axis 0.
+    - ``indices``: lane vector of element addresses.
+    - ``p``: governing predicate.
+    - ``fault``: optional explicit per-lane fault predicate; defaults to an
+      out-of-bounds check against [lower, upper or len(base)).
+
+    Returns values (zeroing predication on non-loaded lanes: they read as
+    ``fill``) and the FFR partition: governed lanes strictly before the first
+    faulting active lane (``brkb`` over the fault predicate).  Matches the
+    paper's Fig. 4 semantics: A[2] invalid => FFR = [T, T, F, F].
+    """
+    if upper is None:
+        upper = base.shape[0]
+    if fault is None:
+        fault = fault_oob(indices, lower, upper)
+    ffr = PT.brkb(p, fault)
+    safe_idx = jnp.clip(indices, 0, base.shape[0] - 1)
+    vals = jnp.take(base, safe_idx, axis=0, mode="fill", fill_value=fill)
+    vals = P.zeroing(ffr, vals) if fill == 0 else jnp.where(
+        P._bcast(ffr, vals.ndim), vals, jnp.asarray(fill, vals.dtype))
+    return vals, ffr
+
+
+def ldff_contiguous(base: Array, start, p: Array, *, valid_len=None, fill=0):
+    """First-faulting contiguous load from ``base[start : start+VL]``.
+
+    The ``ldff1b`` of the paper's strlen example: lanes past the end of the
+    valid region "fault" and clear the FFR from that point on.
+    """
+    vl = p.shape[-1]
+    idx = jnp.asarray(start) + jnp.arange(vl, dtype=jnp.int32)
+    upper = base.shape[0] if valid_len is None else valid_len
+    return ldff(base, idx, p, lower=0, upper=upper, fill=fill)
+
+
+def speculative_loop(
+    body: Callable,
+    start_state,
+    p0: Array,
+    max_iters: int,
+):
+    """The setffr/ldff/rdffr/brk loop skeleton of paper Fig. 5c.
+
+    ``body(state, p) -> (state, p_continue, done)`` performs one speculative
+    vector step under governing predicate ``p`` (typically: ldff, compute on
+    the FFR partition, detect the data-dependent exit).  The loop re-enters
+    while ``done`` is false, with the governing predicate advanced by the
+    number of consumed lanes — the caller's state carries the stream position.
+    """
+
+    def cond(carry):
+        _, _, done, it = carry
+        return (~done) & (it < max_iters)
+
+    def step(carry):
+        state, p, _, it = carry
+        state, p, done = body(state, p)
+        return state, p, done, it + 1
+
+    state, p, done, _ = jax.lax.while_loop(
+        cond, step, (start_state, p0, jnp.bool_(False), jnp.int32(0))
+    )
+    return state, p, done
+
+
+def strlen(buf: Array, s: int | Array = 0, *, valid_len=None, vl: int = 128) -> Array:
+    """Paper Fig. 5: vectorized strlen via first-faulting loads.
+
+    ``buf`` is a byte array (int8/uint8/int32 values; 0 terminates).  Faithful
+    to Fig. 5c: ldff1b -> rdffr -> cmpeq -> brkbs -> incp, looping on b.last.
+    Works for strings whose terminator lies beyond ``valid_len`` only if a
+    terminator exists within bounds; otherwise returns the bounded length —
+    the same behaviour as the real code (which would trap on lane 0).
+    """
+    valid_len = buf.shape[0] if valid_len is None else valid_len
+
+    def body(e, _p):
+        p0 = P.ptrue(vl)
+        vals, ffr = ldff_contiguous(buf, e, p0, valid_len=valid_len, fill=-1)
+        is_nul = ffr & (vals == 0)                     # cmpeq under p1=ffr
+        before_nul = PT.brkb(ffr, is_nul)              # brkbs
+        e = e + P.cntp(before_nul)                     # incp
+        # b.last: continue while the LAST lane of the partition is active
+        # (no NUL found and no fault in this vector's view).
+        done = ~P.last(before_nul)
+        return e, p0, done
+
+    e, _, _ = speculative_loop(body, jnp.asarray(s, jnp.int32), P.ptrue(vl),
+                               max_iters=(buf.shape[0] // max(vl, 1)) + 2)
+    return e - jnp.asarray(s, jnp.int32)

@@ -1,0 +1,134 @@
+"""Vector partitioning & dynamic exits (SVE C5) and scalarized sub-loops (C6).
+
+SVE handles uncounted loops (``do { .. } while``, ``break``) by computing a
+*partition* of the vector bounded by the break condition (``brka``/``brkb``)
+and only architecturally performing side effects inside the partition.  The
+framework uses the same algebra for:
+
+  * batched decode with per-request stop tokens (a batch of requests is a
+    vector; finished requests become inactive lanes),
+  * speculative-decoding acceptance (accept draft tokens up to the first
+    mismatch — a ``brka`` over the match predicate),
+  * loop-carried dependencies serialized in place (``pnext`` sub-loops).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+from . import predicate as P
+
+Array = jax.Array
+T = TypeVar("T")
+
+
+def brkb(p_gov: Array, cond: Array) -> Array:
+    """Break-BEFORE partition: active lanes of ``p_gov`` strictly before the
+    first lane where ``cond`` holds (within the governing predicate).
+
+    SVE ``brkb``.  Lanes at/after the break (and inactive governing lanes) are
+    cleared.  If no active lane satisfies ``cond`` the result equals p_gov.
+    """
+    hit = p_gov & cond
+    seen = jnp.cumsum(hit.astype(jnp.int32), axis=-1) > 0   # at or after first hit
+    return p_gov & ~seen
+
+
+def brka(p_gov: Array, cond: Array) -> Array:
+    """Break-AFTER partition: active lanes up to and INCLUDING the first
+    ``cond`` lane (SVE ``brka``)."""
+    hit = p_gov & cond
+    before = jnp.cumsum(hit.astype(jnp.int32), axis=-1) - hit.astype(jnp.int32)
+    return p_gov & (before == 0)
+
+
+def brkpb(p_gov: Array, p_prev_partition: Array, cond: Array) -> Array:
+    """Propagating break (SVE ``brkpb``): empty if the previous partition
+    already broke (its last governing lane is inactive), else ``brkb``."""
+    carried = P.last(p_prev_partition)          # previous partition reached the end
+    return jnp.where(carried[..., None], brkb(p_gov, cond), jnp.zeros_like(p_gov))
+
+
+def partitioned_while(
+    cond_fn: Callable[[T, Array], Array],
+    body_fn: Callable[[T, Array], T],
+    init: T,
+    p0: Array,
+):
+    """Run ``body_fn`` under a monotonically-shrinking active partition.
+
+    The vector-partitioning loop idiom of paper §2.3.4, lifted to a combinator:
+    each iteration computes per-lane break conditions via ``cond_fn(state, p)``
+    (True = lane wants to CONTINUE), the active partition is intersected, and
+    the loop exits when no lane remains active.  ``body_fn`` must be
+    predication-correct: it receives the current partition and must not
+    architecturally update inactive lanes (use ``P.merging``).
+
+    Returns (final_state, final_partition).
+    """
+
+    def loop_cond(carry):
+        _, p = carry
+        return jnp.any(p)
+
+    def loop_body(carry):
+        state, p = carry
+        keep = cond_fn(state, p)
+        p = p & keep
+        state = jax.lax.cond(jnp.any(p), lambda s: body_fn(s, p), lambda s: s, state)
+        return state, p
+
+    return jax.lax.while_loop(loop_cond, loop_body, (init, p0))
+
+
+def serial_subloop(
+    p_gov: Array,
+    step_fn: Callable[[T, Array, Array], tuple[T, Array]],
+    init: T,
+    max_iters: int | None = None,
+):
+    """Scalarized intra-vector sub-loop (paper §2.3.5, Fig. 6).
+
+    Visits the active lanes of ``p_gov`` one at a time in element order, the
+    way SVE's ``pnext``/``cpy`` serialize loop-carried dependencies in place.
+    ``step_fn(state, p_lane, lane_index)`` handles one lane and returns
+    ``(state, continue?)`` where the scalar ``continue?`` is the ``ctermeq``
+    -style early-termination test.  Returns (state, p_visited).
+    """
+    vl = p_gov.shape[-1]
+    max_iters = vl if max_iters is None else max_iters
+
+    def loop_cond(carry):
+        _, p_cur, _visited, cont, it = carry
+        return cont & jnp.any(p_cur) & (it < max_iters)
+
+    def loop_body(carry):
+        state, p_cur, visited, _, it = carry
+        lane = jnp.argmax(p_cur)
+        state, cont = step_fn(state, p_cur, lane)
+        return state, P.pnext(p_gov, p_cur), visited | p_cur, cont, it + 1
+
+    p_first = P.pfirst(p_gov)
+    state, _, visited, _, _ = jax.lax.while_loop(
+        loop_cond, loop_body,
+        (init, p_first, jnp.zeros_like(p_gov), jnp.bool_(True), jnp.int32(0)),
+    )
+    return state, visited
+
+
+def accept_prefix(match: Array, p_gov: Array | None = None) -> Array:
+    """Speculative-acceptance partition: lanes up to and including the first
+    mismatch... no — up to the LAST consecutively-matching lane.
+
+    For speculative decoding: ``match[i]`` says draft token i agreed with the
+    verifier.  The accepted partition is the maximal prefix of matches — i.e.
+    ``brkb`` on the negated match predicate.  The first rejected lane is where
+    the verifier's own token is substituted (handled by the caller), mirroring
+    the FFR contract where the first faulting lane is retried architecturally.
+    """
+    if p_gov is None:
+        p_gov = jnp.ones_like(match)
+    return brkb(p_gov, ~match)

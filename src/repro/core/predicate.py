@@ -1,0 +1,184 @@
+"""Predicate-centric execution (SVE C2/C3) as pure-JAX mask algebra.
+
+SVE governs every vector op with a predicate register and derives loop control
+from predicates (``whilelt`` + NZCV condition overloading, Table 1 of the
+paper).  JAX is functional, so predicates are boolean arrays (SSA values, not
+registers) and the NZCV conditions are explicit scalar reductions.
+
+All functions are jit-safe, shape-polymorphic in the Python sense (static
+shapes at trace time), and operate on the trailing axis unless noted.  The
+"implicit least- to most-significant element order" of SVE predicates maps to
+ascending array index order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Predicate constructors
+# --------------------------------------------------------------------------
+
+def ptrue(vl: int, dtype=jnp.bool_) -> Array:
+    """All-active predicate (SVE ``ptrue``)."""
+    return jnp.ones((vl,), dtype=dtype)
+
+
+def pfalse(vl: int, dtype=jnp.bool_) -> Array:
+    """All-inactive predicate (SVE ``pfalse``)."""
+    return jnp.zeros((vl,), dtype=dtype)
+
+
+def whilelt(start, limit, vl: int) -> Array:
+    """p[i] = (start + i) < limit  — SVE ``whilelt`` (signed compare).
+
+    The paper's predicate-driven loop control: builds the governing predicate
+    for a strip-mined loop directly from scalar induction/limit, with the same
+    wrap-around semantics as the sequential loop (saturating against overflow).
+    """
+    start = jnp.asarray(start)
+    limit = jnp.asarray(limit)
+    i = jnp.arange(vl, dtype=jnp.int64 if start.dtype == jnp.int64 else jnp.int32)
+    # Saturate start + i instead of wrapping, mirroring the architected
+    # "consistent with the sequential semantics" guarantee near INT_MAX.
+    elem = start.astype(i.dtype) + i
+    wrapped = elem < start.astype(i.dtype)          # overflow detection
+    return jnp.where(wrapped, False, elem < limit.astype(i.dtype))
+
+
+def whilelo(start, limit, vl: int) -> Array:
+    """Unsigned variant of ``whilelt``."""
+    i = jnp.arange(vl, dtype=jnp.uint32)
+    s = jnp.asarray(start).astype(jnp.uint32)
+    lim = jnp.asarray(limit).astype(jnp.uint32)
+    elem = s + i
+    wrapped = elem < s
+    return jnp.where(wrapped, False, elem < lim)
+
+
+def index_pred(lengths: Array, vl: int) -> Array:
+    """Batched whilelt: row r active for i < lengths[r].  Shape (*lengths, vl).
+
+    This is the ragged-batch predicate used throughout the framework (variable
+    sequence lengths without padding waste).
+    """
+    i = jnp.arange(vl, dtype=jnp.int32)
+    return i[None, :] < lengths[..., None].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# NZCV condition analogues (paper Table 1)
+# --------------------------------------------------------------------------
+
+def first(p: Array) -> Array:
+    """N flag — set if the first element is active (``b.first`` continues loop)."""
+    return p[..., 0].astype(jnp.bool_)
+
+
+def none(p: Array) -> Array:
+    """Z flag — set if no element is active."""
+    return ~jnp.any(p, axis=-1)
+
+
+def any_(p: Array) -> Array:
+    return jnp.any(p, axis=-1)
+
+
+def last(p: Array) -> Array:
+    """!C flag — set if the LAST element is active (``b.last`` continues loop)."""
+    return p[..., -1].astype(jnp.bool_)
+
+
+def not_last(p: Array) -> Array:
+    """C flag — set if the last element is NOT active."""
+    return ~last(p)
+
+
+# --------------------------------------------------------------------------
+# Predicate queries / manipulation
+# --------------------------------------------------------------------------
+
+def cntp(p: Array, axis: int = -1) -> Array:
+    """Count active elements (SVE ``cntp``) — drives ``incp`` induction updates."""
+    return jnp.sum(p.astype(jnp.int32), axis=axis)
+
+
+def pfirst(p: Array) -> Array:
+    """Predicate selecting only the first active element (SVE ``pfirst``)."""
+    idx = jnp.argmax(p, axis=-1)
+    has = jnp.any(p, axis=-1)
+    vl = p.shape[-1]
+    onehot = jax.nn.one_hot(idx, vl, dtype=jnp.bool_)
+    return onehot & has[..., None]
+
+
+def plast(p: Array) -> Array:
+    """Predicate selecting only the last active element."""
+    return jnp.flip(pfirst(jnp.flip(p, axis=-1)), axis=-1)
+
+
+def pnext(p_gov: Array, p_cur: Array) -> Array:
+    """Next active element of ``p_gov`` strictly after the one in ``p_cur``.
+
+    SVE ``pnext``: with p_cur = pfalse it yields the first active element.
+    Returns an all-false predicate when exhausted (the ``last`` condition of the
+    result is then false, terminating ``b.tcont``-style loops).
+    """
+    vl = p_gov.shape[-1]
+    i = jnp.arange(vl, dtype=jnp.int32)
+    # position of the element selected in p_cur (or -1 when p_cur is empty)
+    cur_idx = jnp.where(jnp.any(p_cur, axis=-1), jnp.argmax(p_cur, axis=-1), -1)
+    after = i > cur_idx[..., None]
+    return pfirst(p_gov & after)
+
+
+def propagate_last(p: Array) -> Array:
+    """Monotone closure: active up to the LAST active element (inclusive)."""
+    return jnp.flip(jnp.cumsum(jnp.flip(p, axis=-1), axis=-1) > 0, axis=-1)
+
+
+def lane_iota(vl: int, dtype=jnp.int32) -> Array:
+    """SVE ``index`` — the [0, 1, .. VL-1] induction vector, VL-agnostic."""
+    return jnp.arange(vl, dtype=dtype)
+
+
+def sel(p: Array, a: Array, b: Array) -> Array:
+    """Predicated select (merging move): p ? a : b, broadcasting p on the left."""
+    return jnp.where(_bcast(p, a.ndim), a, b)
+
+
+def zeroing(p: Array, a: Array) -> Array:
+    """Zeroing predication: inactive lanes read as 0 (SVE ``/z``)."""
+    return jnp.where(_bcast(p, a.ndim), a, jnp.zeros_like(a))
+
+
+def merging(p: Array, new: Array, old: Array) -> Array:
+    """Merging predication: inactive lanes keep the old value (SVE ``/m``)."""
+    return jnp.where(_bcast(p, new.ndim), new, old)
+
+
+def cpy(p_lane: Array, scalar, vec: Array) -> Array:
+    """Insert ``scalar`` into ``vec`` at the lanes of ``p_lane`` (SVE ``cpy /m``)."""
+    return jnp.where(_bcast(p_lane, vec.ndim), jnp.asarray(scalar, vec.dtype), vec)
+
+
+def ctermeq(a, b, p_last: Array):
+    """SVE ``ctermeq`` loop-termination test used by scalarized sub-loops.
+
+    Returns ``tcont``: True when the serial sub-loop should CONTINUE, i.e. the
+    scalar values differ (no termination) AND the current lane predicate still
+    has a next element (its ``last`` condition).  See paper Fig. 6c.
+    """
+    term = jnp.asarray(a) == jnp.asarray(b)
+    return (~term) & jnp.any(p_last, axis=-1)
+
+
+def _bcast(p: Array, ndim: int) -> Array:
+    """Right-align a predicate against an ndim-array (lane axis is trailing)."""
+    while p.ndim < ndim:
+        p = p[None, ...]
+    return p

@@ -1,0 +1,130 @@
+"""Horizontal operations (SVE C7): predicated reductions incl. ordered fadda.
+
+SVE's horizontal ops resolve loop-carried dependencies that block SIMD
+vectorization; ``fadda`` is the strictly-ordered FP add reduction that lets a
+compiler vectorize loops where FP association order is semantically load-
+bearing (paper §2.4, §3.3).  We provide:
+
+  * predicated tree reductions (fast path; order-free),
+  * ``fadda`` — strictly sequential, bit-identical to the scalar loop,
+  * pairwise ("VL-agnostic deterministic") reduction: a fixed-shape reduction
+    tree whose result is independent of how work is tiled — the compromise a
+    VLA system needs so results do not change across vector lengths.
+
+Cluster-scale ordered reduction (deterministic gradient all-reduce) lives in
+``repro.dist.collectives`` and reuses the same algebra over devices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import predicate as P
+
+Array = jax.Array
+
+
+def _masked(p: Array | None, x: Array, ident) -> Array:
+    if p is None:
+        return x
+    return jnp.where(P._bcast(p, x.ndim), x, jnp.asarray(ident, x.dtype))
+
+
+# ---- order-free predicated reductions (SVE faddv/eorv/orv/andv/smaxv/...) ----
+
+def faddv(p, x, axis=-1):
+    return jnp.sum(_masked(p, x, 0), axis=axis)
+
+
+def eorv(p, x, axis=-1):
+    ix = _masked(p, x, 0)
+    return jax.lax.reduce(ix, jnp.asarray(0, ix.dtype),
+                          jax.lax.bitwise_xor, dimensions=(ix.ndim + axis if axis < 0 else axis,))
+
+
+def orv(p, x, axis=-1):
+    return jnp.bitwise_or.reduce(_masked(p, x, 0), axis=axis)
+
+
+def andv(p, x, axis=-1):
+    return jnp.bitwise_and.reduce(_masked(p, x, -1), axis=axis)
+
+
+def smaxv(p, x, axis=-1):
+    return jnp.max(_masked(p, x, jnp.finfo(x.dtype).min
+                           if jnp.issubdtype(x.dtype, jnp.floating)
+                           else jnp.iinfo(x.dtype).min), axis=axis)
+
+
+def sminv(p, x, axis=-1):
+    return jnp.min(_masked(p, x, jnp.finfo(x.dtype).max
+                           if jnp.issubdtype(x.dtype, jnp.floating)
+                           else jnp.iinfo(x.dtype).max), axis=axis)
+
+
+# ---- strictly-ordered reduction ----
+
+def fadda(p, x, init=0.0, axis=-1):
+    """Strictly-ordered FP add reduction (SVE ``fadda``).
+
+    Accumulates active elements in ascending element order into ``init``.
+    Bit-identical to the sequential scalar loop — vectorizing a reduction with
+    ``fadda`` never changes results across vector lengths (paper §3.3).
+    Implemented as lax.scan (serial, like the hardware instruction whose cost
+    is proportional to VL).
+    """
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+        if p is not None and p.ndim == x.ndim:
+            p = jnp.moveaxis(p, axis, -1)
+    xm = _masked(p, x, 0)
+    xm = jnp.moveaxis(xm, -1, 0)            # scan over the lane axis
+
+    def step(acc, v):
+        return acc + v, None
+
+    init_arr = jnp.broadcast_to(jnp.asarray(init, x.dtype), xm.shape[1:])
+    acc, _ = jax.lax.scan(step, init_arr, xm)
+    return acc
+
+
+def fadda_tiled(p, x, init=0.0, vl: int = 128):
+    """fadda over a long vector in VL-wide tiles: tiles are reduced
+    sequentially, lanes within a tile sequentially — the exact order of the
+    scalar loop, but expressed in the strip-mined form a VLA kernel uses.
+    Equivalent to ``fadda`` for any vl; exists to prove VL-invariance."""
+    n = x.shape[-1]
+    pad = (-n) % vl
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        pp = P.whilelt(0, n, n + pad) if p is None else (
+            jnp.pad(p, [(0, 0)] * (p.ndim - 1) + [(0, pad)]))
+    else:
+        pp = P.ptrue(n) if p is None else p
+    xt = x.reshape(x.shape[:-1] + (-1, vl))
+    pt = jnp.broadcast_to(pp, x.shape).reshape(xt.shape)
+
+    def tile_step(acc, tv):
+        txs, tps = tv
+        return fadda(tps, txs, init=acc), None
+
+    acc, _ = jax.lax.scan(tile_step,
+                          jnp.broadcast_to(jnp.asarray(init, x.dtype), x.shape[:-1]),
+                          (jnp.moveaxis(xt, -2, 0), jnp.moveaxis(pt, -2, 0)))
+    return acc
+
+
+def pairwise_sum(x: Array, axis: int = -1) -> Array:
+    """Fixed-topology pairwise reduction: deterministic and VL-independent
+    (the practical middle ground between tree-sum speed and fadda ordering).
+    Pads to a power of two with zeros; the reduction tree is a function of the
+    padded length only, never of the tiling."""
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    pot = 1 << (max(n - 1, 0)).bit_length() if n > 1 else 1
+    if pot != n:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pot - n)])
+    while x.shape[-1] > 1:
+        x = x[..., 0::2] + x[..., 1::2]
+    return x[..., 0]

@@ -1,0 +1,123 @@
+"""Vector-length agnosticism (SVE C1) at the lane/tile scale.
+
+SVE lets one binary run at any hardware vector length VL in {128..2048} bits by
+making VL an implicit operand (``incd``, ``whilelt``, ``cntd``).  The TPU
+analogue: kernels are written against a *symbolic* VL (a block/tile width)
+chosen at trace time from the dtype and the VMEM budget, and every loop bound /
+tail is handled by predication rather than shape specialization.  One kernel
+source therefore serves every shape — the software never hard-codes the width.
+
+TPU native tile geometry (v4/v5): the VPU operates on (sublane, lane) =
+(8, 128) float32 registers; narrower dtypes pack more sublanes.  The MXU is a
+128x128 systolic array.  "VL" for a TPU kernel is the lane-dim block width,
+always a multiple of 128, with the sublane dim a multiple of the dtype packing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# Architectural constants of the target (TPU v5e, per the roofline spec).
+LANE = 128                     # lanes per VREG row / MXU edge
+_SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
+VMEM_BYTES = 16 * 1024 * 1024  # ~16 MiB VMEM per core
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+# SVE architectural VL range, expressed in lanes-of-f32 for the Fig.8 analogue
+# benchmarks (128-bit .. 2048-bit vectors = 4 .. 64 f32 lanes).
+SVE_MIN_BITS = 128
+SVE_MAX_BITS = 2048
+
+
+def sublanes(dtype) -> int:
+    """Sublane packing for a dtype — rows of a native VREG tile."""
+    itemsize = jnp.dtype(dtype).itemsize
+    try:
+        return _SUBLANE_BY_ITEMSIZE[itemsize]
+    except KeyError as e:
+        raise ValueError(f"unsupported itemsize {itemsize} for dtype {dtype}") from e
+
+
+def native_tile(dtype) -> tuple[int, int]:
+    """The minimal hardware tile (sublane, lane) for ``dtype``."""
+    return (sublanes(dtype), LANE)
+
+
+def round_up(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def num_tiles(n: int, vl: int) -> int:
+    """How many VL-wide tiles cover n elements (the ``incd``/loop-trip count)."""
+    return cdiv(n, vl)
+
+
+def pad_to_vl(n: int, vl: int) -> int:
+    return round_up(n, vl)
+
+
+@dataclasses.dataclass(frozen=True)
+class VL:
+    """A symbolic vector length: block shape chosen at trace time.
+
+    Mirrors SVE's implicit-VL model: user code asks for a VL suited to the
+    problem and hardware; the *same* calling code works for any choice.
+    """
+
+    block: int                 # lane-dim width (multiple of LANE)
+    dtype: jnp.dtype = jnp.dtype(jnp.float32)
+
+    def __post_init__(self):
+        if self.block % LANE != 0:
+            raise ValueError(f"VL block {self.block} not a multiple of lane width {LANE}")
+
+    @property
+    def bits(self) -> int:
+        return self.block * jnp.dtype(self.dtype).itemsize * 8
+
+    def tiles(self, n: int) -> int:
+        return num_tiles(n, self.block)
+
+    def padded(self, n: int) -> int:
+        return pad_to_vl(n, self.block)
+
+
+def choose_vl(
+    n: int,
+    dtype=jnp.float32,
+    *,
+    operands: int = 2,
+    vmem_budget: int = VMEM_BYTES // 2,
+    max_block: int = 4096,
+) -> VL:
+    """Pick a block width for an n-element axis.
+
+    Policy (the 'implementation choice' SVE grants hardware designers, made at
+    trace time instead): largest MXU-aligned block such that ``operands``
+    blocks fit the VMEM budget, capped by the problem size and ``max_block``.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    by_budget = vmem_budget // max(1, operands * itemsize * sublanes(dtype))
+    block = min(max_block, by_budget, pad_to_vl(max(n, 1), LANE))
+    block = max(LANE, (block // LANE) * LANE)
+    return VL(block=block, dtype=jnp.dtype(dtype))
+
+
+def sve_vl_sweep(dtype=jnp.float32, bits: Sequence[int] = (128, 256, 512)) -> list[VL]:
+    """VLs matching the paper's Fig. 8 sweep (128/256/512-bit vectors).
+
+    On TPU the minimum lane-dim block is 128 *elements*, so we express the
+    paper's relative sweep as multiples of the native tile: a 2x-bit VL is a
+    2x-wider block.  (128-bit SVE : 512-bit SVE) :: (128-lane : 512-lane).
+    """
+    return [VL(block=LANE * (b // SVE_MIN_BITS), dtype=jnp.dtype(dtype)) for b in bits]

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots of the framework.
+# Each subpackage ships: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+# ops.py (jit'd public wrapper), ref.py (pure-jnp oracle used by tests).
+#
+# All kernels follow the paper's predication discipline: ragged tails and
+# data-dependent masks are handled by whilelt-style predicates computed
+# inside the kernel, never by shape-specialized variants (SVE C1-C3).

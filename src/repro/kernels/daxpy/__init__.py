@@ -1,0 +1,1 @@
+from .ops import daxpy  # noqa: F401

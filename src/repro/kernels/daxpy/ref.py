@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the daxpy kernel (paper Fig. 2a)."""
+
+import jax.numpy as jnp
+
+
+def daxpy_ref(x, y, a, n):
+    """y[i] = a*x[i] + y[i] for i < n; elements at/after n are untouched."""
+    i = jnp.arange(x.shape[0])
+    return jnp.where(i < n, a * x + y, y)

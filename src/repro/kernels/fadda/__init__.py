@@ -1,0 +1,1 @@
+from .ops import fadda  # noqa: F401

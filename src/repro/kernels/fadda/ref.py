@@ -1,0 +1,13 @@
+"""Oracle for the fadda kernel: the strictly-ordered scalar loop."""
+
+import numpy as np
+
+
+def fadda_ref(x, n=None, init=0.0):
+    """Bit-exact sequential accumulation of x[:n] into init (float32)."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[0] if n is None else n
+    acc = np.float32(init)
+    for v in x[:n]:
+        acc = np.float32(acc + v)
+    return acc

@@ -1,0 +1,138 @@
+"""Predicated flash attention for TPU (Pallas).
+
+The SVE story (DESIGN.md C1-C3) at lane scale: ONE kernel source handles
+causal, sliding-window, cross- and ragged-length attention.  Every variant is
+a *predicate* built inside the kernel from scalar bounds (``whilelt`` algebra
+over broadcasted iotas) — never a separate shape-specialized kernel.  Tails
+(Sq or Skv not multiples of the block) are predicated, not padded-and-wasted.
+
+Blocking: grid (B, Hq, Sq/bq, Skv/bk); the KV axis is the innermost,
+sequential ("arbitrary") dimension with the online-softmax running state
+(m, l, acc) carried in VMEM scratch.  BlockSpecs keep one (bq, D) query tile,
+one (bk, D) key tile and one (bk, D) value tile resident; with bq=bk=512 and
+D=128 in f32 that is ~1.3 MiB of operand VMEM plus the (bq, bk) logits tile —
+comfortably inside the ~16 MiB v5e budget and MXU-aligned (multiples of 128).
+
+GQA is handled in the K/V index_map (head h reads KV head h // group), so KV
+tiles are fetched once per group from HBM's point of view after XLA CSE.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite stand-in: keeps exp/where NaN-free in f32
+
+
+def _flash_kernel(
+    # scalar-prefetch style operands (full arrays in ANY memory space)
+    kvlen_ref, qoff_ref, win_ref,
+    # blocked operands
+    q_ref, k_ref, v_ref,
+    # blocked output
+    o_ref,
+    # VMEM scratch (persistent across the sequential KV grid axis)
+    m_scr, l_scr, acc_scr,
+    *, bq: int, bk: int, n_kv: int, causal: bool, scale: float,
+):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    # ---- the governing predicate (whilelt algebra; paper §2.3) ----
+    qpos = (qoff_ref[b] + iq * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    pred = kpos < kvlen_ref[b]                      # ragged KV tail: whilelt
+    if causal:
+        pred &= qpos >= kpos
+    # dynamic sliding window (2**30 = "no window"): ONE kernel serves local
+    # and global layers — the predicate, not the kernel, changes (SVE C2)
+    pred &= kpos > (qpos - win_ref[0])
+
+    s = jnp.where(pred, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]                           # (bq, 1)
+    l_prev = l_scr[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                 # <= 1; exp(-inf-(-inf)) avoided
+    p = jnp.where(pred, jnp.exp(s - m_new), 0.0)    # zeroing predication
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0.0, out, 0.0)          # empty-predicate rows -> 0
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "scale", "interpret"))
+def flash_attention_pallas(
+    q, k, v, kv_lens, q_offset, window,
+    *, bq: int = 256, bk: int = 512, causal: bool = False,
+    scale: float | None = None, interpret: bool = True,
+):
+    """q: (B, Hq, Sq, D) with Sq % bq == 0; k/v: (B, Hkv, Skv, D), Skv % bk == 0.
+
+    kv_lens: (B,) int32 valid KV length per row; q_offset: (B,) int32 absolute
+    position of q[:, :, 0] (decode against a cache).  See ops.flash_attention
+    for the padding/VL-selection wrapper.
+    """
+    bsz, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    n_q, n_kv = sq // bq, skv // bk
+    scale = (d ** -0.5) if scale is None else scale
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal, scale=scale)
+
+    grid = (bsz, hq, n_q, n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),      # kv_lens
+            pl.BlockSpec(memory_space=pl.ANY),      # q_offset
+            pl.BlockSpec(memory_space=pl.ANY),      # window (dynamic)
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),     # m (running max)
+            pltpu.VMEM((bq, 128), jnp.float32),     # l (running denominator)
+            pltpu.VMEM((bq, d), jnp.float32),       # acc (unnormalized output)
+        ],
+        interpret=interpret,
+    )(kv_lens, q_offset, window, q, k, v)

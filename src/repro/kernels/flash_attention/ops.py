@@ -1,0 +1,86 @@
+"""Public flash-attention op: VL-agnostic padding + kernel/XLA path switch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import vla
+
+from . import ref as _ref
+from .kernel import flash_attention_pallas
+from .xla_impl import flash_attention_xla
+
+
+def _pick_blocks(sq: int, skv: int, d: int, dtype) -> tuple[int, int]:
+    """Choose (bq, bk) MXU-aligned blocks that fit the VMEM budget.
+
+    Working set ~ f32: q(bq,d) + k/v(bk,d)*2 + s(bq,bk) + acc(bq,d) + m/l(bq,128)*2.
+    Policy: bq, bk in {128..512}, shrink to the problem when smaller.
+    """
+    bq = min(512, vla.pad_to_vl(sq, vla.LANE))
+    bk = min(512, vla.pad_to_vl(skv, vla.LANE))
+    budget = vla.VMEM_BYTES // 2
+    while bq * bk * 4 + (bq + 2 * bk) * d * 4 + bq * (d + 256) * 4 > budget and bq > 128:
+        bq //= 2
+    while bq * bk * 4 + (bq + 2 * bk) * d * 4 + bq * (d + 256) * 4 > budget and bk > 128:
+        bk //= 2
+    return bq, bk
+
+
+def flash_attention(
+    q, k, v,
+    *, kv_lens=None, causal: bool = False, window: int | None = None,
+    q_offset=None, scale: float | None = None,
+    impl: str = "kernel", bq: int | None = None, bk: int | None = None,
+    interpret: bool = True,
+):
+    """Predicated attention.  q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).
+
+    - ``kv_lens``: (B,) valid KV lengths (ragged batches; defaults to Skv).
+    - ``causal`` / ``window``: mask predicates (window = sliding local size).
+    - ``q_offset``: (B,) absolute position of the first query row (decode);
+      defaults to Skv - Sq under ``causal`` (suffix alignment) else 0.
+    - ``impl``: "kernel" (Pallas TPU; interpret=True on CPU), "xla" (chunked
+      lax.scan flash with custom VJP — the introspectable O(S)-memory path the
+      dry-run lowers), or "naive" (quadratic oracle; tests only).
+    """
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    if kv_lens is None:
+        kv_lens = jnp.full((b,), skv, jnp.int32)
+    else:
+        kv_lens = jnp.asarray(kv_lens, jnp.int32)
+    if q_offset is None:
+        off = skv - sq if causal else 0
+        q_offset = jnp.full((b,), off, jnp.int32)
+    else:
+        q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+    if impl == "naive":
+        return _ref.mha_ref(q, k, v, kv_lens=kv_lens, causal=causal,
+                            window=window, q_offset=q_offset, scale=scale)
+
+    if bq is None or bk is None:
+        bq_d, bk_d = _pick_blocks(sq, skv, d, q.dtype)
+        bq = bq_d if bq is None else bq
+        bk = bk_d if bk is None else bk
+    bq = min(bq, vla.pad_to_vl(sq, 8))
+    # pad Sq / Skv to block multiples; predicates mask the tails (no recompile
+    # per shape — the VLA contract)
+    sq_p, skv_p = vla.pad_to_vl(sq, bq), vla.pad_to_vl(skv, bk)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    win = jnp.asarray(2 ** 30 if window is None else window,
+                      jnp.int32).reshape((1,))
+    if impl == "xla":
+        scale_f = float(d ** -0.5) if scale is None else float(scale)
+        out = flash_attention_xla(q, k, v, kv_lens, q_offset, win[0],
+                                  causal=causal, scale=scale_f, bq=bq, bk=bk)
+    else:
+        out = flash_attention_pallas(
+            q, k, v, kv_lens, q_offset, win, bq=bq, bk=bk, causal=causal,
+            scale=scale, interpret=interpret)
+    return out[:, :, :sq, :]

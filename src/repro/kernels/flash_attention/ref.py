@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for predicated flash attention.
+
+Supports everything the kernel supports: GQA, causal masks, sliding windows
+(gemma3 local layers), ragged KV lengths (whilelt predicates), and a dynamic
+query offset (decode against a longer cache).  This is also the XLA execution
+path used by the dry-run (pallas_call does not lower to the CPU backend and
+is opaque to cost_analysis; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def attention_mask(sq, skv, *, kv_lens=None, causal=False, window=None, q_offset=0):
+    """Boolean (B?, Sq, Skv) predicate, True = attend.  Pure whilelt algebra.
+
+    ``q_offset`` may be a scalar or a (B,) vector (per-row decode positions);
+    ``window`` may be a python int or a traced scalar (dynamic local/global).
+    """
+    qoff = jnp.asarray(q_offset, jnp.int32)
+    batched = (kv_lens is not None) or qoff.ndim == 1
+    if qoff.ndim == 0:
+        qoff = qoff[None]
+    qp = (qoff[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :])[:, :, None]
+    kp = jnp.arange(skv, dtype=jnp.int32)[None, None, :]
+    m = jnp.ones((qoff.shape[0], sq, skv), bool)
+    if causal:
+        m &= qp >= kp
+    if window is not None:
+        m &= kp > (qp - jnp.asarray(window, jnp.int32))
+    if kv_lens is not None:
+        m = m & (kp < jnp.asarray(kv_lens, jnp.int32)[:, None, None])
+    return m if batched else m[0]
+
+
+def mha_ref(q, k, v, *, kv_lens=None, causal=False, window=None, q_offset=None,
+            scale=None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Returns (B, Hq, Sq, D).
+
+    Rows whose predicate is empty (no attendable key) return 0 — the zeroing-
+    predication convention used throughout the framework.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    if q_offset is None:
+        q_offset = (skv - sq) if causal else 0  # suffix alignment, as the kernel
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    mask = attention_mask(sq, skv, kv_lens=kv_lens, causal=causal,
+                          window=window, q_offset=q_offset)
+    mask = mask[:, None] if mask.ndim == 3 else mask[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    row_any = mask.any(axis=-1, keepdims=True)
+    m = jnp.max(jnp.where(mask, logits, -1e30), axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    out = jnp.where(row_any, out / jnp.maximum(l, 1e-30), 0.0)
+    return out.astype(q.dtype)

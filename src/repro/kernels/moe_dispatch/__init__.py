@@ -1,0 +1,1 @@
+from .ops import build_dispatch, moe_positions  # noqa: F401

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for MoE dispatch position assignment + a naive-loop
+reference for the whole dispatch/combine (used by layer tests).
+
+Dispatch semantics (Switch-style, capacity-factor dropping): assignments are
+ranked in flattened (token-major, slot-minor) order; each expert accepts its
+first ``capacity`` assignments, the rest are DROPPED.  Dropped lanes are the
+framework's FFR analogue: the speculative "load" (routing) of an overflowing
+token faults and its lane is cleared from the dispatch partition; the token's
+residual path still carries its activation (like the retry granted to the
+first faulting lane).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def moe_positions_ref(expert_ids, n_experts: int):
+    """expert_ids: (T, K) int32 in [0, E) (or out-of-range = invalid).
+    Returns pos: (T, K) int32 — the rank of each assignment within its expert
+    (flattened token-major order), and counts: (E,) total assignments."""
+    t, k = expert_ids.shape
+    flat = expert_ids.reshape(t * k)
+    onehot = (flat[:, None] == jnp.arange(n_experts)[None, :]).astype(jnp.int32)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(excl * onehot, axis=1)
+    counts = jnp.sum(onehot, axis=0)
+    return pos.reshape(t, k), counts
+
+
+def moe_ffn_loop_ref(x, expert_ids, gates, w_up, w_down, capacity: int):
+    """Naive python-loop MoE FFN with capacity dropping (numpy; test oracle).
+
+    x: (T, D); expert_ids/gates: (T, K); w_up: (E, D, F); w_down: (E, F, D).
+    Expert activation: relu.  Returns (T, D) float32.
+    """
+    x = np.asarray(x, np.float32)
+    ids = np.asarray(expert_ids)
+    g = np.asarray(gates, np.float32)
+    w_up = np.asarray(w_up, np.float32)
+    w_down = np.asarray(w_down, np.float32)
+    t, k = ids.shape
+    e = w_up.shape[0]
+    counts = np.zeros(e, np.int64)
+    y = np.zeros_like(x)
+    for tok in range(t):
+        for slot in range(k):
+            ex = int(ids[tok, slot])
+            if ex < 0 or ex >= e:
+                continue
+            if counts[ex] >= capacity:
+                counts[ex] += 1          # overflow: dropped ("faulted lane")
+                continue
+            counts[ex] += 1
+            h = np.maximum(x[tok] @ w_up[ex], 0.0)
+            y[tok] += g[tok, slot] * (h @ w_down[ex])
+    return y

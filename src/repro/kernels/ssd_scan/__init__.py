@@ -1,0 +1,1 @@
+from .ops import ssd_scan, ssd_decode_step  # noqa: F401

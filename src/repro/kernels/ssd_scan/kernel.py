@@ -1,0 +1,110 @@
+"""Mamba2 SSD chunked scan for TPU (Pallas).
+
+VLA mapping (DESIGN.md C1): the chunk length Q is this kernel's vector
+length.  One kernel source runs at any Q; results are Q-invariant (tested),
+exactly as SVE binaries are VL-invariant.  Ragged sequence tails are handled
+by *predicating dt to zero* (decay=exp(0)=1, zero input, zero output
+contribution) — predication, not shape specialization.
+
+Blocking: grid (B, H, S/Q) with the chunk axis innermost and sequential; the
+(P, N) state lives in VMEM scratch across chunks.  Per-chunk working set for
+Q=128, P=64, N=128 in f32: x (Q,P) 32 KiB + B,C (Q,N) 64 KiB + L (Q,Q) 64 KiB
++ state (P,N) 32 KiB — far inside the v5e VMEM budget; matmul dims are
+MXU-aligned multiples of 64/128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_head_ref,                       # (H,) ANY: A per head
+                x_ref, dt_ref, b_ref, c_ref,      # blocked inputs
+                y_ref, hout_ref,                  # blocked outputs
+                h_scr,                            # (P, N) VMEM state
+                *, q: int, n_chunks: int):
+    h = pl.program_id(1)
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr[...])
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+    A = a_head_ref[h]
+
+    a = dt * A                                     # (Q,) log-decay, <= 0
+    cum = jnp.cumsum(a)                            # inclusive
+    # decay matrix L[i,j] = exp(cum_i - cum_j) for i>=j else 0
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = iq >= jq                                 # causal predicate
+    L = jnp.where(tri, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    # intra-chunk (attention-like) term
+    att = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, Q)
+    att = att * L * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+
+    # inter-chunk term: y += exp(cum_i) * C_i @ h_prev^T
+    hprev = h_scr[...]                             # (P, N)
+    y_inter = jax.lax.dot_general(cm, hprev, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q, P)
+    y = y + y_inter * jnp.exp(cum)[:, None]
+
+    # state update: h = exp(cum_Q) h_prev + sum_j exp(cum_Q - cum_j) dt_j x_j B_j^T
+    w = jnp.exp(cum[-1] - cum) * dt                # (Q,)
+    upd = jax.lax.dot_general(x * w[:, None], bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    h_scr[...] = jnp.exp(cum[-1]) * hprev + upd
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
+    """x: (Bz, S, H, P); dt: (Bz, S, H); A: (H,); B, C: (Bz, S, N).
+    S % chunk == 0 (ops.py pads + predicates dt).  Returns (y, h_final)."""
+    bz, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, q=chunk, n_chunks=nc)
+    grid = (bz, h, nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                       # A (H,)
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),
+            pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(A, x, dt, B, C)
+    return y, hout

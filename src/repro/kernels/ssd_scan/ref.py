@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Semantics per head (arXiv:2405.21060, SSD recurrence):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (x_t outer B_t)        # (P, N)
+    y_t = h_t @ C_t + D * x_t                                     # (P,)
+
+``ssd_ref`` is the strictly sequential oracle (lax.scan over time).
+``ssd_chunked_ref`` is the chunked/blocked algorithm the Pallas kernel
+implements — quadratic-in-chunk "attention-like" intra term + inter-chunk
+state carry.  Both must agree for every chunk size (the VLA contract: chunk
+size is this kernel's vector length).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D=None, h0=None):
+    """x: (Bz, S, H, P); dt: (Bz, S, H) positive; A: (H,) negative;
+    B, C: (Bz, S, N) (single group, broadcast over heads);
+    D: (H,) or None; h0: (Bz, H, P, N) or None.
+    Returns y: (Bz, S, H, P), h_final: (Bz, H, P, N).  All compute f32.
+    """
+    bz, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(hst, inp):
+        xt, dtt, bt, ct = inp                    # (Bz,H,P), (Bz,H), (Bz,N), (Bz,N)
+        decay = jnp.exp(dtt * Af[None, :])       # (Bz,H)
+        upd = (dtt[..., None, None] * xt[..., :, None] * bt[:, None, None, :])
+        hst = decay[..., None, None] * hst + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hst, ct)
+        return hst, yt
+
+    h0 = jnp.zeros((bz, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                   # (Bz, S, H, P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), hT
+
+
+def _segsum(a):
+    """L[i, j] = sum_{k in (j, i]} a_k for i >= j else -inf.  a: (..., Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # cum_i - cum_j
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D=None, h0=None, chunk: int = 64):
+    """Chunked SSD — the algorithm the Pallas kernel implements, in pure jnp.
+
+    This is also the XLA execution path used by dry-run lowering (the Pallas
+    call is TPU-only and opaque to cost_analysis).
+    """
+    bz, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xf = x.astype(f32).reshape(bz, nc, chunk, h, p)
+    dtf = dt.astype(f32).reshape(bz, nc, chunk, h)
+    Bf = B.astype(f32).reshape(bz, nc, chunk, n)
+    Cf = C.astype(f32).reshape(bz, nc, chunk, n)
+    a = dtf * A.astype(f32)[None, None, None, :]         # (bz, nc, Q, h) log-decay
+
+    def chunk_step(hprev, inp):
+        xc, dtc, bc, cc, ac = inp                        # leading axis bz
+        cum = jnp.cumsum(ac, axis=1)                     # (bz, Q, h) inclusive
+        L = jnp.exp(_segsum(jnp.moveaxis(ac, 1, 2)))     # (bz, h, Q, Q)
+        att = jnp.einsum("bqn,bkn->bqk", cc, bc)         # (bz, Q, Q) shared heads
+        att = att[:, None] * L * dtc.transpose(0, 2, 1)[:, :, None, :]  # *dt_j
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", att, xc)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cc, hprev) * \
+            jnp.exp(cum)[:, :, :, None]
+        # state update
+        wexp = jnp.exp(cum[:, -1:, :] - cum) * dtc       # (bz, Q, h)
+        upd = jnp.einsum("bqhp,bqn,bqh->bhpn", xc, bc, wexp)
+        hnew = jnp.exp(cum[:, -1, :])[:, :, None, None] * hprev + upd
+        return hnew, y_intra + y_inter
+
+    h0 = jnp.zeros((bz, h, p, n), f32) if h0 is None else h0.astype(f32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, Bf, Cf, a))
+    hT, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bz, s, h, p)
+    if D is not None:
+        y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), hT

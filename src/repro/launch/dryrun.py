@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run driver (deliverable e).
+#
+# For every (arch x input-shape x mesh) cell: resolve shardings from the
+# logical-axis rules, jit the step function, .lower().compile() against the
+# production mesh, and record memory_analysis / cost_analysis / collective
+# bytes (parsed from the optimized HLO) to JSON for the roofline analysis.
+#
+# NOTE: arguments are parsed BEFORE importing jax so tests can shrink the
+# forced host-device count (jax locks it on first init).
+# ---------------------------------------------------------------------------
+
+import argparse
+import json
+import re
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description="multi-pod dry-run")
+    p.add_argument("--arch", default=None, help="arch id (default: all)")
+    p.add_argument("--shape", default=None, help="shape name (default: all)")
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "custom"])
+    p.add_argument("--mesh-shape", default=None,
+                   help="custom mesh, e.g. '4,4' or '2,4,4' (tests)")
+    p.add_argument("--device-count", type=int, default=512)
+    p.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    p.add_argument("--act-shard", default="none", choices=["none", "tp", "tp_sp"])
+    p.add_argument("--microbatch", type=int, default=1)
+    p.add_argument("--unroll-decode", action="store_true")
+    p.add_argument("--compute-dtype", default="bfloat16")
+    p.add_argument("--rules", default="default",
+                   help="sharding rule preset (default|opt, see dist.sharding)")
+    p.add_argument("--out", default="benchmarks/results/dryrun")
+    p.add_argument("--tag", default="baseline")
+    p.add_argument("--print-hlo", action="store_true")
+    return p.parse_args(argv)
+
+
+args = _parse_args()
+if args.device_count != 512:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.device_count}")
+
+import jax  # noqa: E402  (device count now locked)
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import all_arch_names, get_config  # noqa: E402
+from repro.dist import sharding as SH  # noqa: E402
+from repro.launch import mesh as MESH  # noqa: E402
+from repro.launch import specs as SPECS  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.train.step import abstract_state, make_serve_fns, make_train_step  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+from benchmarks import hlo_analysis  # noqa: E402  (trip-count-aware costs)
+
+# HLO dtype widths for collective-byte accounting
+_DT_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+             "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+             "f64": 8, "c64": 8, "c128": 16}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes of collective ops in the per-device HLO."""
+    out = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            tok = f" {op}("
+            tok_start = f" {op}-start("
+            if (tok in line or tok_start in line) and f"{op}-done" not in line:
+                head = line.split(tok_start if tok_start in line else tok)[0]
+                for dt, dims in _SHAPE_RE.findall(head):
+                    if dt not in _DT_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    out[op] += n * _DT_BYTES[dt]
+                break
+    out["total"] = sum(out[op] for op in _COLL_OPS)
+    return out
+
+
+def _rules_preset(name: str):
+    if name == "default":
+        return None
+    raise ValueError(name)
+
+
+def build_cell(cfg, shape_name, mesh, *, remat, compute_dtype,
+               act_shard="none", microbatch=1, unroll_decode=False):
+    """Returns (jitted, example_args) for one cell, or raises."""
+    kind, specs = SPECS.input_specs(cfg, shape_name)
+    gdep = MESH.batch_shard_count(mesh)
+    overrides = dict(attn_impl="xla", ssd_impl="xla", remat=remat,
+                     compute_dtype=compute_dtype, act_shard=act_shard,
+                     scan_layers_decode=not unroll_decode)
+    if cfg.family == "moe":
+        _, seq, batch, _ = SPECS.get_shape(cfg, shape_name)
+        tokens = batch * (seq if kind == "train" or kind == "prefill" else 1)
+        if kind == "decode":
+            tokens = batch
+        overrides["moe_groups"] = gdep if tokens % gdep == 0 else 1
+    cfg = cfg.replace(**overrides)
+    kind, specs = SPECS.input_specs(cfg, shape_name)  # re-spec with overrides
+
+    if kind == "train":
+        state, state_axes = abstract_state(cfg)
+        state_sh = SH.tree_shardings(state, state_axes, mesh)
+        batch_sh = SH.tree_shardings(specs["batch"],
+                                     SH.batch_axes_for(specs["batch"]), mesh)
+        step = make_train_step(cfg, microbatch=microbatch)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        return jitted, (state, specs["batch"]), cfg
+
+    # serving cells: inference weights in the compute dtype (bf16), sharded
+    # with FSDP over data AS WELL as TP — big models don't fit per-chip
+    # otherwise; the per-layer weight all-gather is the usual latency trade.
+    cfg = cfg.replace(param_dtype=compute_dtype)
+    kind, specs = SPECS.input_specs(cfg, shape_name)
+    serve_rules = dict(SH.DEFAULT_RULES)
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k, cfg)[0], jax.random.PRNGKey(0))
+    params_sh = SH.tree_shardings(params, model.axes(cfg), mesh, serve_rules)
+    batch_sh = SH.tree_shardings(specs["batch"],
+                                 SH.batch_axes_for(specs["batch"]), mesh,
+                                 serve_rules)
+    cache_sh = SH.tree_shardings(specs["cache"],
+                                 SH.cache_axes_for(specs["cache"]), mesh,
+                                 serve_rules)
+    prefill_step, decode_step = make_serve_fns(cfg)
+    fn = prefill_step if kind == "prefill" else decode_step
+    jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh, cache_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(2,))
+    return jitted, (params, specs["batch"], specs["cache"]), cfg
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, out_dir, tag,
+             remat, compute_dtype, mesh_shape=None, print_hlo=False,
+             act_shard="none", microbatch=1, unroll_decode=False):
+    cfg = get_config(arch)
+    ok, reason = SPECS.shape_applicable(cfg, shape_name)
+    cell_id = f"{arch}__{shape_name}__{mesh_kind}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+           "remat": remat, "compute_dtype": compute_dtype,
+           "act_shard": act_shard, "microbatch": microbatch,
+           "unroll_decode": unroll_decode}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        _emit(out_dir, tag, cell_id, rec)
+        print(f"[dryrun] {cell_id}: SKIPPED ({reason})")
+        return rec
+
+    if mesh_kind == "custom":
+        shape = tuple(int(x) for x in mesh_shape.split(","))
+        names = ("pod", "data", "model")[-len(shape):]
+        mesh = MESH.make_mesh(shape, names)
+    else:
+        mesh = MESH.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+    t0 = time.time()
+    with mesh, SH.use_mesh_rules(mesh):
+        jitted, cell_args, cfg_used = build_cell(
+            cfg, shape_name, mesh, remat=remat, compute_dtype=compute_dtype,
+            act_shard=act_shard, microbatch=microbatch,
+            unroll_decode=unroll_decode)
+        lowered = jitted.lower(*cell_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = None
+    try:
+        m = compiled.memory_analysis()
+        print(m)  # proves it fits (per-device bytes)
+        mem = {k: int(getattr(m, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes") if hasattr(m, k)}
+    except Exception as e:  # CPU backend may not implement it
+        mem = {"error": str(e)}
+
+    cost = {}
+    try:
+        c = compiled.cost_analysis()
+        c = c[0] if isinstance(c, (list, tuple)) else c
+        print({k: v for k, v in c.items()
+               if k in ("flops", "bytes accessed", "utilization operand",)
+               or k.startswith("bytes accessed")})
+        cost = {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll_naive = collective_bytes(hlo)
+    # trip-count-aware per-device costs (XLA's cost_analysis counts while
+    # bodies once — see benchmarks/hlo_analysis.py)
+    corrected = hlo_analysis.analyze(hlo)
+    if print_hlo:
+        print(hlo[:20000])
+
+    rec.update({
+        "status": "ok",
+        "mesh_shape": {k: int(v) for k, v in mesh.shape.items()},
+        "n_devices": int(mesh.size),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "flops": corrected["flops"],
+        "hlo_bytes_est": corrected["bytes"],
+        "collective_bytes": corrected["collective_bytes"],
+        "flops_xla_raw": cost.get("flops"),
+        "bytes_accessed_xla_raw": cost.get("bytes accessed"),
+        "collective_bytes_raw": coll_naive,
+        "cost_analysis": cost,
+        "params": int(cfg_used.param_count()),
+        "active_params": int(cfg_used.active_param_count()),
+        "hlo_chars": len(hlo),
+    })
+    _emit(out_dir, tag, cell_id, rec)
+    print(f"[dryrun] {cell_id}: OK  flops={rec['flops']:.3e} "
+          f"coll={corrected['collective_bytes']['total']:.3e}B  "
+          f"compile={t_compile:.1f}s")
+    return rec
+
+
+def _emit(out_dir, tag, cell_id, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{cell_id}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main():
+    archs = [args.arch] if args.arch else all_arch_names()
+    fails = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else [s[0] for s in cfg.shapes]
+        for shape_name in shapes:
+            try:
+                run_cell(arch, shape_name, args.mesh, out_dir=args.out,
+                         tag=args.tag, remat=args.remat,
+                         compute_dtype=args.compute_dtype,
+                         mesh_shape=args.mesh_shape,
+                         print_hlo=args.print_hlo,
+                         act_shard=args.act_shard,
+                         microbatch=args.microbatch,
+                         unroll_decode=args.unroll_decode)
+            except Exception as e:
+                fails.append((arch, shape_name, repr(e)))
+                print(f"[dryrun] {arch}/{shape_name}: FAIL {e!r}", file=sys.stderr)
+    if fails:
+        print(f"[dryrun] {len(fails)} FAILURES:", file=sys.stderr)
+        for f in fails:
+            print("  ", f, file=sys.stderr)
+        sys.exit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run forces 512 host devices via XLA_FLAGS before any import).
+
+Mesh shapes: single pod = (data=16, model=16) — 256 chips (one v5e pod);
+multi-pod adds an outer pure-DP "pod" axis = (pod=2, data=16, model=16).
+The same logical-axis rule table resolves model configs onto either mesh
+(the cluster-scale VLA contract, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/examples (e.g. (2,2) on 4 forced devices)."""
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(f"mesh {shape} needs {need} devices, have {len(devs)}")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def batch_shard_count(mesh) -> int:
+    """Number of ways the batch/token axis is sharded (pod x data)."""
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n

@@ -1,0 +1,70 @@
+"""Serving launcher: bring up a ServeEngine for an arch (reduced dims on CPU)
+and run a batch of ragged requests through it.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --reduce
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_arch_names, get_config
+from repro.models import get_model
+from repro.serve import ServeEngine
+
+from .train import REDUCE
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b", choices=all_arch_names())
+    ap.add_argument("--reduce", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    over = dict(REDUCE)
+    if cfg.family in ("ssm", "hybrid"):
+        over.update(ssm_state=16, ssm_headdim=16, ssm_chunk=16)
+    if cfg.family == "moe":
+        over.update(n_experts=8, top_k=2, d_ff_dense=128)
+    if cfg.family == "encdec":
+        over.update(n_enc_layers=2, n_dec_layers=2)
+    if cfg.family == "hybrid":
+        over.update(n_layers=5, shared_attn_period=2)
+    if cfg.cross_attn_group:
+        over.update(n_layers=10)
+    cfg = cfg.replace(**over)
+
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(
+        rng.randint(1, cfg.vocab_size, (args.batch, args.prompt_len))),
+        "lens": jnp.asarray(rng.randint(4, args.prompt_len + 1, args.batch))}
+    if cfg.family == "dense" and cfg.cross_attn_group:
+        batch["cross_emb"] = jnp.asarray(
+            rng.randn(args.batch, cfg.n_cross_tokens, cfg.d_model)
+            .astype(np.float32))
+    if cfg.family == "encdec":
+        batch["src_emb"] = jnp.asarray(
+            rng.randn(args.batch, args.prompt_len, cfg.d_model)
+            .astype(np.float32))
+        batch["src_lens"] = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+
+    eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7)
+    res = eng.generate(batch)
+    for i in range(args.batch):
+        n = int(res["n_generated"][i])
+        print(f"req{i} len={int(batch['lens'][i]):2d} -> "
+              f"{res['tokens'][i, :n].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

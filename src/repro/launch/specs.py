@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Follows the task spec: weak-type-correct, shardable, zero allocation.  The
+modality frontends ([vlm] image patches, [audio] speech frames) are STUBS —
+``input_specs`` provides precomputed embeddings of the right shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def get_shape(cfg, shape_name: str):
+    for (name, seq, batch, kind) in cfg.shapes:
+        if name == shape_name:
+            return name, int(seq), int(batch), kind
+    raise KeyError(f"{cfg.name} has no shape {shape_name!r}; "
+                   f"available: {[s[0] for s in cfg.shapes]}")
+
+
+def shape_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason) — long_500k is skipped for full-attention archs."""
+    _, _, _, kind = get_shape(cfg, shape_name)
+    if kind == "long" and cfg.skip_long_context:
+        return False, ("skipped: full-attention arch — 512k decode cache is "
+                       "quadratic-history; run for ssm/hybrid only (DESIGN.md §4)")
+    return True, ""
+
+
+def train_batch_specs(cfg, seq: int, batch: int):
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+    specs = {"tokens": _sds((batch, seq), I32),
+             "labels": _sds((batch, seq), I32)}
+    if cfg.family == "dense" and cfg.cross_attn_group:
+        specs["cross_emb"] = _sds((batch, cfg.n_cross_tokens, cfg.d_model), emb_dt)
+    if cfg.family == "encdec":
+        specs["src_emb"] = _sds((batch, seq, cfg.d_model), emb_dt)
+        specs["src_lens"] = _sds((batch,), I32)
+    return specs
+
+
+def prefill_batch_specs(cfg, seq: int, batch: int):
+    specs = train_batch_specs(cfg, seq, batch)
+    del specs["labels"]
+    specs["lens"] = _sds((batch,), I32)
+    return specs
+
+
+def decode_batch_specs(cfg, batch: int):
+    return {"token": _sds((batch, 1), I32)}
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    model = get_model(cfg)
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: model.make_cache(cfg, batch, max_len, src_len=max_len))
+    return jax.eval_shape(lambda: model.make_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg, shape_name: str):
+    """Returns (step_kind, specs dict) for the cell.
+
+    train  -> {"batch": ...}
+    prefill-> {"batch": ..., "cache": ...}
+    decode -> {"batch": ..., "cache": ...}   (cache length = seq_len)
+    """
+    _, seq, batch, kind = get_shape(cfg, shape_name)
+    if kind == "train":
+        return "train", {"batch": train_batch_specs(cfg, seq, batch)}
+    if kind == "prefill":
+        return "prefill", {"batch": prefill_batch_specs(cfg, seq, batch),
+                           "cache": cache_specs(cfg, batch, seq)}
+    if kind in ("decode", "long"):
+        return "decode", {"batch": decode_batch_specs(cfg, batch),
+                          "cache": cache_specs(cfg, batch, seq)}
+    raise ValueError(kind)

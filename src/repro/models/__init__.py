@@ -1,0 +1,23 @@
+"""Model zoo: pure-functional, scan-over-layers definitions for every
+assigned architecture family (dense / moe / ssm / hybrid / encdec), all built
+on the predicated attention + SSD kernels and the VLA core.
+"""
+
+from .config import ModelConfig  # noqa: F401
+
+
+def get_model(cfg: "ModelConfig"):
+    """Return the module implementing cfg.family's model API:
+    init(key, cfg) -> (params, axes);
+    train_logits(params, cfg, batch) -> (logits, aux);
+    prefill(params, cfg, batch) -> (logits_last, cache);
+    decode(params, cfg, batch, cache) -> (logits, cache).
+    """
+    from . import dense, encdec, hybrid, moe, ssm
+    return {
+        "dense": dense,
+        "moe": moe,
+        "ssm": ssm,
+        "hybrid": hybrid,
+        "encdec": encdec,
+    }[cfg.family]

@@ -1,0 +1,319 @@
+"""Dense decoder-LM family: stablelm-3b/12b, command-r-plus, gemma3, and the
+llama-3.2-vision backbone (grouped cross-attention layers).
+
+Implementation notes
+--------------------
+* scan-over-layers with stacked params: HLO size is O(1) in depth.
+* gemma3's 5:1 local:global pattern is ONE predicated attention with a
+  *dynamic* per-layer window scalar (2**30 = global) — no duplicated branches
+  (the SVE predication story: the mask changes, never the code).
+* llama-vision: layers grouped in blocks of ``cross_attn_group`` (5); slot 3
+  of each group is a cross-attention layer reading stub image embeddings
+  (the modality frontend is a ShapeDtypeStruct stand-in per the task spec).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+NO_WINDOW = 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def axes(cfg):
+    """Logical-axis tree mirroring init's params (cheap, array-free)."""
+    ax = {"embed": L.embed_axes(cfg), "final_norm": L.norm_axes(cfg)}
+    if cfg.cross_attn_group:
+        ax["groups"] = {
+            "self": L.stack_axes(L.stack_axes(L.block_axes(cfg))),
+            "cross": L.stack_axes(L.block_axes(cfg)),
+        }
+    else:
+        ax["blocks"] = L.stack_axes(L.block_axes(cfg))
+    return ax
+
+
+def init(key, cfg):
+    k_emb, k_blocks, k_cross = jax.random.split(key, 3)
+    params = {"embed": L.embed_init(k_emb, cfg),
+              "final_norm": L.norm_init(cfg, cfg.d_model)}
+    if cfg.cross_attn_group:
+        g = cfg.cross_attn_group
+        n_groups, n_self = cfg.n_layers // g, g - 1
+        params["groups"] = {
+            "self": L.stack_init(
+                k_blocks, n_groups,
+                lambda k: L.stack_init(k, n_self, lambda k2: L.block_init(k2, cfg))),
+            "cross": L.stack_init(k_cross, n_groups,
+                                  lambda k: L.block_init(k, cfg)),
+        }
+    else:
+        params["blocks"] = L.stack_init(k_blocks, cfg.n_layers,
+                                        lambda k: L.block_init(k, cfg))
+    return params, axes(cfg)
+
+
+def layer_windows(cfg):
+    """(L,) int32 per-layer dynamic window (NO_WINDOW = global attention)."""
+    idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    if cfg.local_window is None:
+        return jnp.full((cfg.n_layers,), NO_WINDOW, jnp.int32)
+    if cfg.local_global_period is None:
+        return jnp.full((cfg.n_layers,), cfg.local_window, jnp.int32)
+    is_global = (idx % cfg.local_global_period) == (cfg.local_global_period - 1)
+    return jnp.where(is_global, NO_WINDOW, cfg.local_window).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _trunk_plain(params, cfg, x, positions, kv_lens):
+    wins = layer_windows(cfg)
+
+    def body(h, xs):
+        lp, win = xs
+        h, _ = L.block_apply(lp, h, positions, cfg, causal=True, window=win,
+                             kv_lens=kv_lens)
+        return h, None
+
+    h, _ = jax.lax.scan(L.remat_wrap(body, cfg), x, (params["blocks"], wins))
+    return h
+
+
+def _trunk_vlm(params, cfg, x, positions, kv_lens, cross_emb):
+    """Groups of (pre self layers, cross layer, 1 self layer): HF llama-3.2
+    cross_attention_layers = [3, 8, 13, ...] with group size 5 and pre = 3."""
+    g = cfg.cross_attn_group
+    pre = g - 2
+
+    def self_body(h, lp):
+        h, _ = L.block_apply(lp, h, positions, cfg, causal=True, kv_lens=kv_lens)
+        return h, None
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(self_body, h,
+                            jax.tree.map(lambda a: a[:pre], gp["self"]))
+        h, _ = L.block_apply(gp["cross"], h, positions, cfg, kv_x=cross_emb,
+                             causal=False, use_rope=False)
+        h, _ = self_body(h, jax.tree.map(lambda a: a[pre], gp["self"]))
+        return h, None
+
+    h, _ = jax.lax.scan(L.remat_wrap(group_body, cfg), x, params["groups"])
+    return h
+
+
+def train_logits(params, cfg, batch):
+    """batch: tokens (B, S) [+ lens (B,)] [+ cross_emb (B, N, d)]."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    kv_lens = batch.get("lens")
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.cross_attn_group:
+        h = _trunk_vlm(params, cfg, x, positions, kv_lens, batch["cross_emb"])
+    else:
+        h = _trunk_plain(params, cfg, x, positions, kv_lens)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg), {}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV caches
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    """Allocate the decode cache pytree (zeros)."""
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    shp = (batch_size, hkv, max_len, hd)
+    if cfg.cross_attn_group:
+        g = cfg.cross_attn_group
+        n_groups, n_self = cfg.n_layers // g, g - 1
+        return {
+            "k": jnp.zeros((n_groups, n_self) + shp, dtype),
+            "v": jnp.zeros((n_groups, n_self) + shp, dtype),
+            "cross_k": jnp.zeros((n_groups, batch_size, hkv, cfg.n_cross_tokens, hd), dtype),
+            "cross_v": jnp.zeros((n_groups, batch_size, hkv, cfg.n_cross_tokens, hd), dtype),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers,) + shp, dtype),
+        "v": jnp.zeros((cfg.n_layers,) + shp, dtype),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _cross_kv(params_cross_attn, cross_emb, cfg):
+    """Precompute cross K/V from (stub) image embeddings for one group."""
+    hd = cfg.resolved_head_dim
+    src = cross_emb.astype(L.cdt(cfg))
+    k = L._split_heads(src @ params_cross_attn["wk"].astype(L.cdt(cfg)),
+                       cfg.n_kv_heads, hd)
+    v = L._split_heads(src @ params_cross_attn["wv"].astype(L.cdt(cfg)),
+                       cfg.n_kv_heads, hd)
+    return k, v
+
+
+def prefill(params, cfg, batch, cache):
+    """Run the prompt, fill caches, return (last-token logits, cache).
+
+    batch: tokens (B, S), lens (B,) [+ cross_emb].  The cache must have
+    max_len >= S.  Per-row ragged lengths are first-class (whilelt masks).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    lens = batch.get("lens")
+    lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    zero_pos = jnp.zeros((b,), jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg)
+    wins = layer_windows(cfg)
+
+    if cfg.cross_attn_group:
+        g = cfg.cross_attn_group
+        pre = g - 2
+        cross_emb = batch["cross_emb"]
+        n_groups = cfg.n_layers // g
+        h = x
+        new_k, new_v, cks, cvs = [], [], [], []
+        for gi in range(n_groups):                  # 8 groups: unrolled
+            gp = jax.tree.map(lambda a, gi=gi: a[gi], params["groups"])
+            ks_g, vs_g = [], []
+            for si in range(g - 1):
+                if si == pre:                       # cross before self slot `pre`
+                    ck, cv = _cross_kv(gp["cross"]["attn"], cross_emb, cfg)
+                    h, _ = L.block_apply(gp["cross"], h, positions, cfg,
+                                         kv_x=cross_emb, causal=False,
+                                         use_rope=False)
+                    cks.append(ck)
+                    cvs.append(cv)
+                lp = jax.tree.map(lambda a, si=si: a[si], gp["self"])
+                h, (kn, vn) = L.block_apply(
+                    lp, h, positions, cfg, causal=True, kv_lens=lens,
+                    q_offset=zero_pos, cache=(cache["k"][gi, si], cache["v"][gi, si]),
+                    cache_pos=zero_pos)
+                ks_g.append(kn)
+                vs_g.append(vn)
+            new_k.append(jnp.stack(ks_g))
+            new_v.append(jnp.stack(vs_g))
+        cache = dict(cache)
+        cache["k"], cache["v"] = jnp.stack(new_k), jnp.stack(new_v)
+        cache["cross_k"], cache["cross_v"] = jnp.stack(cks), jnp.stack(cvs)
+    else:
+        def body(carry, xs):
+            h, = carry
+            lp, win, kc, vc = xs
+            h, (kc, vc) = L.block_apply(
+                lp, h, positions, cfg, causal=True, window=win, kv_lens=lens,
+                q_offset=zero_pos, cache=(kc, vc), cache_pos=zero_pos)
+            return (h,), (kc, vc)
+
+        (h,), (k_new, v_new) = jax.lax.scan(
+            body, (x,), (params["blocks"], wins, cache["k"], cache["v"]))
+        cache = dict(cache)
+        cache["k"], cache["v"] = k_new, v_new
+
+    cache["pos"] = lens
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    # logits at each row's last valid position (ragged gather)
+    idx = jnp.clip(lens - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = L.unembed(params["embed"], h_last[:, None], cfg)[:, 0]
+    return logits, cache
+
+
+def decode(params, cfg, batch, cache):
+    """One-token decode: batch = {"token": (B, 1)}.  Returns (logits, cache)."""
+    token = batch["token"]
+    b = token.shape[0]
+    pos = cache["pos"]                              # (B,) current lengths
+    positions = pos[:, None]
+    x = L.embed(params["embed"], token, cfg)
+    wins = layer_windows(cfg)
+
+    if cfg.cross_attn_group:
+        g = cfg.cross_attn_group
+        pre = g - 2
+        n_groups = cfg.n_layers // g
+        h = x
+        new_k, new_v = [], []
+        for gi in range(n_groups):
+            gp = jax.tree.map(lambda a, gi=gi: a[gi], params["groups"])
+            ks, vs = [], []
+            for si in range(g - 1):
+                if si == pre:                       # cross before self slot `pre`
+                    h = _cross_decode(gp["cross"], h, positions, cfg,
+                                      cache["cross_k"][gi], cache["cross_v"][gi])
+                lp = jax.tree.map(lambda a, si=si: a[si], gp["self"])
+                h, (kn, vn) = L.block_apply(
+                    lp, h, positions, cfg, causal=False, kv_lens=pos + 1,
+                    q_offset=pos, cache=(cache["k"][gi, si], cache["v"][gi, si]),
+                    cache_pos=pos)
+                ks.append(kn)
+                vs.append(vn)
+            new_k.append(jnp.stack(ks))
+            new_v.append(jnp.stack(vs))
+        cache = dict(cache)
+        cache["k"], cache["v"] = jnp.stack(new_k), jnp.stack(new_v)
+    elif not cfg.scan_layers_decode:
+        # unrolled decode: per-layer dynamic-update-slice on the STACKED cache
+        # lets XLA alias in place — no scan-ys double buffer (EXPERIMENTS §Perf)
+        h = x
+        kc, vc = cache["k"], cache["v"]
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, li=li: a[li], params["blocks"])
+            h, (kl, vl) = L.block_apply(
+                lp, h, positions, cfg, causal=False, window=wins[li],
+                kv_lens=pos + 1, q_offset=pos, cache=(kc[li], vc[li]),
+                cache_pos=pos)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, kl[None], li, axis=0)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, vl[None], li, axis=0)
+        cache = dict(cache)
+        cache["k"], cache["v"] = kc, vc
+    else:
+        def body(carry, xs):
+            h, = carry
+            lp, win, kc, vc = xs
+            h, (kc, vc) = L.block_apply(
+                lp, h, positions, cfg, causal=False, window=win,
+                kv_lens=pos + 1, q_offset=pos, cache=(kc, vc), cache_pos=pos)
+            return (h,), (kc, vc)
+
+        (h,), (k_new, v_new) = jax.lax.scan(
+            body, (x,), (params["blocks"], wins, cache["k"], cache["v"]))
+        cache = dict(cache)
+        cache["k"], cache["v"] = k_new, v_new
+
+    cache["pos"] = pos + 1
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    logits = L.unembed(params["embed"], h, cfg)[:, 0]
+    return logits, cache
+
+
+def _cross_decode(block_p, h, positions, cfg, ck, cv):
+    """Cross-attention sub-block against precomputed cross K/V."""
+    from repro.kernels.flash_attention import flash_attention
+    hd = cfg.resolved_head_dim
+    hin = L.apply_norm(block_p["ln1"], h, cfg)
+    q = L._split_heads(hin.astype(L.cdt(cfg)) @ block_p["attn"]["wq"].astype(L.cdt(cfg)),
+                       cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = L._rms_headdim(q)
+    out = flash_attention(q, ck.astype(L.cdt(cfg)), cv.astype(L.cdt(cfg)),
+                          causal=False, impl=cfg.attn_impl)
+    out = L._merge_heads(out).astype(L.cdt(cfg)) @ block_p["attn"]["wo"].astype(L.cdt(cfg))
+    if cfg.parallel_block:
+        h = h + out + L.mlp(block_p["mlp"], hin, cfg)
+    else:
+        h2 = h + out
+        h = h2 + L.mlp(block_p["mlp"], L.apply_norm(block_p["ln2"], h2, cfg), cfg)
+    return h

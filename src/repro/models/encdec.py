@@ -1,0 +1,197 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The speech/modality frontend is a STUB per the task spec: ``input_specs``
+provides precomputed frame embeddings (B, S_src, d_model) directly to the
+encoder.  Encoder: non-causal self-attention over ragged frame lengths
+(whilelt predicates).  Decoder: causal self-attention + cross-attention to
+the encoder memory; serving caches self K/V incrementally and cross K/V once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+
+from . import layers as L
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "self_attn": L.attn_init(k1, cfg),
+            "lnx": L.norm_init(cfg, cfg.d_model), "cross_attn": L.attn_init(k2, cfg),
+            "ln2": L.norm_init(cfg, cfg.d_model), "mlp": L.mlp_init(k3, cfg)}
+
+
+def _dec_block_axes(cfg):
+    return {"ln1": L.norm_axes(cfg), "self_attn": L.attn_axes(cfg),
+            "lnx": L.norm_axes(cfg), "cross_attn": L.attn_axes(cfg),
+            "ln2": L.norm_axes(cfg), "mlp": L.mlp_axes(cfg)}
+
+
+def _dec_block_apply(p, x, positions, cfg, memory, *, src_lens=None,
+                     kv_lens=None, q_offset=None, cache=None, cache_pos=None,
+                     cross_cache=None, causal=True):
+    x = L.shard_residual(cfg, x)
+    h = L.apply_norm(p["ln1"], x, cfg)
+    attn_out, new_cache = L.attention(
+        p["self_attn"], h, positions, cfg, causal=causal, kv_lens=kv_lens,
+        q_offset=q_offset, cache=cache, cache_pos=cache_pos)
+    h2 = x + attn_out
+    hx = L.apply_norm(p["lnx"], h2, cfg)
+    if cross_cache is not None:                  # decode: precomputed cross K/V
+        ck, cv = cross_cache
+        hd = cfg.resolved_head_dim
+        q = L._split_heads(hx.astype(L.cdt(cfg)) @ p["cross_attn"]["wq"].astype(L.cdt(cfg)),
+                           cfg.n_heads, hd)
+        out = flash_attention(q, ck.astype(L.cdt(cfg)), cv.astype(L.cdt(cfg)),
+                              kv_lens=src_lens, causal=False, impl=cfg.attn_impl)
+        cross_out = (L._merge_heads(out).astype(L.cdt(cfg))
+                     @ p["cross_attn"]["wo"].astype(L.cdt(cfg))).astype(x.dtype)
+    else:
+        cross_out, _ = L.attention(
+            p["cross_attn"], hx, positions, cfg, kv_x=memory, causal=False,
+            kv_lens=src_lens, use_rope=False)
+    h3 = h2 + cross_out
+    out = h3 + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h3, cfg), cfg)
+    return L.shard_residual(cfg, out), new_cache
+
+
+def axes(cfg):
+    return {
+        "embed": L.embed_axes(cfg),
+        "enc_blocks": L.stack_axes(L.block_axes(cfg)),
+        "enc_norm": L.norm_axes(cfg),
+        "dec_blocks": L.stack_axes(_dec_block_axes(cfg)),
+        "final_norm": L.norm_axes(cfg),
+    }
+
+
+def init(key, cfg):
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    params = {
+        "embed": L.embed_init(k_emb, cfg),
+        "enc_blocks": L.stack_init(k_enc, cfg.n_enc_layers,
+                                   lambda k: L.block_init(k, cfg)),
+        "enc_norm": L.norm_init(cfg, cfg.d_model),
+        "dec_blocks": L.stack_init(k_dec, cfg.n_dec_layers,
+                                   lambda k: _dec_block_init(k, cfg)),
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+    return params, axes(cfg)
+
+
+def encode(params, cfg, src_emb, src_lens=None):
+    b, s_src, _ = src_emb.shape
+    positions = jnp.broadcast_to(jnp.arange(s_src, dtype=jnp.int32)[None],
+                                 (b, s_src))
+
+    def body(h, lp):
+        h, _ = L.block_apply(lp, h, positions, cfg, causal=False,
+                             kv_lens=src_lens)
+        return h, None
+
+    h, _ = jax.lax.scan(L.remat_wrap(body, cfg), src_emb.astype(L.cdt(cfg)),
+                        params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], h, cfg)
+
+
+def train_logits(params, cfg, batch):
+    """batch: src_emb (B, Ss, d) [+ src_lens], tokens (B, St) [+ lens]."""
+    memory = encode(params, cfg, batch["src_emb"], batch.get("src_lens"))
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        h, _ = _dec_block_apply(lp, h, positions, cfg, memory,
+                                src_lens=batch.get("src_lens"),
+                                kv_lens=batch.get("lens"), causal=True)
+        return h, None
+
+    h, _ = jax.lax.scan(L.remat_wrap(body, cfg), x, params["dec_blocks"])
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg), {}
+
+
+def make_cache(cfg, batch_size: int, max_len: int, src_len: int, dtype=None):
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    lcount = cfg.n_dec_layers
+    return {
+        "k": jnp.zeros((lcount, batch_size, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((lcount, batch_size, hkv, max_len, hd), dtype),
+        "cross_k": jnp.zeros((lcount, batch_size, hkv, src_len, hd), dtype),
+        "cross_v": jnp.zeros((lcount, batch_size, hkv, src_len, hd), dtype),
+        "src_lens": jnp.zeros((batch_size,), jnp.int32),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch, cache):
+    """Encode source + run decoder prompt, filling self and cross caches."""
+    src_lens = batch.get("src_lens")
+    memory = encode(params, cfg, batch["src_emb"], src_lens)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if src_lens is None:
+        src_lens = jnp.full((b,), memory.shape[1], jnp.int32)
+    lens = batch.get("lens")
+    lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    zero = jnp.zeros((b,), jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg)
+    hd = cfg.resolved_head_dim
+    cd = L.cdt(cfg)
+
+    def body(carry, xs):
+        h, = carry
+        lp, kc, vc = xs
+        h, (kc, vc) = _dec_block_apply(
+            lp, h, positions, cfg, memory, src_lens=src_lens, kv_lens=lens,
+            q_offset=zero, cache=(kc, vc), cache_pos=zero, causal=True)
+        # cross K/V for decode (computed once per layer)
+        ck = L._split_heads(memory.astype(cd) @ lp["cross_attn"]["wk"].astype(cd),
+                            cfg.n_kv_heads, hd)
+        cv = L._split_heads(memory.astype(cd) @ lp["cross_attn"]["wv"].astype(cd),
+                            cfg.n_kv_heads, hd)
+        return (h,), (kc, vc, ck, cv)
+
+    (h,), (k_new, v_new, ck, cv) = jax.lax.scan(
+        body, (x,), (params["dec_blocks"], cache["k"], cache["v"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = k_new, v_new
+    cache["cross_k"], cache["cross_v"] = (ck.astype(cache["cross_k"].dtype),
+                                          cv.astype(cache["cross_v"].dtype))
+    cache["src_lens"], cache["pos"] = src_lens, lens
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    idx = jnp.clip(lens - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
+
+
+def decode(params, cfg, batch, cache):
+    token = batch["token"]
+    pos = cache["pos"]
+    positions = pos[:, None]
+    x = L.embed(params["embed"], token, cfg)
+
+    def body(carry, xs):
+        h, = carry
+        lp, kc, vc, ck, cv = xs
+        h, (kc, vc) = _dec_block_apply(
+            lp, h, positions, cfg, None, src_lens=cache["src_lens"],
+            kv_lens=pos + 1, q_offset=pos, cache=(kc, vc), cache_pos=pos,
+            cross_cache=(ck, cv), causal=False)
+        return (h,), (kc, vc)
+
+    (h,), (k_new, v_new) = jax.lax.scan(
+        body, (x,), (params["dec_blocks"], cache["k"], cache["v"],
+                     cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = k_new, v_new
+    cache["pos"] = pos + 1
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg)[:, 0], cache

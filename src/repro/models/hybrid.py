@@ -1,0 +1,174 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a SHARED transformer block
+(single weight copy) applied every ``shared_attn_period`` SSM layers.
+
+The shared block is the paper's C9 'one datapath, many widths' principle at
+model scale: the same attention weights serve several depths, each
+application keeping its own KV cache slot.  Simplifications vs the HF
+implementation (per-application LoRA deltas, concatenated embedding input)
+are recorded in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as S
+
+
+def _split_layout(cfg):
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    rem = cfg.n_layers - n_groups * period
+    return period, n_groups, rem
+
+
+def axes(cfg):
+    _, _, rem = _split_layout(cfg)
+    ax = {"embed": L.embed_axes(cfg), "final_norm": L.norm_axes(cfg),
+          "shared": L.block_axes(cfg),
+          "main": L.stack_axes(L.stack_axes(S.mamba_block_axes(cfg)))}
+    if rem:
+        ax["tail"] = L.stack_axes(S.mamba_block_axes(cfg))
+    return ax
+
+
+def init(key, cfg):
+    period, n_groups, rem = _split_layout(cfg)
+    k_emb, k_main, k_rem, k_shared = jax.random.split(key, 4)
+    params = {"embed": L.embed_init(k_emb, cfg),
+              "final_norm": L.norm_init(cfg, cfg.d_model),
+              "shared": L.block_init(k_shared, cfg)}
+    main = L.stack_init(k_main, n_groups * period,
+                        lambda k: S.mamba_block_init(k, cfg))
+    params["main"] = jax.tree.map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]), main)
+    if rem:
+        params["tail"] = L.stack_init(k_rem, rem, lambda k: S.mamba_block_init(k, cfg))
+    return params, axes(cfg)
+
+
+def train_logits(params, cfg, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    lens = batch.get("lens")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = L.embed(params["embed"], tokens, cfg)
+    shared = params["shared"]
+
+    def mamba_body(h, lp):
+        h, _ = S.mamba_block(lp, h, cfg, seq_lens=lens)
+        return h, None
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(mamba_body, h, gp)
+        h, _ = L.block_apply(shared, h, positions, cfg, causal=True, kv_lens=lens)
+        return h, None
+
+    h, _ = jax.lax.scan(L.remat_wrap(group_body, cfg), x, params["main"])
+    if "tail" in params:
+        h, _ = jax.lax.scan(mamba_body, h, params["tail"])
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg), {}
+
+
+def make_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    period, n_groups, rem = _split_layout(cfg)
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    ssm_cache = S.make_cache(cfg, batch_size, dtype=dtype)
+    main_conv = ssm_cache["conv"][0]
+    return {
+        "conv": jnp.zeros((n_groups, period) + main_conv.shape, dtype),
+        "state": jnp.zeros((n_groups, period, batch_size, cfg.n_ssm_heads,
+                            cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "tail_conv": jnp.zeros((max(rem, 1),) + main_conv.shape, dtype),
+        "tail_state": jnp.zeros((max(rem, 1), batch_size, cfg.n_ssm_heads,
+                                 cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "shared_k": jnp.zeros((n_groups, batch_size, hkv, max_len, hd), dtype),
+        "shared_v": jnp.zeros((n_groups, batch_size, hkv, max_len, hd), dtype),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _groups_cached(params, cfg, x, positions, cache, *, lens, q_offset,
+                   cache_pos, causal, decode_step):
+    shared = params["shared"]
+
+    def group_body(carry, xs):
+        h, = carry
+        gp, conv_g, state_g, sk, sv = xs
+
+        def mamba_body(carry2, xs2):
+            h2, = carry2
+            lp, cc, st = xs2
+            if decode_step:
+                h2, (cc, st) = S.mamba_block_decode(lp, h2, cfg, cc, st)
+            else:
+                h2, (cc, st) = S.mamba_block(lp, h2, cfg, seq_lens=lens)
+            return (h2,), (cc, st)
+
+        (h,), (conv_g, state_g) = jax.lax.scan(
+            mamba_body, (h,), (gp, conv_g, state_g))
+        h, (sk, sv) = L.block_apply(
+            shared, h, positions, cfg, causal=causal,
+            kv_lens=lens if not decode_step else cache_pos + 1,
+            q_offset=q_offset, cache=(sk, sv), cache_pos=cache_pos)
+        return (h,), (conv_g, state_g, sk, sv)
+
+    (h,), (conv_new, state_new, sk_new, sv_new) = jax.lax.scan(
+        group_body, (x,),
+        (params["main"], cache["conv"], cache["state"],
+         cache["shared_k"], cache["shared_v"]))
+
+    cache = dict(cache)
+    cache["conv"], cache["state"] = conv_new, state_new
+    cache["shared_k"], cache["shared_v"] = sk_new, sv_new
+
+    if "tail" in params:
+        def tail_body(carry, xs):
+            h2, = carry
+            lp, cc, st = xs
+            if decode_step:
+                h2, (cc, st) = S.mamba_block_decode(lp, h2, cfg, cc, st)
+            else:
+                h2, (cc, st) = S.mamba_block(lp, h2, cfg, seq_lens=lens)
+            return (h2,), (cc, st)
+        (h,), (tc, ts) = jax.lax.scan(
+            tail_body, (h,), (params["tail"], cache["tail_conv"],
+                              cache["tail_state"]))
+        cache["tail_conv"], cache["tail_state"] = tc, ts
+    return h, cache
+
+
+def prefill(params, cfg, batch, cache):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    lens = batch.get("lens")
+    lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    zero = jnp.zeros((b,), jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg)
+    # conv caches are written by mamba_block's tail output; adapt shapes
+    h, cache = _groups_cached(params, cfg, x, positions, cache, lens=lens,
+                              q_offset=zero, cache_pos=zero, causal=True,
+                              decode_step=False)
+    cache["pos"] = lens
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    idx = jnp.clip(lens - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
+
+
+def decode(params, cfg, batch, cache):
+    token = batch["token"]
+    pos = cache["pos"]
+    positions = pos[:, None]
+    x = L.embed(params["embed"], token, cfg)
+    h, cache = _groups_cached(params, cfg, x, positions, cache, lens=None,
+                              q_offset=pos, cache_pos=pos, causal=False,
+                              decode_step=True)
+    cache["pos"] = pos + 1
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg)[:, 0], cache

@@ -1,0 +1,265 @@
+"""MoE decoder LMs (olmoe-1b-7b, moonshot-v1-16b-a3b / Moonlight).
+
+GShard-style grouped dispatch: tokens are reshaped to (G groups, Tg, d) with
+G sharded over the data axis and experts over the model axis; dispatch is
+group-local (static shapes, no cross-shard counters) so pjit lowers the
+expert exchange to all-to-alls.  Capacity overflow lanes are dropped — the
+FFR analogue (kernels/moe_dispatch).  The position-assignment counters come
+from the Pallas kernel (or its XLA oracle under pjit / dry-run).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_dispatch import build_dispatch
+
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_init(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L._normal(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "w_gate": L._normal(ks[1], (e, d, f), d ** -0.5, L.pdt(cfg)),
+        "w_up": L._normal(ks[2], (e, d, f), d ** -0.5, L.pdt(cfg)),
+        "w_down": L._normal(ks[3], (e, f, d), f ** -0.5, L.pdt(cfg)),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = L.mlp_init(ks[4], cfg, d_ff=fs)
+    return p
+
+
+def _moe_ffn_axes(cfg):
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        ax["shared"] = L.mlp_axes(cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return ax
+
+
+def _moe_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "attn": L.attn_init(k1, cfg),
+            "ln2": L.norm_init(cfg, cfg.d_model), "moe": _moe_ffn_init(k2, cfg)}
+
+
+def _moe_block_axes(cfg):
+    return {"ln1": L.norm_axes(cfg), "attn": L.attn_axes(cfg),
+            "ln2": L.norm_axes(cfg), "moe": _moe_ffn_axes(cfg)}
+
+
+def axes(cfg):
+    ax = {"embed": L.embed_axes(cfg), "final_norm": L.norm_axes(cfg)}
+    if cfg.first_k_dense:
+        ax["dense_blocks"] = L.stack_axes(
+            L.block_axes(cfg, d_ff=cfg.d_ff_dense or cfg.d_ff))
+    ax["blocks"] = L.stack_axes(_moe_block_axes(cfg))
+    return ax
+
+
+def init(key, cfg):
+    k_emb, k_dense, k_moe = jax.random.split(key, 3)
+    params = {"embed": L.embed_init(k_emb, cfg),
+              "final_norm": L.norm_init(cfg, cfg.d_model)}
+    if cfg.first_k_dense:
+        params["dense_blocks"] = L.stack_init(
+            k_dense, cfg.first_k_dense,
+            lambda k: L.block_init(k, cfg, d_ff=cfg.d_ff_dense or cfg.d_ff))
+    n_moe = cfg.n_layers - cfg.first_k_dense
+    params["blocks"] = L.stack_init(k_moe, n_moe, lambda k: _moe_block_init(k, cfg))
+    return params, axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# the MoE FFN (GShard grouped dispatch/combine)
+# ---------------------------------------------------------------------------
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    c = math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)        # sublane-aligned
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, d) -> (y, metrics).  Groups G = cfg.moe_groups must divide B*S."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = cfg.moe_groups
+    t = b * s
+    assert t % g == 0, (t, g)
+    tg = t // g
+    cap = capacity(cfg, tg)
+    cd = L.cdt(cfg)
+
+    xt = x.reshape(g, tg, d)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                               # (G,Tg,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)    # renorm
+
+    disp = jax.vmap(lambda i, w: build_dispatch(i, w, e, cap, impl="xla"))(
+        ids.astype(jnp.int32), gates)
+
+    # gather tokens into expert buffers: (G, E, C, d)
+    xp = jnp.concatenate([xt, jnp.zeros((g, 1, d), xt.dtype)], axis=1)
+    table = disp["token_table"].reshape(g, e * cap)
+    xe = jnp.take_along_axis(xp, table[..., None].astype(jnp.int32), axis=1)
+    xe = xe.reshape(g, e, cap, d).astype(cd)
+
+    # expert computation (all-to-all boundary under EP)
+    ea = ("batch", "act_experts", None, None)
+    xe = L.shard_act(cfg, xe, ea)
+    up = L.shard_act(cfg, jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(cd)), ea)
+    gate = L.shard_act(cfg, jnp.einsum("gecd,edf->gecf", xe,
+                                       p["w_gate"].astype(cd)), ea)
+    hidden = jax.nn.silu(gate) * up
+    ye = L.shard_act(cfg, jnp.einsum("gecf,efd->gecd", hidden,
+                                     p["w_down"].astype(cd)), ea)
+
+    # combine back to token order
+    ye_flat = jnp.concatenate([ye.reshape(g, e * cap, d),
+                               jnp.zeros((g, 1, d), ye.dtype)], axis=1)
+    slot = disp["slot_of"].reshape(g, tg * k)
+    contrib = jnp.take_along_axis(ye_flat, slot[..., None].astype(jnp.int32), axis=1)
+    contrib = contrib.reshape(g, tg, k, d)
+    y = jnp.sum(contrib * disp["gates"][..., None].astype(contrib.dtype), axis=2)
+    y = L.shard_act(cfg, y, ("batch", None, None))
+
+    if cfg.n_shared_experts:
+        y = y + L.mlp(p["shared"], xt, cfg).astype(y.dtype)
+
+    # aux metrics (Switch load-balance + router z-loss)
+    onehot = jax.nn.one_hot(ids[..., 0], e, dtype=jnp.float32)  # top-1 fraction
+    f_e = onehot.mean(axis=(0, 1))
+    p_e = probs.mean(axis=(0, 1))
+    lb = e * jnp.sum(f_e * p_e)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = jnp.sum(disp["dropped"]) / jnp.asarray(t * k, jnp.float32)
+    metrics = {"lb_loss": lb, "router_z": z, "dropped_frac": dropped}
+    return y.reshape(b, s, d).astype(x.dtype), metrics
+
+
+def _moe_block_apply(p, x, positions, cfg, *, kv_lens=None, q_offset=None,
+                     cache=None, cache_pos=None, causal=True):
+    x = L.shard_residual(cfg, x)
+    h = L.apply_norm(p["ln1"], x, cfg)
+    attn_out, new_cache = L.attention(
+        p["attn"], h, positions, cfg, causal=causal, kv_lens=kv_lens,
+        q_offset=q_offset, cache=cache, cache_pos=cache_pos)
+    h2 = x + attn_out
+    y, metrics = moe_ffn(p["moe"], L.apply_norm(p["ln2"], h2, cfg), cfg)
+    return L.shard_residual(cfg, h2 + y), metrics, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def train_logits(params, cfg, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    kv_lens = batch.get("lens")
+    x = L.embed(params["embed"], tokens, cfg)
+
+    if cfg.first_k_dense:
+        def dense_body(h, lp):
+            h, _ = L.block_apply(lp, h, positions, cfg, causal=True, kv_lens=kv_lens)
+            return h, None
+        x, _ = jax.lax.scan(L.remat_wrap(dense_body, cfg), x, params["dense_blocks"])
+
+    def body(h, lp):
+        h, metrics, _ = _moe_block_apply(lp, h, positions, cfg, kv_lens=kv_lens)
+        return h, metrics
+
+    h, metrics = jax.lax.scan(L.remat_wrap(body, cfg), x, params["blocks"])
+    aux = {k: jnp.mean(v) for k, v in metrics.items()}
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg), aux
+
+
+def make_cache(cfg, batch_size: int, max_len: int, dtype=None):
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    shp = (batch_size, hkv, max_len, hd)
+    return {
+        "dense_k": jnp.zeros((max(cfg.first_k_dense, 1),) + shp, dtype),
+        "dense_v": jnp.zeros((max(cfg.first_k_dense, 1),) + shp, dtype),
+        "k": jnp.zeros((cfg.n_layers - cfg.first_k_dense,) + shp, dtype),
+        "v": jnp.zeros((cfg.n_layers - cfg.first_k_dense,) + shp, dtype),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _run_cached(params, cfg, x, positions, *, kv_lens, q_offset, cache,
+                cache_pos, causal):
+    new_cache = dict(cache)
+    if cfg.first_k_dense:
+        def dense_body(carry, xs):
+            h, = carry
+            lp, kc, vc = xs
+            h, (kc, vc) = L.block_apply(
+                lp, h, positions, cfg, causal=causal, kv_lens=kv_lens,
+                q_offset=q_offset, cache=(kc, vc), cache_pos=cache_pos)
+            return (h,), (kc, vc)
+        (x,), (dk, dv) = jax.lax.scan(
+            dense_body, (x,),
+            (params["dense_blocks"], cache["dense_k"], cache["dense_v"]))
+        new_cache["dense_k"], new_cache["dense_v"] = dk, dv
+
+    def body(carry, xs):
+        h, = carry
+        lp, kc, vc = xs
+        h, _, (kc, vc) = _moe_block_apply(
+            lp, h, positions, cfg, kv_lens=kv_lens, q_offset=q_offset,
+            cache=(kc, vc), cache_pos=cache_pos, causal=causal)
+        return (h,), (kc, vc)
+
+    (h,), (k_new, v_new) = jax.lax.scan(
+        body, (x,), (params["blocks"], cache["k"], cache["v"]))
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    return h, new_cache
+
+
+def prefill(params, cfg, batch, cache):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    lens = batch.get("lens")
+    lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    zero = jnp.zeros((b,), jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg)
+    h, cache = _run_cached(params, cfg, x, positions, kv_lens=lens,
+                           q_offset=zero, cache=cache, cache_pos=zero,
+                           causal=True)
+    cache["pos"] = lens
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    idx = jnp.clip(lens - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
+
+
+def decode(params, cfg, batch, cache):
+    token = batch["token"]
+    pos = cache["pos"]
+    positions = pos[:, None]
+    x = L.embed(params["embed"], token, cfg)
+    h, cache = _run_cached(params, cfg, x, positions, kv_lens=pos + 1,
+                           q_offset=pos, cache=cache, cache_pos=pos,
+                           causal=False)
+    cache["pos"] = pos + 1
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg)[:, 0], cache

@@ -1,0 +1,233 @@
+"""Mamba2 (SSD) attention-free LM — mamba2-130m and the hybrid backbone.
+
+Block: norm -> in_proj -> [z | xBC | dt] -> causal depthwise conv (xBC) ->
+silu -> SSD scan (Pallas kernel / XLA oracle) -> gated RMSNorm(y * silu(z))
+-> out_proj.  Decode keeps a (W-1)-tap conv cache + the (H, P, N) SSM state —
+constant memory in sequence length, which is why the long_500k cells run for
+this family (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ssd_decode_step, ssd_scan
+
+from . import layers as L
+
+
+def _conv_dim(cfg):
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def mamba_block_init(key, cfg):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    cdim = _conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": L.norm_init(cfg, d),
+        "in_proj": L._normal(ks[0], (d, di + cdim + h), d ** -0.5, L.pdt(cfg)),
+        "conv_w": L._normal(ks[1], (cfg.ssm_conv_width, cdim),
+                            cfg.ssm_conv_width ** -0.5, L.pdt(cfg)),
+        "conv_b": jnp.zeros((cdim,), L.pdt(cfg)),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus(-2) ~ 0.12
+        "out_norm": {"scale": jnp.ones((di,), L.pdt(cfg))},
+        "out_proj": L._normal(ks[2], (di, d), di ** -0.5, L.pdt(cfg)),
+    }
+
+
+def mamba_block_axes(cfg):
+    return {
+        "norm": L.norm_axes(cfg),
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "out_norm": {"scale": ("ssm_inner",)},
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + _conv_dim(cfg)]
+    dt = proj[..., di + _conv_dim(cfg):]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv: xbc (B, S, C), w (W, C) -> (B, S, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):                       # width is 4: unrolled taps
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _gated_out_norm(p, y, z, cfg):
+    """Mamba2 RMSNormGated: rmsnorm(y * silu(z)) * scale."""
+    yf = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + cfg.norm_eps)
+            * p["scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_block(p, x, cfg, *, seq_lens=None):
+    """Full-sequence block.  Returns (out, (conv_tail, ssm_state))."""
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_headdim
+    cd = L.cdt(cfg)
+
+    hin = L.apply_norm(p["norm"], x, cfg)
+    proj = hin.astype(cd) @ p["in_proj"].astype(cd)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(cd),
+                                   p["conv_b"].astype(cd)))
+    x_in = xbc[..., :di].reshape(b, s, h, pdim)
+    x_in = L.shard_act(cfg, x_in, ("batch", None, "act_ssm_heads", None))
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    dt = L.shard_act(cfg, dt, ("batch", None, "act_ssm_heads"))
+    A = -jnp.exp(p["A_log"])
+
+    y, hT = ssd_scan(x_in, dt, A, bmat, cmat, D=p["D"], seq_lens=seq_lens,
+                     chunk=cfg.ssm_chunk, impl=cfg.ssd_impl)
+    y = L.shard_act(cfg, y, ("batch", None, "act_ssm_heads", None))
+    y = y.reshape(b, s, di)
+    y = _gated_out_norm(p["out_norm"], y, z, cfg)
+    out = x + (y.astype(cd) @ p["out_proj"].astype(cd)).astype(x.dtype)
+
+    # conv tail for serving: last (W-1) steps of xBC at each row's length
+    width = cfg.ssm_conv_width
+    if seq_lens is None:
+        tail = xbc[:, s - (width - 1):, :]
+    else:
+        padded = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+        tail = jax.vmap(
+            lambda xb, l: jax.lax.dynamic_slice(
+                xb, (l, 0), (width - 1, xb.shape[-1])))(padded,
+                                                        jnp.asarray(seq_lens))
+    return out, (tail, hT)
+
+
+def mamba_block_decode(p, x_t, cfg, conv_cache, state):
+    """One-token block.  x_t: (B, 1, d); conv_cache: (B, W-1, C); state f32."""
+    b = x_t.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_headdim
+    cd = L.cdt(cfg)
+
+    hin = L.apply_norm(p["norm"], x_t, cfg)
+    proj = hin.astype(cd) @ p["in_proj"].astype(cd)
+    z, xbc, dt = _split_proj(cfg, proj)                   # (B, 1, *)
+    window = jnp.concatenate([conv_cache, xbc.astype(conv_cache.dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(cd),
+                          p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+    xbc_t = jax.nn.silu(conv_out)                         # (B, C)
+    x_in = xbc_t[:, :di].reshape(b, h, pdim)
+    bmat, cmat = xbc_t[:, di:di + n], xbc_t[:, di + n:]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = ssd_decode_step(x_in, dt_t, A, bmat, cmat, state, D=p["D"])
+    y = y.reshape(b, 1, di)
+    y = _gated_out_norm(p["out_norm"], y, z, cfg)
+    out = x_t + (y.astype(cd) @ p["out_proj"].astype(cd)).astype(x_t.dtype)
+    return out, (window[:, 1:, :], state)
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def axes(cfg):
+    return {"embed": L.embed_axes(cfg),
+            "blocks": L.stack_axes(mamba_block_axes(cfg)),
+            "final_norm": L.norm_axes(cfg)}
+
+
+def init(key, cfg):
+    k_emb, k_blocks = jax.random.split(key)
+    params = {"embed": L.embed_init(k_emb, cfg),
+              "blocks": L.stack_init(k_blocks, cfg.n_layers,
+                                     lambda k: mamba_block_init(k, cfg)),
+              "final_norm": L.norm_init(cfg, cfg.d_model)}
+    return params, axes(cfg)
+
+
+def train_logits(params, cfg, batch):
+    tokens = batch["tokens"]
+    seq_lens = batch.get("lens")
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        h, _ = mamba_block(lp, h, cfg, seq_lens=seq_lens)
+        return h, None
+
+    h, _ = jax.lax.scan(L.remat_wrap(body, cfg), x, params["blocks"])
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg), {}
+
+
+def make_cache(cfg, batch_size: int, max_len: int = 0, dtype=None):
+    """SSM caches are length-independent: conv tail + state (+ pos)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    lcount = cfg.n_layers
+    return {
+        "conv": jnp.zeros((lcount, batch_size, cfg.ssm_conv_width - 1,
+                           _conv_dim(cfg)), dtype),
+        "state": jnp.zeros((lcount, batch_size, cfg.n_ssm_heads,
+                            cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch, cache):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    lens = batch.get("lens")
+    lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, lp):
+        h, (tail, hT) = mamba_block(lp, h, cfg, seq_lens=lens)
+        return h, (tail, hT)
+
+    h, (tails, states) = jax.lax.scan(body, x, params["blocks"])
+    cache = dict(cache)
+    cache["conv"] = tails.astype(cache["conv"].dtype)
+    cache["state"] = states
+    cache["pos"] = lens
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    idx = jnp.clip(lens - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
+
+
+def decode(params, cfg, batch, cache):
+    token = batch["token"]
+    x = L.embed(params["embed"], token, cfg)
+
+    def body(carry, xs):
+        h, = carry
+        lp, cc, st = xs
+        h, (cc, st) = mamba_block_decode(lp, h, cfg, cc, st)
+        return (h,), (cc, st)
+
+    (h,), (conv_new, state_new) = jax.lax.scan(
+        body, (x,), (params["blocks"], cache["conv"], cache["state"]))
+    cache = dict(cache)
+    cache["conv"], cache["state"] = conv_new, state_new
+    cache["pos"] = cache["pos"] + 1
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.unembed(params["embed"], h, cfg)[:, 0], cache

@@ -1,0 +1,1 @@
+from .ft import FaultTolerantLoop, StragglerWatchdog  # noqa: F401

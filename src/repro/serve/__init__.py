@@ -1,0 +1,2 @@
+from .engine import ServeEngine  # noqa: F401
+from .speculative import speculative_decode  # noqa: F401

@@ -1,0 +1,123 @@
+"""Speculative decoding — the first-fault contract at serving scale.
+
+A small draft model runs K tokens ahead (the speculative vector load); the
+target model verifies all K in ONE forward pass.  Acceptance is the maximal
+matching prefix — ``brkb`` over the mismatch predicate, exactly the FFR
+partition of paper §2.3.3: lanes before the first fault commit, the first
+faulting lane is re-executed architecturally (here: the target's own token is
+substituted), everything after is discarded and retried next round.
+
+This implementation is greedy-match speculative decoding (deterministic
+targets), which keeps the FFR analogy exact: accepted ⇔ bit-identical to
+what the target would have produced alone (asserted in tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as PT
+from repro.core import predicate as P
+from repro.models import get_model
+
+
+def _greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
+                       prompt, *, n_tokens: int, k_draft: int = 4,
+                       max_len: int | None = None):
+    """Greedy speculative decoding for a single sequence (B=1 lanes are the
+    draft positions — the 'vector' here is the speculation window).
+
+    Returns (tokens (n_tokens,), stats dict with acceptance counts).
+    """
+    tmodel, dmodel = get_model(target_cfg), get_model(draft_cfg)
+    b, s = prompt.shape
+    assert b == 1
+    max_len = max_len or (s + n_tokens + k_draft + 1)
+
+    tcache = tmodel.make_cache(target_cfg, 1, max_len)
+    dcache = dmodel.make_cache(draft_cfg, 1, max_len)
+    lens = jnp.array([s], jnp.int32)
+    tlog, tcache = tmodel.prefill(target_params, target_cfg,
+                                  {"tokens": prompt, "lens": lens}, tcache)
+    dlog, dcache = dmodel.prefill(draft_params, draft_cfg,
+                                  {"tokens": prompt, "lens": lens}, dcache)
+
+    out = []
+    cur = _greedy(tlog)                      # first token from the target
+    out.append(int(cur[0]))
+    accepted_hist = []
+
+    decode_t = jax.jit(lambda p, b_, c: tmodel.decode(p, target_cfg, b_, c))
+    decode_d = jax.jit(lambda p, b_, c: dmodel.decode(p, draft_cfg, b_, c))
+    prefill_t = jax.jit(lambda p, b_, c: tmodel.prefill(p, target_cfg, b_, c))
+
+    while len(out) < n_tokens:
+        # ---- draft speculates k tokens (the speculative load) ----
+        draft_toks = []
+        dtok = cur
+        dc = dcache
+        for _ in range(k_draft):
+            dlog, dc = decode_d(draft_params, {"token": dtok[:, None]}, dc)
+            dtok = _greedy(dlog)
+            draft_toks.append(dtok)
+        window = jnp.stack([cur] + draft_toks, axis=1)      # (1, K+1)
+
+        # ---- target verifies the window in one pass ----
+        # prefill-style forward over the window against the current cache:
+        # logits at every window position (teacher forcing)
+        tlogs = []
+        tc = tcache
+        for i in range(window.shape[1]):
+            tl, tc = decode_t(target_params, {"token": window[:, i:i + 1]}, tc)
+            tlogs.append(tl)
+        tlogs = jnp.stack(tlogs, axis=1)                    # (1, K+1, V)
+        tgt_next = _greedy(tlogs[0])                        # (K+1,)
+
+        # ---- FFR acceptance: brkb over the mismatch predicate ----
+        draft_vec = jnp.stack([t[0] for t in draft_toks])   # (K,)
+        match = draft_vec == tgt_next[:-1]
+        acc = PT.accept_prefix(match)                       # maximal prefix
+        n_acc = int(P.cntp(acc))
+        accepted_hist.append(n_acc)
+
+        # accepted tokens commit; the first mismatching lane is replaced by
+        # the target's own token (the architectural retry of the first fault)
+        commit = [int(draft_vec[i]) for i in range(n_acc)]
+        commit.append(int(tgt_next[n_acc]))
+        for t in commit:
+            out.append(t)
+            if len(out) >= n_tokens:
+                break
+
+        # ---- roll caches back to the committed position ----
+        # Rejected lanes' K/V are inert (whilelt predication by pos) and the
+        # already-written accepted K/V stays valid, so rollback = set pos.
+        if n_acc == k_draft:
+            # fully-accepted window: the draft never wrote K/V for its last
+            # speculation; one extra decode keeps its cache gap-free
+            _, dc = decode_d(draft_params, {"token": draft_toks[-1][:, None]}, dc)
+        n_commit = n_acc + 1
+        new_pos = tcache["pos"] + n_commit
+        tcache = _rollback(tc, new_pos)
+        dcache = _rollback(dc, new_pos)
+        cur = jnp.asarray([out[-1]], jnp.int32)
+
+    stats = {"accept_counts": accepted_hist,
+             "mean_accepted": (sum(accepted_hist) / len(accepted_hist)
+                               if accepted_hist else 0.0),
+             "k_draft": k_draft}
+    return jnp.asarray(out[:n_tokens], jnp.int32), stats
+
+
+def _rollback(cache, new_pos):
+    """Set the cache position (stale slots beyond pos are inert: every
+    attention read is predicated by kv_lens = pos + 1 — whilelt makes
+    rollback free, no memory needs clearing)."""
+    cache = dict(cache)
+    cache["pos"] = jnp.broadcast_to(new_pos, cache["pos"].shape)
+    return cache

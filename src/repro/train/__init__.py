@@ -1,0 +1,2 @@
+from .loss import cross_entropy_loss  # noqa: F401
+from .step import make_serve_fns, make_train_step, init_state  # noqa: F401

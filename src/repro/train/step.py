@@ -1,0 +1,121 @@
+"""Train / serve step factories — the functions the launcher jits under pjit.
+
+The train step is one fused fwd+bwd+AdamW update; params and optimizer state
+shard per the logical-axis rules (FSDP over 'data', TP over 'model', DP over
+'pod'×'data'); metrics come out replicated.  ``serve`` returns prefill and
+decode step functions against donated caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+
+from .loss import cross_entropy_loss
+
+
+def init_state(key, cfg):
+    """Real initialization (small models / examples).  Returns (state, axes)."""
+    model = get_model(cfg)
+    params, axes = model.init(key, cfg)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}, axes
+
+
+def abstract_state(cfg):
+    """ShapeDtypeStruct state for lowering (no allocation) + axes trees."""
+    model = get_model(cfg)
+    params = jax.eval_shape(
+        lambda k: model.init(k, cfg)[0], jax.random.PRNGKey(0))
+    opt = jax.eval_shape(adamw_init, params)
+    state = {"params": params, "opt": opt,
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    p_axes = model.axes(cfg)
+    state_axes = {"params": p_axes, "opt": {"m": p_axes, "v": p_axes,
+                                            "count": ()},
+                  "step": ()}
+    return state, state_axes
+
+
+def make_train_step(cfg, *, peak_lr=3e-4, warmup=100, total=10000,
+                    grad_clip=1.0, lb_coef=0.02, z_coef=1e-3,
+                    z_loss=0.0, microbatch: int = 1) -> Callable:
+    """One fused fwd+bwd+AdamW step.
+
+    ``microbatch`` > 1 splits the global batch into that many accumulation
+    chunks via lax.scan (activation memory / microbatch; grads accumulate in
+    f32 sharded like params).  The split is data-sharding-preserving: the
+    batch dim is reshaped (B,) -> (B/m, m) then transposed, so each microstep
+    keeps every data shard busy (no resharding).
+    """
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, cfg, batch)
+        loss = cross_entropy_loss(logits, batch["labels"], z_loss=z_loss)
+        if "lb_loss" in aux:
+            loss = loss + lb_coef * aux["lb_loss"] + z_coef * aux["router_z"]
+        return loss, aux
+
+    def _grads(params, batch):
+        if microbatch <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatch == 0, (b, microbatch)
+            xs = x.reshape((b // microbatch, microbatch) + x.shape[1:])
+            return jnp.moveaxis(xs, 1, 0)       # (m, B/m, ...) shard-local
+
+        mbatch = jax.tree.map(split, batch)
+
+        def mstep(carry, mb):
+            gsum, loss_sum, aux_sum = carry
+            (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            gsum = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                gsum, g)
+            loss_sum = loss_sum + loss
+            aux_sum = jax.tree.map(lambda a, b_: a + b_, aux_sum, aux)
+            return (gsum, loss_sum, aux_sum), None
+
+        gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        aux0 = jax.eval_shape(lambda p, b_: loss_fn(p, b_)[1], params,
+                              jax.tree.map(lambda x: x[0], mbatch))
+        aux0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aux0)
+        (gsum, loss_sum, aux_sum), _ = jax.lax.scan(
+            mstep, (gz, jnp.float32(0), aux0), mbatch)
+        inv = 1.0 / microbatch
+        return ((loss_sum * inv,
+                 jax.tree.map(lambda a: a * inv, aux_sum)),
+                jax.tree.map(lambda g: g * inv, gsum))
+
+    def train_step(state, batch):
+        (loss, aux), grads = _grads(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = cosine_warmup(state["step"], peak_lr=peak_lr, warmup=warmup,
+                           total=total)
+        params, opt = adamw_update(grads, state["opt"], state["params"], lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        metrics.update({k: v for k, v in aux.items()})
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_serve_fns(cfg):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, cfg, batch, cache)
+
+    def decode_step(params, batch, cache):
+        return model.decode(params, cfg, batch, cache)
+
+    return prefill_step, decode_step

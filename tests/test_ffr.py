@@ -1,0 +1,66 @@
+"""First-fault register semantics (paper §2.3.3, Figs. 4–5)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ffr as F
+from repro.core import predicate as P
+
+
+def test_fig4_gather_semantics():
+    """Paper Fig. 4: A[2] invalid => lanes 2,3 suppressed; retry starting at
+    lane 2 as first-active => it is NOT suppressed (reads fill; caller traps)."""
+    base = jnp.arange(8.0)
+    idx = jnp.array([0, 1, 100, 3])
+    # iteration 1: all lanes governed
+    vals, ffr = F.ldff(base, idx, P.ptrue(4))
+    assert ffr.tolist() == [True, True, False, False]
+    assert vals.tolist() == [0.0, 1.0, 0.0, 0.0]
+    # iteration 2: first two lanes done; faulting lane now first-active
+    p2 = jnp.array([False, False, True, True])
+    vals2, ffr2 = F.ldff(base, idx, p2)
+    # brkb over fault: the first ACTIVE lane faults => empty partition,
+    # lane 0 of the partition inactive — the caller's "trap" check.
+    assert ffr2.tolist() == [False, False, False, False]
+    assert not bool(ffr2[2])
+
+
+@given(st.integers(min_value=0, max_value=400), st.integers(min_value=4, max_value=160))
+@settings(max_examples=40, deadline=None)
+def test_strlen_matches_python(n, vl):
+    buf = np.zeros(n + 64, np.int32)
+    buf[:n] = 5
+    got = int(F.strlen(jnp.asarray(buf), 0, vl=vl))
+    assert got == n
+
+
+def test_strlen_nonzero_start():
+    buf = np.zeros(64, np.int32)
+    buf[3:20] = 9
+    assert int(F.strlen(jnp.asarray(buf), 3, vl=8)) == 17
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_ldff_partition_is_prefix_of_safe_lanes(data):
+    n = data.draw(st.integers(min_value=1, max_value=64))
+    vl = data.draw(st.integers(min_value=1, max_value=32))
+    base = np.arange(n, dtype=np.float64)
+    idx = np.array(data.draw(st.lists(
+        st.integers(min_value=-5, max_value=n + 5), min_size=vl, max_size=vl)))
+    g = np.array(data.draw(st.lists(st.booleans(), min_size=vl, max_size=vl)), bool)
+    vals, ffr = F.ldff(jnp.asarray(base), jnp.asarray(idx), jnp.asarray(g))
+    ffr = np.array(ffr)
+    fault = (idx < 0) | (idx >= n)
+    # reference semantics
+    broken = False
+    for i in range(vl):
+        if g[i] and fault[i]:
+            broken = True
+        want = g[i] and not broken
+        assert ffr[i] == want
+        if ffr[i]:
+            assert float(vals[i]) == base[idx[i]]
+        else:
+            assert float(vals[i]) == 0.0

@@ -1,0 +1,81 @@
+"""SSD kernel vs sequential oracle: chunk sweeps, dtypes, ragged lengths."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd_decode_step, ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _mk(bz, s, h, p, n, dtype=jnp.float32, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(bz, s, h, p), dtype)
+    dt = jnp.asarray(np.abs(rng.randn(bz, s, h)) * 0.1 + 0.01, dtype)
+    A = jnp.asarray(-np.abs(rng.randn(h)) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.randn(bz, s, n) * 0.3, dtype)
+    C = jnp.asarray(rng.randn(bz, s, n) * 0.3, dtype)
+    D = jnp.asarray(rng.randn(h), jnp.float32)
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_kernel_matches_sequential_oracle(chunk):
+    x, dt, A, B, C, D = _mk(2, 256, 3, 16, 32)
+    y_ref, h_ref = ssd_ref(x, dt, A, B, C, D)
+    y, hT = ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **TOL)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h_ref), **TOL)
+
+
+def test_chunk_invariance():
+    """VLA contract: identical results at every chunk size (= vector length)."""
+    x, dt, A, B, C, D = _mk(1, 192, 2, 8, 16, seed=2)
+    outs = [np.asarray(ssd_scan(x, dt, A, B, C, D, chunk=c)[0]) for c in (32, 64, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+def test_ragged_tail_predication():
+    """Sequence shorter than padded length: dt-zeroing must make padded lanes
+    inert (state unchanged, outputs for valid prefix equal to unpadded run)."""
+    x, dt, A, B, C, D = _mk(2, 100, 2, 8, 16, seed=3)
+    y_full, h_full = ssd_ref(x, dt, A, B, C, D)
+    y, hT = ssd_scan(x, dt, A, B, C, D, seq_lens=jnp.array([100, 60]), chunk=64)
+    np.testing.assert_allclose(np.asarray(y)[0], np.asarray(y_full)[0], **TOL)
+    # row 1: only the first 60 steps ran
+    y60, h60 = ssd_ref(x[1:2, :60], dt[1:2, :60], A, B[1:2, :60], C[1:2, :60], D)
+    np.testing.assert_allclose(np.asarray(y)[1, :60], np.asarray(y60)[0], **TOL)
+    np.testing.assert_allclose(np.asarray(hT)[1], np.asarray(h60)[0], **TOL)
+
+
+def test_xla_impl_matches_kernel():
+    x, dt, A, B, C, D = _mk(1, 128, 2, 8, 16, seed=4)
+    a = ssd_scan(x, dt, A, B, C, D, chunk=64, impl="kernel")[0]
+    b = ssd_scan(x, dt, A, B, C, D, chunk=64, impl="xla")[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_matches_scan():
+    """Prefill state + N decode steps == full-scan prefix (serving identity)."""
+    x, dt, A, B, C, D = _mk(1, 64, 2, 8, 16, seed=5)
+    y_all, _ = ssd_ref(x, dt, A, B, C, D)
+    _, h = ssd_scan(x[:, :48], dt[:, :48], A, B[:, :48], C[:, :48], D, chunk=16)
+    ys = []
+    for t in range(48, 64):
+        y_t, h = ssd_decode_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], h, D)
+        ys.append(y_t)
+    got = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_all)[:, 48:], **TOL)
+
+
+def test_bf16_inputs():
+    x, dt, A, B, C, D = _mk(1, 128, 2, 8, 16, seed=6)
+    xb, dtb = x.astype(jnp.bfloat16), dt.astype(jnp.bfloat16)
+    Bb, Cb = B.astype(jnp.bfloat16), C.astype(jnp.bfloat16)
+    y, _ = ssd_scan(xb, dtb, A, Bb, Cb, D, chunk=64)
+    y_ref, _ = ssd_ref(xb, dtb, A, Bb, Cb, D)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

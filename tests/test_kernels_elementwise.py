@@ -1,0 +1,58 @@
+"""daxpy + fadda kernels vs oracles: shape/VL/dtype sweeps (paper Figs. 2, §2.4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.daxpy import daxpy
+from repro.kernels.daxpy.ref import daxpy_ref
+from repro.kernels.fadda import fadda
+from repro.kernels.fadda.ref import fadda_ref
+
+
+@pytest.mark.parametrize("length,n,block", [
+    (1000, 777, 128), (128, 128, 128), (4096, 4095, 1024), (50, 10, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_daxpy_matches_oracle(length, n, block, dtype):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(length), dtype)
+    y = jnp.asarray(rng.randn(length), dtype)
+    got = daxpy(x, y, 2.5, n, block=block)
+    want = daxpy_ref(x, y, jnp.asarray(2.5, dtype), n)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2, atol=1e-2)
+
+
+@given(st.integers(min_value=1, max_value=600), st.sampled_from([128, 256]))
+@settings(max_examples=20, deadline=None)
+def test_daxpy_vl_agnostic(n, block):
+    """One kernel source, any (n, VL): the Fig. 2 contract."""
+    rng = np.random.RandomState(n)
+    x = jnp.asarray(rng.randn(n).astype(np.float32))
+    y = jnp.asarray(rng.randn(n).astype(np.float32))
+    got = daxpy(x, y, -1.25, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(daxpy_ref(x, y, -1.25, n)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("length,n,block", [
+    (600, 600, 128), (600, 421, 128), (1024, 1024, 512), (3, 3, 512),
+])
+def test_fadda_bit_exact(length, n, block):
+    rng = np.random.RandomState(1)
+    x = rng.randn(length).astype(np.float32)
+    got = fadda(jnp.asarray(x), n, block=block)
+    assert np.float32(got) == fadda_ref(x, n)
+
+
+def test_fadda_vl_invariant_but_ordered():
+    """Different VLs give the SAME bits (the whole point of fadda); and the
+    result differs from the tree sum on an adversarial sequence, proving the
+    ordering is real."""
+    x = np.array([1e8, 1.0, -1e8, 1.0] * 64, np.float32)
+    r128 = np.float32(fadda(jnp.asarray(x), block=128))
+    r512 = np.float32(fadda(jnp.asarray(x), block=512))
+    assert r128 == r512 == fadda_ref(x)
+    assert r128 != np.float32(x.astype(np.float32).sum())  # tree sum loses the 1.0s

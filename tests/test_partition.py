@@ -1,0 +1,112 @@
+"""Vector partitioning + scalarized sub-loops (paper §2.3.4–2.3.5, Fig. 6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as PT
+from repro.core import predicate as P
+
+
+def _random_list(rng, n_nodes, length):
+    """Build a linked list of `length` nodes inside an `n_nodes` arena."""
+    order = rng.permutation(n_nodes)[:length]
+    nxt = np.full(n_nodes, -1, np.int32)
+    for a, b in zip(order[:-1], order[1:]):
+        nxt[a] = b
+    vals = rng.integers(0, 1 << 30, n_nodes).astype(np.int64)
+    return int(order[0]) if length else -1, nxt, vals, order
+
+
+@given(st.integers(min_value=0, max_value=20), st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=1000))
+@settings(max_examples=40, deadline=None)
+def test_linked_list_xor_fig6(length, vl, seed):
+    """The paper's Fig. 6 split loop: serial pointer chase (pnext/cpy/ctermeq)
+    + vectorized gather/eor + horizontal eorv, vs the scalar loop."""
+    rng = np.random.default_rng(seed)
+    head, nxt, vals, order = _random_list(rng, 32, length)
+    nxt_j, vals_j = jnp.asarray(nxt), jnp.asarray(vals)
+
+    # scalar reference
+    want, p = 0, head
+    while p != -1:
+        want ^= int(vals[p])
+        p = nxt[p]
+
+    def outer(res_ptr):
+        res, ptr = res_ptr
+
+        def lane_step(state, p_lane, lane):
+            cur, z = state
+            z = P.cpy(p_lane, cur, z)
+            return (nxt_j[cur], z), nxt_j[cur] >= 0
+
+        (ptr, zvec), part = PT.serial_subloop(
+            P.ptrue(vl), lane_step, (ptr, jnp.zeros(vl, jnp.int32)))
+        gathered = jnp.take(vals_j, jnp.clip(zvec, 0, None), mode="fill", fill_value=0)
+        from repro.core import reductions as R
+        res = res ^ R.eorv(part, gathered)
+        return res, ptr
+
+    res, ptr = jnp.int64(0), jnp.asarray(head, jnp.int32)
+    for _ in range((length // vl) + 2):     # python strip-mine loop (test only)
+        if int(ptr) < 0:
+            break
+        res, ptr = outer((res, ptr))
+    assert int(res) == want
+
+
+def test_partitioned_while_batched_countdown():
+    """Lanes count down from different starts; each lane must stop at 0 and
+    keep its final value (merging semantics), like batched decode stop-tokens."""
+    starts = jnp.array([3, 0, 5, 1], jnp.int32)
+
+    def cond(state, p):
+        return state > 0
+
+    def body(state, p):
+        return P.merging(p, state - 1, state)
+
+    final, p_final = PT.partitioned_while(cond, body, starts, P.ptrue(4))
+    assert final.tolist() == [0, 0, 0, 0]
+    assert not bool(jnp.any(p_final))
+
+
+def test_partitioned_while_respects_inactive_lanes():
+    starts = jnp.array([2, 7], jnp.int32)
+    p0 = jnp.array([True, False])
+
+    def cond(state, p):
+        return state > 0
+
+    def body(state, p):
+        return P.merging(p, state - 1, state)
+
+    final, _ = PT.partitioned_while(cond, body, starts, p0)
+    assert final.tolist() == [0, 7]
+
+
+def test_brkpb_propagates_break_across_iterations():
+    g = P.ptrue(4)
+    # previous partition broke early (last lane inactive) => empty partition now
+    prev = jnp.array([True, True, False, False])
+    out = PT.brkpb(g, prev, jnp.zeros(4, bool))
+    assert not bool(jnp.any(out))
+    # previous partition full => normal brkb
+    prev = P.ptrue(4)
+    out = PT.brkpb(g, prev, jnp.array([False, False, True, False]))
+    assert out.tolist() == [True, True, False, False]
+
+
+def test_partitioned_while_is_jittable():
+    def cond(state, p):
+        return state < 10
+
+    def body(state, p):
+        return P.merging(p, state + 2, state)
+
+    f = jax.jit(lambda s: PT.partitioned_while(cond, body, s, P.ptrue(3))[0])
+    out = f(jnp.array([0, 5, 9], jnp.int32))
+    assert out.tolist() == [10, 11, 11]

@@ -1,0 +1,121 @@
+"""Property tests for the SVE predicate algebra (paper §2.3 semantics)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as PT
+from repro.core import predicate as P
+
+VL = st.integers(min_value=1, max_value=96)
+
+
+def bitvec(data, vl):
+    return np.array(data.draw(st.lists(st.booleans(), min_size=vl, max_size=vl)), bool)
+
+
+@given(st.data())
+@settings(max_examples=80, deadline=None)
+def test_whilelt_matches_sequential_loop(data):
+    vl = data.draw(VL)
+    start = data.draw(st.integers(min_value=-10, max_value=200))
+    limit = data.draw(st.integers(min_value=-10, max_value=200))
+    p = np.array(P.whilelt(start, limit, vl))
+    want = np.array([(start + i) < limit for i in range(vl)])
+    assert (p == want).all()
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_whilelt_nzcv_flags(data):
+    """Table 1: N=first active, Z=none active, C=!last active."""
+    vl = data.draw(VL)
+    start = data.draw(st.integers(min_value=0, max_value=100))
+    limit = data.draw(st.integers(min_value=0, max_value=100))
+    p = P.whilelt(start, limit, vl)
+    n, z, c = bool(P.first(p)), bool(P.none(p)), bool(P.not_last(p))
+    assert n == (start < limit)
+    assert z == (start >= limit)
+    assert c == ((start + vl - 1) >= limit)
+
+
+@given(st.data())
+@settings(max_examples=80, deadline=None)
+def test_brkb_brka_partition_laws(data):
+    vl = data.draw(VL)
+    g = bitvec(data, vl)
+    c = bitvec(data, vl)
+    brkb = np.array(PT.brkb(jnp.asarray(g), jnp.asarray(c)))
+    brka = np.array(PT.brka(jnp.asarray(g), jnp.asarray(c)))
+    # reference: sequential scan
+    ref_b, ref_a, broken = [], [], False
+    for i in range(vl):
+        hit = g[i] and c[i]
+        ref_b.append(g[i] and not broken and not hit)
+        ref_a.append(g[i] and not broken)
+        if hit:
+            broken = True
+    assert (brkb == np.array(ref_b)).all()
+    assert (brka == np.array(ref_a)).all()
+    # laws: brkb <= brka <= g ; brka \ brkb is at most one lane (the break lane)
+    assert not (brkb & ~brka).any()
+    assert not (brka & ~g).any()
+    assert (brka & ~brkb).sum() <= 1
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_pnext_enumerates_active_lanes_in_order(data):
+    vl = data.draw(VL)
+    g = bitvec(data, vl)
+    cur = P.pfalse(vl)
+    seen = []
+    for _ in range(int(g.sum()) + 1):
+        cur = P.pnext(jnp.asarray(g), cur)
+        if not bool(jnp.any(cur)):
+            break
+        assert int(P.cntp(cur)) == 1
+        seen.append(int(jnp.argmax(cur)))
+    assert seen == list(np.where(g)[0])
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_pfirst_plast(data):
+    vl = data.draw(VL)
+    g = bitvec(data, vl)
+    pf = np.array(P.pfirst(jnp.asarray(g)))
+    pl = np.array(P.plast(jnp.asarray(g)))
+    if g.any():
+        assert pf.sum() == 1 and np.argmax(pf) == np.where(g)[0][0]
+        assert pl.sum() == 1 and np.argmax(pl) == np.where(g)[0][-1]
+    else:
+        assert not pf.any() and not pl.any()
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_accept_prefix_is_maximal_matching_prefix(data):
+    vl = data.draw(VL)
+    m = bitvec(data, vl)
+    acc = np.array(PT.accept_prefix(jnp.asarray(m)))
+    k = 0
+    while k < vl and m[k]:
+        k += 1
+    want = np.zeros(vl, bool)
+    want[:k] = True
+    assert (acc == want).all()
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_cntp_zeroing_merging(data):
+    vl = data.draw(VL)
+    g = bitvec(data, vl)
+    x = np.arange(vl, dtype=np.float32) + 1
+    assert int(P.cntp(jnp.asarray(g))) == int(g.sum())
+    z = np.array(P.zeroing(jnp.asarray(g), jnp.asarray(x)))
+    assert (z == np.where(g, x, 0)).all()
+    old = -np.ones(vl, np.float32)
+    mrg = np.array(P.merging(jnp.asarray(g), jnp.asarray(x), jnp.asarray(old)))
+    assert (mrg == np.where(g, x, old)).all()

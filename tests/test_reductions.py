@@ -1,0 +1,72 @@
+"""Horizontal operations: ordered fadda, predicated reductions (paper §2.4)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predicate as P
+from repro.core import reductions as R
+
+floats = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False, width=32)
+
+
+@given(st.lists(floats, min_size=1, max_size=200), st.floats(min_value=-10, max_value=10))
+@settings(max_examples=60, deadline=None)
+def test_fadda_is_bit_identical_to_scalar_loop(xs, init):
+    x = np.array(xs, np.float32)
+    acc = np.float32(init)
+    for v in x:
+        acc = np.float32(acc + v)
+    got = R.fadda(None, jnp.asarray(x), init=np.float32(init))
+    assert np.float32(got) == acc
+
+
+@given(st.lists(floats, min_size=1, max_size=200),
+       st.sampled_from([4, 8, 16, 64, 128]))
+@settings(max_examples=40, deadline=None)
+def test_fadda_tiled_is_vl_invariant(xs, vl):
+    """The paper's §3.3 requirement: the strictly-ordered reduction gives the
+    SAME answer at every vector length — that is its whole purpose."""
+    x = np.array(xs, np.float32)
+    ref = np.float32(R.fadda(None, jnp.asarray(x)))
+    got = np.float32(R.fadda_tiled(None, jnp.asarray(x), vl=vl))
+    assert got == ref
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_predicated_reductions_match_numpy(data):
+    vl = data.draw(st.integers(min_value=1, max_value=64))
+    x = np.array(data.draw(st.lists(st.integers(0, 1 << 20), min_size=vl, max_size=vl)),
+                 np.int32)
+    g = np.array(data.draw(st.lists(st.booleans(), min_size=vl, max_size=vl)), bool)
+    xg, gj = jnp.asarray(x), jnp.asarray(g)
+    want_xor = int(np.bitwise_xor.reduce(x[g])) if g.any() else 0
+    want_or = int(np.bitwise_or.reduce(x[g])) if g.any() else 0
+    assert int(R.eorv(gj, xg)) == want_xor
+    assert int(R.orv(gj, xg)) == want_or
+    got_max = int(R.smaxv(gj, xg))
+    want_max = int(x[g].max()) if g.any() else np.iinfo(np.int32).min
+    assert got_max == want_max
+
+
+@given(st.lists(floats, min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_pairwise_sum_close_and_deterministic(xs):
+    x = np.array(xs, np.float32)
+    a = float(R.pairwise_sum(jnp.asarray(x)))
+    b = float(R.pairwise_sum(jnp.asarray(x)))
+    assert a == b
+    np.testing.assert_allclose(a, np.sum(x, dtype=np.float64), rtol=1e-4, atol=1e-2)
+
+
+def test_fadda_batched_axis():
+    x = np.random.RandomState(1).randn(5, 37).astype(np.float32)
+    got = np.array(R.fadda(None, jnp.asarray(x)))
+    want = np.zeros(5, np.float32)
+    for r in range(5):
+        acc = np.float32(0)
+        for v in x[r]:
+            acc = np.float32(acc + v)
+        want[r] = acc
+    assert (got == want).all()

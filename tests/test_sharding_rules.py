@@ -1,0 +1,50 @@
+"""Mesh-agnostic sharding resolution: divisibility fallbacks, axis reuse,
+and the kv_heads -> kv_seq flash-decode fallback."""
+
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+
+# TP weight: heads divisible by model -> sharded
+assert SH.spec_for((256, 512), ("embed", "heads"), mesh) == P("data", "model")
+# fused kv out dim not divisible by model=4 -> replicate (fallback)
+assert SH.spec_for((64, 6), ("embed", "kv_heads"), mesh) == P("data", None)
+# same mesh axis never reused within one array
+assert SH.spec_for((8, 8), ("mlp", "heads"), mesh) == P("model", None)
+# batch folds pod x data when present
+mesh3 = make_mesh((2, 2, 4), ("pod", "data", "model"))
+assert SH.spec_for((8, 128), ("batch", None), mesh3) == P(("pod", "data"), None)
+# batch=1 (long_500k) -> fully replicated
+assert SH.spec_for((1, 128), ("batch", None), mesh3) == P(None, None)
+# kv cache: kv_heads=2 can't take model=4 => SEQ takes it (flash-decode)
+spec = SH.spec_for((4, 2, 64, 32), ("batch", "act_kv_heads", "kv_seq", None), mesh)
+assert spec == P("data", None, "model", None), spec
+# kv_heads=4 divisible => heads take model, seq replicated
+spec = SH.spec_for((4, 4, 64, 32), ("batch", "act_kv_heads", "kv_seq", None), mesh)
+assert spec == P("data", "model", None, None), spec
+# mesh-agnosticism: same logical axes resolve on ANY mesh shape
+for shape, names in [((4,), ("data",)), ((2, 2), ("data", "model")),
+                     ((2, 2, 2), ("pod", "data", "model"))]:
+    m = make_mesh(shape, names)
+    sp = SH.spec_for((16, 256, 512), ("layers", "embed", "mlp"), m)
+    assert sp[0] is None
+print("sharding rules OK")
+"""
+
+
+def test_sharding_rules_subprocess():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "sharding rules OK" in r.stdout
