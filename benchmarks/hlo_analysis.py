@@ -181,9 +181,10 @@ class HloModule:
             out.append(cur.strip())
         names = []
         for o in out:
-            o = o.strip()
-            if o.startswith("%"):
-                names.append(o[1:])
+            # operand tokens print as either "%name" or "f32[..]{..} %name"
+            m = re.search(r"%([\w\.\-]+)", o)
+            if m:
+                names.append(m.group(1))
         return names
 
     def _op_cost(self, op: _Op, ops: dict, in_fusion: bool) -> Cost:

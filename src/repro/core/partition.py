@@ -119,6 +119,97 @@ def serial_subloop(
     return state, visited
 
 
+# ---------------------------------------------------------------------------
+# Lane permutation (SVE §2.3.4/§2.3.5: compact / splice / lasta / lastb)
+# ---------------------------------------------------------------------------
+#
+# These are the data movements that make the partition algebra *useful* at
+# serving scale: once a partition has gone ragged (finished requests = inactive
+# lanes), ``compact`` squeezes the survivors into the lowest-numbered lanes and
+# ``splice`` refills the tail from a second vector — both pure index gathers,
+# so a continuous-batching scheduler can keep the lane vector dense without
+# recompilation (the VLA contract applied to traffic instead of loops).
+
+def compact_perm(p: Array) -> Array:
+    """Lane permutation realising SVE ``compact``: active lane indices first
+    (in ascending order), inactive lane indices after (also in order).
+
+    Shape (*batch, VL) int32.  ``x[..., compact_perm(p)]`` densifies the
+    active lanes; applying the same permutation to every per-lane side table
+    (and to each cache array along its batch axis — see
+    ``repro.models.gather_lanes``) keeps request state consistent.
+    """
+    # stable argsort of the "inactive" flag: active (0) lanes first, original
+    # relative order preserved on both sides.
+    return jnp.argsort(~p, axis=-1, stable=True).astype(jnp.int32)
+
+
+def compact(p: Array, x: Array, fill=None) -> Array:
+    """SVE ``compact``: copy the active elements of ``x`` to the
+    lowest-numbered lanes; remaining lanes read as ``fill`` (0 when None,
+    matching the architected zeroing of the tail).
+
+    Operates on the trailing axis; ``p`` broadcasts against leading axes.
+    """
+    perm = compact_perm(p)
+    out = jnp.take_along_axis(x, jnp.broadcast_to(perm, jnp.broadcast_shapes(p.shape, x.shape)), axis=-1)
+    n_active = jnp.sum(p.astype(jnp.int32), axis=-1, keepdims=True)
+    lane = jnp.arange(x.shape[-1], dtype=jnp.int32)
+    tail = lane >= n_active
+    fill_v = jnp.zeros((), x.dtype) if fill is None else jnp.asarray(fill, x.dtype)
+    return jnp.where(tail, fill_v, out)
+
+
+def splice(p: Array, a: Array, b: Array) -> Array:
+    """SVE ``splice``: the contiguous segment of ``a`` from the FIRST to the
+    LAST active lane of ``p`` is copied to the low lanes of the result; the
+    remaining lanes are filled with the lowest elements of ``b``.  With an
+    empty predicate the result is ``b`` unchanged.
+
+    Together with ``compact`` this is the admission path of continuous
+    batching: ``splice(active_after_compact, survivors, newcomers)`` densely
+    packs old and new requests into one vector without data-dependent shapes.
+    """
+    vl = a.shape[-1]
+    lane = jnp.arange(vl, dtype=jnp.int32)
+    any_p = jnp.any(p, axis=-1, keepdims=True)
+    first = jnp.argmax(p, axis=-1)[..., None]                    # first active
+    last = (vl - 1) - jnp.argmax(jnp.flip(p, axis=-1), axis=-1)[..., None]
+    seg_len = jnp.where(any_p, last - first + 1, 0)
+    from_a = lane < seg_len
+    a_idx = jnp.clip(first + lane, 0, vl - 1)
+    b_idx = jnp.clip(lane - seg_len, 0, vl - 1)
+    shp = jnp.broadcast_shapes(p.shape, a.shape, b.shape)
+    a_part = jnp.take_along_axis(jnp.broadcast_to(a, shp),
+                                 jnp.broadcast_to(a_idx, shp), axis=-1)
+    b_part = jnp.take_along_axis(jnp.broadcast_to(b, shp),
+                                 jnp.broadcast_to(b_idx, shp), axis=-1)
+    return jnp.where(from_a, a_part, b_part)
+
+
+def lastb(p: Array, x: Array) -> Array:
+    """SVE ``lastb``: extract the LAST active element of ``x``; with no active
+    lane, the last element (lane VL-1) is returned — the architected
+    "previous vector's final element" convention that lets a strip-mined loop
+    carry its conditionally-updated scalar across iterations.
+    """
+    vl = x.shape[-1]
+    idx = jnp.where(jnp.any(p, axis=-1),
+                    (vl - 1) - jnp.argmax(jnp.flip(p, axis=-1), axis=-1),
+                    vl - 1)
+    return jnp.take_along_axis(x, idx[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+
+def lasta(p: Array, x: Array) -> Array:
+    """SVE ``lasta``: the element AFTER the last active one (wrapping to lane
+    0 past the end, and with an empty predicate selecting lane 0)."""
+    vl = x.shape[-1]
+    nxt = jnp.where(jnp.any(p, axis=-1),
+                    ((vl - 1) - jnp.argmax(jnp.flip(p, axis=-1), axis=-1) + 1) % vl,
+                    0)
+    return jnp.take_along_axis(x, nxt[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+
 def accept_prefix(match: Array, p_gov: Array | None = None) -> Array:
     """Speculative-acceptance partition: lanes up to and including the first
     mismatch... no — up to the LAST consecutively-matching lane.

@@ -42,12 +42,16 @@ def whilelt(start, limit, vl: int) -> Array:
     """
     start = jnp.asarray(start)
     limit = jnp.asarray(limit)
-    i = jnp.arange(vl, dtype=jnp.int64 if start.dtype == jnp.int64 else jnp.int32)
+    # Index dtype follows the promoted input dtype (int64 only materialises
+    # under jax x64; weak Python ints promote to the default int32), so the
+    # overflow check below runs in the same width as the caller's induction.
+    idx_dtype = jnp.result_type(start.dtype, limit.dtype, jnp.int32)
+    i = jnp.arange(vl, dtype=idx_dtype)
     # Saturate start + i instead of wrapping, mirroring the architected
     # "consistent with the sequential semantics" guarantee near INT_MAX.
-    elem = start.astype(i.dtype) + i
-    wrapped = elem < start.astype(i.dtype)          # overflow detection
-    return jnp.where(wrapped, False, elem < limit.astype(i.dtype))
+    elem = start.astype(idx_dtype) + i
+    wrapped = elem < start.astype(idx_dtype)        # overflow detection
+    return jnp.where(wrapped, False, elem < limit.astype(idx_dtype))
 
 
 def whilelo(start, limit, vl: int) -> Array:

@@ -1,0 +1,9 @@
+"""repro.dist — cluster-scale VLA: the paper's vector-length-agnostic
+contract lifted from lanes to chips.  Logical axis names resolve onto
+whatever mesh is present (``sharding``), and horizontal reductions become
+deterministic cross-device collectives (``collectives``).
+"""
+
+from . import collectives, sharding  # noqa: F401
+
+__all__ = ["sharding", "collectives"]

@@ -1,0 +1,62 @@
+"""Deterministic cross-device reductions — the paper's horizontal-operation
+orderings (§2.3.6) at chip scale.
+
+SVE exposes BOTH a strictly-ordered floating-point reduction (``fadda``) and
+a pairwise-tree one (``faddv``); the same two orderings reappear here as
+collectives, plus an int8 error-feedback compressed variant for gradient
+traffic.  All three are shard_map-level primitives: they take the local shard
+and an axis name.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ordered_psum(x, axis_name: str):
+    """Strictly-ordered sum over the mesh axis: bit-identical to a sequential
+    left-to-right loop over shards (the cross-device ``fadda``).
+
+    Costs an all-gather instead of an all-reduce — ordering is bought with
+    bandwidth, exactly the fadda/faddv trade of the paper.
+    """
+    xs = jax.lax.all_gather(x, axis_name)          # (N, ...) identical everywhere
+    n = xs.shape[0]
+
+    def body(i, acc):
+        return acc + xs[i]
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(xs[0]))
+
+
+def pairwise_psum(x, axis_name: str):
+    """Deterministic pairwise-tree sum (the cross-device ``faddv``): fixed
+    balanced-tree association independent of scheduling, error O(log N)."""
+    xs = jax.lax.all_gather(x, axis_name)
+    while xs.shape[0] > 1:
+        n = xs.shape[0]
+        half = n // 2
+        paired = xs[: 2 * half].reshape((half, 2) + xs.shape[1:]).sum(axis=1)
+        if n % 2:
+            paired = jnp.concatenate([paired, xs[-1:]], axis=0)
+        xs = paired
+    return xs[0]
+
+
+def compressed_psum(g, axis_name: str, err):
+    """int8-quantized mean with per-shard error feedback.
+
+    Each shard quantizes (g + err) to int8 against its own absmax scale; the
+    quantization residual is carried into the next round, so the accumulated
+    mean over repeated rounds converges to the exact mean (the residual
+    telescopes).  Returns (mean, new_err).
+    """
+    comp = g + err
+    scale = jnp.maximum(jnp.max(jnp.abs(comp)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(comp / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = comp - deq
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = jax.lax.psum(deq, axis_name) / n
+    return mean, new_err

@@ -1,0 +1,158 @@
+"""Mesh-agnostic sharding resolution (cluster-scale VLA, DESIGN.md §2).
+
+Model code annotates every array dim with a LOGICAL axis name ("embed",
+"heads", "batch", ...) and never mentions a mesh.  At jit boundaries the rule
+table below resolves each logical name onto the mesh axes that happen to
+exist, with the same discipline SVE applies to vector lanes:
+
+  * **divisibility fallback** — a dim that doesn't divide the mesh axis size
+    replicates instead of erroring (the VL-agnostic "partial last strip").
+  * **no axis reuse** — one mesh axis shards at most one dim per array,
+    resolved left to right.
+  * **folding** — "batch" folds all pure-DP axes present ("pod" x "data").
+  * **flash-decode fallback** — when kv_heads can't take the "model" axis
+    (GQA with few KV heads), the kv_seq dim takes it instead, which is
+    exactly the flash-decode split-K layout.
+
+The same logical tree therefore lowers onto a laptop CPU, one pod, or a
+multi-pod mesh without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered tuple of mesh axes it may occupy (folded jointly
+# when more than one is present).  Missing mesh axes are simply skipped.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "act_seq": ("model",),          # Megatron-SP residual split
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "kv_seq": ("model",),           # flash-decode fallback target
+    "embed": ("data",),             # FSDP-ish weight split
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),                   # scanned axis: never sharded
+}
+
+
+def _candidates(name: str, mesh, rules) -> list[tuple[str, ...]]:
+    """Orderings to try for one logical name: the full folded tuple of
+    present mesh axes first, then each single axis."""
+    want = rules.get(name, ())
+    present = tuple(a for a in want if a in mesh.axis_names)
+    if not present:
+        return []
+    cands = [present]
+    if len(present) > 1:
+        cands += [(a,) for a in present]
+    return cands
+
+
+def spec_for(shape, axes, mesh, rules: Optional[dict] = None) -> P:
+    """Resolve one array's logical axes tuple to a PartitionSpec on ``mesh``.
+
+    ``axes``: tuple of logical names (or None) matching ``shape``'s rank, or
+    None for a fully replicated array.
+    """
+    if axes is None:
+        return P()
+    rules = DEFAULT_RULES if rules is None else rules
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        placed = None
+        if name is not None:
+            for cand in _candidates(name, mesh, rules):
+                free = tuple(a for a in cand if a not in used)
+                if len(free) != len(cand):
+                    continue                      # no mesh-axis reuse
+                size = 1
+                for a in free:
+                    size *= mesh.shape[a]
+                if size > 1 and dim % size == 0:  # divisibility fallback
+                    placed = free
+                    break
+            if placed is not None:
+                used.update(placed)
+        entries.append(placed[0] if placed is not None and len(placed) == 1
+                       else placed)
+    return P(*entries)
+
+
+def tree_shardings(tree, axes_tree, mesh, rules: Optional[dict] = None):
+    """NamedSharding tree for a pytree of arrays/ShapeDtypeStructs given the
+    matching tree of logical-axes tuples (tuples are leaves of axes_tree)."""
+    return jax.tree.map(
+        lambda leaf, ax: NamedSharding(mesh, spec_for(leaf.shape, ax, mesh,
+                                                      rules)),
+        tree, axes_tree)
+
+
+def batch_axes_for(batch):
+    """Logical axes for an input batch dict: leading dim is the request/lane
+    axis, everything else replicated."""
+    return jax.tree.map(
+        lambda leaf: ("batch",) + (None,) * (len(leaf.shape) - 1), batch)
+
+
+def cache_axes_for(cache):
+    """Logical axes for a decode-cache dict (see models.cache_batch_axes for
+    the authoritative per-family lane axis; this mirrors those layouts)."""
+    out = {}
+    for key, leaf in cache.items():
+        nd = len(leaf.shape)
+        if nd == 1:
+            out[key] = ("batch",)
+        elif "conv" in key:                        # (..., B, W, D)
+            ax = [None] * nd
+            ax[nd - 3] = "batch"
+            out[key] = tuple(ax)
+        elif "state" in key:                       # (..., B, H, hd, state)
+            ax = [None] * nd
+            ax[nd - 4] = "batch"
+            out[key] = tuple(ax)
+        else:                                      # KV: (..., B, Hkv, S, D)
+            ax = [None] * nd
+            ax[nd - 4] = "batch"
+            ax[nd - 3] = "act_kv_heads"
+            ax[nd - 2] = "kv_seq"
+            out[key] = tuple(ax)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh for activation constraints (opt-in, no-op otherwise)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[tuple] = None
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh, rules: Optional[dict] = None):
+    """Within this context, ``constrain`` resolves logical axes against
+    ``mesh``; outside it, ``constrain`` is the identity."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, (mesh, DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def constrain(x, axes):
+    """Activation sharding constraint under the ambient mesh (identity when
+    no mesh rules are active — keeps single-host tests mesh-free)."""
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(x.shape, axes, mesh, rules)))

@@ -1,5 +1,6 @@
 """Serving launcher: bring up a ServeEngine for an arch (reduced dims on CPU)
-and run a batch of ragged requests through it.
+and push a stream of ragged requests through the continuous-batching
+scheduler (default), or a single static batch with --static.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --reduce
 """
@@ -14,7 +15,7 @@ import numpy as np
 
 from repro.configs import all_arch_names, get_config
 from repro.models import get_model
-from repro.serve import ServeEngine
+from repro.serve import ContinuousBatchingScheduler, ServeEngine
 
 from .train import REDUCE
 
@@ -23,9 +24,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_3b", choices=all_arch_names())
     ap.add_argument("--reduce", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lane capacity (scheduler) / batch size (--static)")
+    ap.add_argument("--requests", type=int, default=10,
+                    help="number of streamed requests (scheduler mode)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="decode steps between admission opportunities")
+    ap.add_argument("--compact-threshold", type=float, default=0.5)
+    ap.add_argument("--static", action="store_true",
+                    help="one-shot ServeEngine.generate instead of scheduler")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,11 +68,34 @@ def main():
         batch["src_lens"] = jnp.full((args.batch,), args.prompt_len, jnp.int32)
 
     eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7)
-    res = eng.generate(batch)
-    for i in range(args.batch):
-        n = int(res["n_generated"][i])
-        print(f"req{i} len={int(batch['lens'][i]):2d} -> "
-              f"{res['tokens'][i, :n].tolist()}")
+    if args.static or cfg.family == "encdec" or cfg.cross_attn_group:
+        # modality extras are per-batch, not yet per-request: static path
+        res = eng.generate(batch)
+        for i in range(args.batch):
+            n = int(res["n_generated"][i])
+            print(f"req{i} len={int(batch['lens'][i]):2d} -> "
+                  f"{res['tokens'][i, :n].tolist()}")
+        return
+
+    # ---- continuous batching: stream requests through the lane vector ----
+    max_len = args.prompt_len + args.max_new
+    sched = ContinuousBatchingScheduler(
+        eng, capacity=args.batch, max_len=max_len, chunk=args.chunk,
+        compact_threshold=args.compact_threshold)
+    rid_len = {}
+    for _ in range(args.requests):
+        plen = int(rng.randint(4, args.prompt_len + 1))
+        rid = sched.submit(rng.randint(1, cfg.vocab_size, plen))
+        rid_len[rid] = plen
+    results = sched.run()
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"req{rid} len={rid_len[rid]:2d} -> "
+              f"{r['tokens'].tolist()}")
+    occ = sched.stats["occupancy_trace"]
+    print(f"[scheduler] rounds={sched.stats['steps']} "
+          f"compactions={sched.stats['compactions']} "
+          f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,8 @@ assigned architecture family (dense / moe / ssm / hybrid / encdec), all built
 on the predicated attention + SSD kernels and the VLA core.
 """
 
+import jax.numpy as jnp
+
 from .config import ModelConfig  # noqa: F401
 
 
@@ -11,7 +13,9 @@ def get_model(cfg: "ModelConfig"):
     init(key, cfg) -> (params, axes);
     train_logits(params, cfg, batch) -> (logits, aux);
     prefill(params, cfg, batch) -> (logits_last, cache);
-    decode(params, cfg, batch, cache) -> (logits, cache).
+    decode(params, cfg, batch, cache) -> (logits, cache);
+    make_cache(cfg, batch_size, ...) -> cache pytree;
+    cache_batch_axes(cfg) -> {cache key: request-lane axis}.
     """
     from . import dense, encdec, hybrid, moe, ssm
     return {
@@ -21,3 +25,44 @@ def get_model(cfg: "ModelConfig"):
         "hybrid": hybrid,
         "encdec": encdec,
     }[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Cache lane interface (SVE §2.3.4 applied to request traffic)
+#
+# A decode cache is a dict of arrays, each with ONE request-lane axis declared
+# by the family's ``cache_batch_axes(cfg)``.  The two operations below are the
+# only ways the serving layer moves request state between lanes — pure index
+# gathers/scatters, so lane compaction and slot refill are data movements the
+# compiler can alias in place (no `jnp.where` over the full cache tree, no
+# "first axis that matches B" guessing).
+# ---------------------------------------------------------------------------
+
+def gather_lanes(cfg, cache, lanes):
+    """Permute/select request lanes of every cache array: out lane i takes the
+    state of input lane ``lanes[i]`` (SVE ``compact``-style index gather).
+
+    ``lanes`` may be shorter than the lane count (slicing a sub-batch out) or
+    a full permutation (lane compaction).  jit-safe.
+    """
+    axes = get_model(cfg).cache_batch_axes(cfg)
+    lanes = jnp.asarray(lanes, jnp.int32)
+    return {k: jnp.take(v, lanes, axis=axes[k]) for k, v in cache.items()}
+
+
+def slot_update(cfg, cache, lanes, sub_cache):
+    """Write ``sub_cache`` (a cache whose lane count equals ``len(lanes)``)
+    into ``cache`` at lane indices ``lanes`` via in-place ``.at[].set``
+    scatters along each array's declared lane axis.
+
+    This is the admission path of continuous batching: a freshly prefilled
+    sub-batch splices into recycled lanes of the live cache.  jit-safe.
+    """
+    axes = get_model(cfg).cache_batch_axes(cfg)
+    lanes = jnp.asarray(lanes, jnp.int32)
+    out = dict(cache)
+    for k, v in cache.items():
+        ax = axes[k]
+        idx = tuple([slice(None)] * ax + [lanes])
+        out[k] = v.at[idx].set(sub_cache[k].astype(v.dtype))
+    return out

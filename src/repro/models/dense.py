@@ -152,6 +152,18 @@ def make_cache(cfg, batch_size: int, max_len: int, dtype=None):
     }
 
 
+def cache_batch_axes(cfg):
+    """Which axis of each cache array is the request-lane (batch) axis.
+
+    The serve scheduler treats a batch as a vector of request lanes (SVE
+    §2.3.4); ``repro.models.gather_lanes``/``slot_update`` consume this map to
+    permute or refill lanes as pure index gathers/scatters — no shape guessing.
+    """
+    if cfg.cross_attn_group:
+        return {"k": 2, "v": 2, "cross_k": 1, "cross_v": 1, "pos": 0}
+    return {"k": 1, "v": 1, "pos": 0}
+
+
 def _cross_kv(params_cross_attn, cross_emb, cfg):
     """Precompute cross K/V from (stub) image embeddings for one group."""
     hd = cfg.resolved_head_dim

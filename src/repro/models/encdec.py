@@ -130,6 +130,12 @@ def make_cache(cfg, batch_size: int, max_len: int, src_len: int, dtype=None):
     }
 
 
+def cache_batch_axes(cfg):
+    """Request-lane axis of each cache array (see repro.models.gather_lanes)."""
+    return {"k": 1, "v": 1, "cross_k": 1, "cross_v": 1,
+            "src_lens": 0, "pos": 0}
+
+
 def prefill(params, cfg, batch, cache):
     """Encode source + run decoder prompt, filling self and cross caches."""
     src_lens = batch.get("src_lens")

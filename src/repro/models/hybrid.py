@@ -92,6 +92,12 @@ def make_cache(cfg, batch_size: int, max_len: int, dtype=None):
     }
 
 
+def cache_batch_axes(cfg):
+    """Request-lane axis of each cache array (see repro.models.gather_lanes)."""
+    return {"conv": 2, "state": 2, "tail_conv": 1, "tail_state": 1,
+            "shared_k": 1, "shared_v": 1, "pos": 0}
+
+
 def _groups_cached(params, cfg, x, positions, cache, *, lens, q_offset,
                    cache_pos, causal, decode_step):
     shared = params["shared"]

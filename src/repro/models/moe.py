@@ -204,6 +204,11 @@ def make_cache(cfg, batch_size: int, max_len: int, dtype=None):
     }
 
 
+def cache_batch_axes(cfg):
+    """Request-lane axis of each cache array (see repro.models.gather_lanes)."""
+    return {"dense_k": 1, "dense_v": 1, "k": 1, "v": 1, "pos": 0}
+
+
 def _run_cached(params, cfg, x, positions, *, kv_lens, q_offset, cache,
                 cache_pos, causal):
     new_cache = dict(cache)

@@ -192,6 +192,11 @@ def make_cache(cfg, batch_size: int, max_len: int = 0, dtype=None):
     }
 
 
+def cache_batch_axes(cfg):
+    """Request-lane axis of each cache array (see repro.models.gather_lanes)."""
+    return {"conv": 1, "state": 1, "pos": 0}
+
+
 def prefill(params, cfg, batch, cache):
     tokens = batch["tokens"]
     b, s = tokens.shape

@@ -1,2 +1,3 @@
 from .engine import ServeEngine  # noqa: F401
+from .scheduler import ContinuousBatchingScheduler, Request  # noqa: F401
 from .speculative import speculative_decode  # noqa: F401

@@ -1,12 +1,19 @@
-"""Batched serving engine with vector-partitioned early exit.
+"""Batched serving engine with a fully-jitted vector-partitioned decode loop.
 
 A batch of requests is a VECTOR (paper §2.3.4): each lane is one request.
-Prefill uses ragged whilelt lengths; the decode loop runs under a shrinking
-active partition — a lane goes inactive when it emits a stop token (brkb over
-the stop predicate) or exhausts its token budget.  Inactive lanes are
-merging-predicated: their state stops changing while the rest of the batch
-continues (no recompilation, no batch compaction needed at this scale;
-compaction hooks exist for fleet-scale continuous batching).
+Prefill uses ragged whilelt lengths; the decode loop is ONE jitted XLA while
+loop over a shrinking active partition (§2.3.4) — per-lane stop conditions
+retire lanes inside the compiled loop, so there is no per-token Python
+dispatch and no cache rewriting: the model's own ``dynamic_update_slice``
+writes are the only cache mutation (XLA aliases them in place).
+
+Inactive lanes keep decoding architecturally but their effects are not
+observed: sampled tokens are merging-predicated to the stop token, output
+slots are write-masked, and their cache slots become garbage-beyond-pos —
+harmless, because a finished lane is always refilled through
+``repro.models.slot_update`` (a fresh prefill) before it is reused.  That is
+the contract that makes continuous batching (see ``serve.scheduler``) a pure
+lane-permutation problem.
 """
 
 from __future__ import annotations
@@ -17,7 +24,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import partition as PT
 from repro.core import predicate as P
 from repro.models import get_model
 
@@ -34,11 +40,72 @@ class ServeEngine:
         self.model = get_model(self.cfg)
         self._prefill = jax.jit(
             lambda p, b, c: self.model.prefill(p, self.cfg, b, c))
-        self._decode = jax.jit(
-            lambda p, b, c: self.model.decode(p, self.cfg, b, c))
+        # donate the mutable decode state (cache/out_buf/tok/p/n_gen) so XLA
+        # updates it in place instead of copying the KV cache every burst;
+        # the CPU backend has no donation (it would only warn), so gate it
+        donate = (1, 2, 3, 4, 5) if jax.default_backend() != "cpu" else ()
+        self._decode_chunk = jax.jit(self._decode_chunk_impl,
+                                     static_argnames=("n_steps",),
+                                     donate_argnums=donate)
 
     def _sample(self, logits):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # jitted decode loop
+    # ------------------------------------------------------------------
+
+    def _decode_chunk_impl(self, params, cache, out_buf, tok, p, n_gen,
+                           lane_budget, *, n_steps: int):
+        """The decode hot loop as ONE XLA while: §2.3.4 dynamic exits.
+
+        Every iteration decodes all lanes, but only the active partition
+        commits tokens; a lane leaves the partition when it emits the stop
+        token or its per-lane budget runs out.  ``n_steps`` caps the burst so
+        the continuous-batching scheduler can admit queued requests between
+        calls; ``generate`` passes n_steps = max_new_tokens and uniform
+        budgets so the same loop serves both paths (bit-identity between the
+        one-shot and scheduled engines follows by construction).
+        Returns (cache, out_buf, tok, p, n_gen, steps_run).
+        """
+        stop = self.stop_token
+        b, max_out = out_buf.shape
+        rows = jnp.arange(b)
+
+        def loop_cond(carry):
+            _, _, _, p, _, step = carry
+            return jnp.any(p) & (step < n_steps)
+
+        def loop_body(carry):
+            cache, out_buf, tok, p, n_gen, step = carry
+            logits, cache = self.model.decode(params, self.cfg,
+                                              {"token": tok[:, None]}, cache)
+            nxt = self._sample(logits)
+            nxt = P.merging(p, nxt, jnp.full_like(nxt, stop))
+            col = jnp.clip(n_gen, 0, max_out - 1)
+            out_buf = out_buf.at[rows, col].set(
+                jnp.where(p, nxt, out_buf[rows, col]))
+            n_gen = n_gen + p.astype(jnp.int32)
+            p = p & (nxt != stop) & (n_gen < lane_budget)
+            return cache, out_buf, nxt, p, n_gen, step + 1
+
+        cache, out_buf, tok, p, n_gen, steps = jax.lax.while_loop(
+            loop_cond, loop_body,
+            (cache, out_buf, tok, p, n_gen, jnp.int32(0)))
+        return cache, out_buf, tok, p, n_gen, steps
+
+    # ------------------------------------------------------------------
+    # one-shot batch API
+    # ------------------------------------------------------------------
+
+    def make_cache(self, b: int, max_len: int, batch: Optional[dict] = None):
+        """Allocate a cache for ``b`` request lanes (family-dispatched)."""
+        if self.cfg.family == "encdec":
+            return self.model.make_cache(self.cfg, b, max_len,
+                                         src_len=batch["src_emb"].shape[1])
+        if self.cfg.family == "ssm":
+            return self.model.make_cache(self.cfg, b)
+        return self.model.make_cache(self.cfg, b, max_len)
 
     def generate(self, batch, *, max_len: Optional[int] = None):
         """batch: {"tokens": (B, S) prompts, "lens": (B,)} (+ modality extras).
@@ -50,69 +117,20 @@ class ServeEngine:
         b, s = tokens.shape
         lens = jnp.asarray(batch.get("lens", jnp.full((b,), s)), jnp.int32)
         max_len = max_len or (s + self.max_new_tokens)
-        if self.cfg.family == "encdec":
-            cache = self.model.make_cache(self.cfg, b, max_len,
-                                          src_len=batch["src_emb"].shape[1])
-        elif self.cfg.family == "ssm":
-            cache = self.model.make_cache(self.cfg, b)
-        else:
-            cache = self.model.make_cache(self.cfg, b, max_len)
+        cache = self.make_cache(b, max_len, batch)
 
         logits, cache = self._prefill(self.params, dict(batch, lens=lens), cache)
         first_tok = self._sample(logits)
 
-        # ---- vector-partitioned decode loop ----
-        out = jnp.zeros((b, self.max_new_tokens), jnp.int32)
+        max_new = self.max_new_tokens
+        out = jnp.zeros((b, max_new), jnp.int32)
         out = out.at[:, 0].set(first_tok)
-        p0 = P.ptrue(b)
-        # lanes whose first token is already a stop exit immediately (brkb
-        # semantics are per-lane here: the partition is a conjunction over
-        # time, not over lanes, so each lane just clears itself)
-        p_active = p0 & (first_tok != self.stop_token)
-
-        def body_fn(state, p):
-            out, cache, tok, t = state
-            logits, new_cache = self._decode(self.params, {"token": tok[:, None]},
-                                             cache)
-            nxt = self._sample(logits)
-            # merging predication: inactive lanes keep old outputs & cache pos
-            nxt = P.merging(p, nxt, jnp.zeros_like(nxt))
-            out = out.at[:, t].set(jnp.where(p & (t < self.max_new_tokens),
-                                             nxt, out[:, t]))
-            cache = jax.tree.map(
-                lambda new, old: _merge_cache(p, new, old), new_cache, cache)
-            return out, cache, nxt, t + 1
-
-        state = (out, cache, first_tok, jnp.int32(1))
-        # engine-level loop (each step jitted); the active partition shrinks
-        # as lanes hit their stop token — paper §2.3.4 dynamic exits
-        p = p_active
-        while bool(jnp.any(p)) and int(state[3]) < self.max_new_tokens:
-            state = body_fn(state, p)
-            nxt = state[2]
-            p = p & (nxt != self.stop_token)
-        out, cache, _, t = state
-        n_gen = jnp.minimum(
-            jnp.argmax(jnp.concatenate(
-                [out == self.stop_token,
-                 jnp.ones((b, 1), bool)], axis=1), axis=1) + 1,
-            self.max_new_tokens)
+        budget = jnp.full((b,), max_new, jnp.int32)
+        p0 = (first_tok != self.stop_token) & (budget > 1)
+        # ---- single dispatch: the whole decode loop runs inside XLA ----
+        cache, out, tok, _, n_gen, _ = self._decode_chunk(
+            self.params, cache, out, first_tok, p0, jnp.ones((b,), jnp.int32),
+            budget, n_steps=max_new)
+        p = tok != self.stop_token                  # lanes that never exited
         return {"tokens": out, "n_generated": n_gen, "active": p,
                 "cache": cache}
-
-
-def _merge_cache(p, new, old):
-    """Predicated cache merge: lane-inactive rows keep their old cache."""
-    if new.ndim == 0 or new.shape == ():
-        return new
-    # find the batch axis: caches are (*stack, B, ...) or (B,) for pos
-    if old.dtype == jnp.int32 and old.ndim == 1:      # pos (B,)
-        return jnp.where(p, new, old)
-    # batch axis is ndim-4 for KV (.., B, H, S, D), ndim-... — broadcast mask
-    # over trailing dims at the axis whose size matches p
-    for ax in range(new.ndim):
-        if new.shape[ax] == p.shape[0]:
-            shape = [1] * new.ndim
-            shape[ax] = p.shape[0]
-            return jnp.where(p.reshape(shape), new, old)
-    return new

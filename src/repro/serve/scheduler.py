@@ -1,0 +1,284 @@
+"""Continuous-batching scheduler: SVE compact/partition semantics for traffic.
+
+The serving batch is a vector of request LANES.  A lane's lifecycle is the
+paper's §2.3.4 partition algebra applied to traffic instead of loop strips:
+
+  * **admission** — a queued request is prefilled (as part of a sub-batch)
+    and spliced into a free lane via ``repro.models.slot_update``: a pure
+    index scatter along each cache array's declared lane axis.
+  * **decode** — the engine's jitted ``_decode_chunk`` runs bounded bursts;
+    per-lane stop tokens / budgets shrink the active partition *inside* XLA.
+  * **harvest** — lanes that left the partition surrender their tokens and
+    become free slots.
+  * **compaction** — when occupancy drops below ``compact_threshold``, the
+    survivors are squeezed into the lowest-numbered lanes with the SVE
+    ``compact`` permutation (``partition.compact_perm``) applied to the cache
+    (``gather_lanes``) and every per-lane side table.  Lanes stay dense, so
+    admission always splices into the tail and throughput is a function of
+    ACTIVE lanes, not peak batch size.
+
+Everything that moves request state is an index gather/scatter; nothing is
+recompiled when traffic gets ragged — the vector-length-agnostic contract.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition as PT
+from repro.models import gather_lanes, slot_update
+
+from .engine import ServeEngine
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is in scheduler decode-step units
+    (0 = available immediately); the scheduler never admits a request before
+    its arrival time, which is what the Poisson serving benchmark drives."""
+    rid: int
+    tokens: np.ndarray                      # (S,) prompt token ids
+    max_new_tokens: Optional[int] = None    # default: engine budget
+    arrival: float = 0.0
+    extras: Optional[dict] = None           # modality extras (cross_emb, ...)
+
+
+class ContinuousBatchingScheduler:
+    """Serve a stream of requests over a fixed-capacity lane vector.
+
+    Parameters
+    ----------
+    engine: a ``ServeEngine`` (supplies the jitted prefill/decode-chunk fns).
+    capacity: number of request lanes (the vector length of the batch).
+    max_len: cache sequence capacity per lane (>= prompt + budget).
+    chunk: decode steps per burst between admission opportunities.
+    compact_threshold: occupancy fraction below which live lanes are
+        compacted to the front (the knob; 0 disables compaction).
+    """
+
+    def __init__(self, engine: ServeEngine, *, capacity: int, max_len: int,
+                 chunk: int = 8, compact_threshold: float = 0.5):
+        if engine.cfg.family == "encdec":
+            raise NotImplementedError(
+                "encdec caches need src_emb/src_len at allocation time; "
+                "serve encdec batches via ServeEngine.generate instead")
+        self.engine = engine
+        self.capacity = capacity
+        self.max_len = max_len
+        self.chunk = chunk
+        self.compact_threshold = compact_threshold
+
+        self.queue: collections.deque[Request] = collections.deque()
+        self.results: dict[int, dict] = {}
+        self._next_rid = 0
+        self.now = 0.0                       # decode-step clock
+
+        b = capacity
+        self.lane_rid = np.full((b,), -1, np.int64)   # -1 = free lane
+        self.cache = engine.make_cache(b, max_len)
+        max_out = engine.max_new_tokens
+        self.out_buf = jnp.zeros((b, max_out), jnp.int32)
+        self.tok = jnp.full((b,), engine.stop_token, jnp.int32)
+        self.p = jnp.zeros((b,), bool)                # active partition
+        self.n_gen = jnp.zeros((b,), jnp.int32)
+        self.budget = jnp.zeros((b,), jnp.int32)
+        self.stats = {"steps": 0, "decode_steps": 0, "lane_steps": 0,
+                      "active_lane_steps": 0, "compactions": 0,
+                      "occupancy_trace": []}
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit(self, tokens, *, max_new_tokens: Optional[int] = None,
+               arrival: float = 0.0, extras: Optional[dict] = None) -> int:
+        """Queue a request; returns its rid."""
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got shape {tokens.shape}")
+        if len(tokens) > self.max_len:
+            raise ValueError(
+                f"prompt length {len(tokens)} exceeds lane capacity "
+                f"max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, tokens, max_new_tokens, arrival,
+                                  extras))
+        return rid
+
+    def occupancy(self) -> float:
+        return float((self.lane_rid >= 0).sum()) / self.capacity
+
+    def step(self):
+        """One scheduling round: compact, admit, decode a chunk, harvest."""
+        self._maybe_compact()
+        self._admit()
+        occupied = self.lane_rid >= 0
+        self.stats["occupancy_trace"].append(float(occupied.sum())
+                                             / self.capacity)
+        if occupied.any():
+            eng = self.engine
+            gen_before = int(self.n_gen.sum())
+            (self.cache, self.out_buf, self.tok, self.p,
+             self.n_gen, steps) = eng._decode_chunk(
+                eng.params, self.cache, self.out_buf, self.tok, self.p,
+                self.n_gen, self.budget, n_steps=self.chunk)
+            # the jitted loop exits early once every lane retires, and lanes
+            # die mid-chunk: charge what actually ran (each active lane-step
+            # commits exactly one token, so the n_gen delta is exact)
+            steps = int(steps)
+            self.stats["decode_steps"] += steps
+            self.stats["lane_steps"] += steps * self.capacity
+            self.stats["active_lane_steps"] += int(self.n_gen.sum()) - gen_before
+            # the clock is in decode-step units: advance by what actually ran
+            self.now += steps
+        else:
+            self.now += self.chunk              # idle tick: wait for arrivals
+        self.stats["steps"] += 1
+        self._harvest()
+
+    def run(self) -> dict[int, dict]:
+        """Drain the queue and all live lanes; returns {rid: result}."""
+        while self.queue or (self.lane_rid >= 0).any():
+            self.step()
+        return self.results
+
+    # ------------------------------------------------------------------
+    # lane lifecycle
+    # ------------------------------------------------------------------
+
+    def _free_lanes(self):
+        return np.flatnonzero(self.lane_rid < 0)
+
+    def _due(self, req: Request) -> bool:
+        return req.arrival <= self.now
+
+    def _admit(self):
+        """Prefill due queued requests as one sub-batch and splice them into
+        free lanes (slot_update = the in-place `.at[]` scatter).
+
+        The whole queue is scanned (a not-yet-due request must not block due
+        ones behind it); FIFO order is preserved among the due.  One prefill
+        sub-batch must stack homogeneously, so only requests with the same
+        extras keys are admitted together — the rest wait for the next round.
+        """
+        free = self._free_lanes()
+        batch_reqs: list[Request] = []
+        rest: list[Request] = []
+        extras_keys = None
+        for req in self.queue:
+            if len(batch_reqs) >= len(free) or not self._due(req):
+                rest.append(req)
+                continue
+            keys = frozenset(req.extras) if req.extras else frozenset()
+            if extras_keys is None:
+                extras_keys = keys
+            if keys != extras_keys:
+                rest.append(req)
+                continue
+            batch_reqs.append(req)
+        if not batch_reqs:
+            return
+        self.queue = collections.deque(rest)
+        lanes = free[:len(batch_reqs)]
+        eng = self.engine
+        n = len(batch_reqs)
+        # bucket the prefill shape (rows to a power of two, columns to a
+        # power of two capped at max_len) so a ragged trace compiles a
+        # BOUNDED set of prefill programs instead of one per (n, plen) pair
+        n_pad = min(_next_pow2(n), self.capacity)
+        plen = max(len(r.tokens) for r in batch_reqs)
+        plen_pad = min(_next_pow2(plen), self.max_len)
+        toks = np.zeros((n_pad, plen_pad), np.int32)
+        lens = np.ones((n_pad,), np.int32)          # dummy rows: 1-token pad
+        for i, r in enumerate(batch_reqs):
+            toks[i, :len(r.tokens)] = r.tokens
+            lens[i] = len(r.tokens)
+        batch = {"tokens": jnp.asarray(toks), "lens": jnp.asarray(lens)}
+        if batch_reqs[0].extras:
+            for k in batch_reqs[0].extras:
+                batch[k] = jnp.stack([jnp.asarray(r.extras[k])
+                                      for r in batch_reqs]
+                                     + [jnp.zeros_like(jnp.asarray(
+                                         batch_reqs[0].extras[k]))] *
+                                     (n_pad - n))
+
+        sub_cache = eng.make_cache(n_pad, self.max_len, batch)
+        logits, sub_cache = eng._prefill(eng.params, batch, sub_cache)
+        first_tok = eng._sample(logits)[:n]
+        if n_pad > n:                               # drop the dummy rows
+            sub_cache = gather_lanes(eng.cfg, sub_cache,
+                                     jnp.arange(n, dtype=jnp.int32))
+
+        # ---- splice the sub-batch into the recycled lanes ----
+        lane_idx = jnp.asarray(lanes, jnp.int32)
+        self.cache = slot_update(eng.cfg, self.cache, lane_idx, sub_cache)
+        budgets = np.asarray(
+            [min(eng.max_new_tokens if r.max_new_tokens is None
+                 else r.max_new_tokens,
+                 eng.max_new_tokens,
+                 self.max_len - int(lens[i]))
+             for i, r in enumerate(batch_reqs)], np.int32)
+        self.tok = self.tok.at[lane_idx].set(first_tok)
+        self.out_buf = self.out_buf.at[lane_idx].set(0)
+        self.out_buf = self.out_buf.at[lane_idx, 0].set(first_tok)
+        self.n_gen = self.n_gen.at[lane_idx].set(1)
+        self.budget = self.budget.at[lane_idx].set(jnp.asarray(budgets))
+        alive = (first_tok != eng.stop_token) & (jnp.asarray(budgets) > 1)
+        self.p = self.p.at[lane_idx].set(alive)
+        for i, r in enumerate(batch_reqs):
+            self.lane_rid[lanes[i]] = r.rid
+
+    def _harvest(self):
+        """Collect lanes whose request left the active partition."""
+        finished = np.flatnonzero((self.lane_rid >= 0) & ~np.asarray(self.p))
+        if finished.size == 0:
+            return
+        out = np.asarray(self.out_buf[finished])
+        n_gen = np.asarray(self.n_gen[finished])
+        for j, lane in enumerate(finished):
+            rid = int(self.lane_rid[lane])
+            n = int(n_gen[j])
+            self.results[rid] = {"tokens": out[j, :n].copy(),
+                                 "n_generated": n,
+                                 "finished_at": self.now}
+            self.lane_rid[lane] = -1
+
+    def _maybe_compact(self):
+        """SVE ``compact`` over the lane vector: squeeze live lanes to the
+        lowest indices when occupancy falls below the threshold."""
+        if not self.queue:
+            # lane density only pays off when admission is about to splice
+            # into the tail; during a drain there is nothing to buy with a
+            # whole-cache gather
+            return
+        occupied = self.lane_rid >= 0
+        occ = occupied.sum() / self.capacity
+        if occ >= self.compact_threshold or self.compact_threshold <= 0:
+            return
+        if not occupied.any():
+            return
+        # already dense at the front? nothing to move
+        n_live = int(occupied.sum())
+        if occupied[:n_live].all():
+            return
+        perm = np.asarray(PT.compact_perm(jnp.asarray(occupied)))
+        perm_idx = jnp.asarray(perm, jnp.int32)
+        self.cache = gather_lanes(self.engine.cfg, self.cache, perm_idx)
+        self.out_buf = jnp.take(self.out_buf, perm_idx, axis=0)
+        self.tok = jnp.take(self.tok, perm_idx, axis=0)
+        self.p = jnp.take(self.p, perm_idx, axis=0) & jnp.asarray(
+            occupied[perm])
+        self.n_gen = jnp.take(self.n_gen, perm_idx, axis=0)
+        self.budget = jnp.take(self.budget, perm_idx, axis=0)
+        self.lane_rid = self.lane_rid[perm]
+        self.stats["compactions"] += 1

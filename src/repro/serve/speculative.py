@@ -1,21 +1,39 @@
 """Speculative decoding — the first-fault contract at serving scale.
 
 A small draft model runs K tokens ahead (the speculative vector load); the
-target model verifies all K in ONE forward pass.  Acceptance is the maximal
-matching prefix — ``brkb`` over the mismatch predicate, exactly the FFR
-partition of paper §2.3.3: lanes before the first fault commit, the first
-faulting lane is re-executed architecturally (here: the target's own token is
-substituted), everything after is discarded and retried next round.
+target model then verifies the whole window before anything commits.
+Acceptance is the maximal matching prefix — ``brkb`` over the mismatch
+predicate, exactly the FFR partition of paper §2.3.3: lanes before the first
+fault commit, the first faulting lane is re-executed architecturally (here:
+the target's own token is substituted), everything after is discarded and
+retried next round.
 
-This implementation is greedy-match speculative decoding (deterministic
-targets), which keeps the FFR analogy exact: accepted ⇔ bit-identical to
-what the target would have produced alone (asserted in tests).
+NOTE: verification currently issues K+1 single-token target decodes (teacher
+forcing through the decode cache), so the latency win of real speculative
+decoding is not yet realized — that needs a windowed ``extend`` entry point
+(prefill-style forward at q_offset=pos returning logits at every window
+position) in each model family; the acceptance algebra here is independent
+of that change.
+
+The implementation is BATCHED: every request lane carries its own speculation
+window, and each per-round step is the partition algebra applied row-wise —
+``accept_prefix`` for acceptance, ``whilelt``-style budget masks for commit
+truncation, and SVE ``lastb`` to extract the next feed token from each lane's
+committed partition.  No lane count is special-cased (the old ``b == 1``
+assert is gone); caches roll back by a per-lane ``pos`` vector because every
+attention read is predicated by ``kv_lens = pos + 1`` — stale slots are
+architecturally inert, the same trick that makes FFR re-execution free.
+
+Greedy-match speculative decoding (deterministic targets) keeps the FFR
+analogy exact: accepted ⇔ bit-identical to what the target would have
+produced alone (asserted in tests).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import partition as PT
 from repro.core import predicate as P
@@ -28,95 +46,134 @@ def _greedy(logits):
 
 def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
                        prompt, *, n_tokens: int, k_draft: int = 4,
-                       max_len: int | None = None):
-    """Greedy speculative decoding for a single sequence (B=1 lanes are the
-    draft positions — the 'vector' here is the speculation window).
+                       max_len: int | None = None, lens=None,
+                       stop_token: int | None = None):
+    """Batched greedy speculative decoding.
 
-    Returns (tokens (n_tokens,), stats dict with acceptance counts).
+    prompt: (B, S) token ids (+ optional per-lane ``lens``).  Every lane
+    speculates/commits independently each round; a lane leaves the active
+    partition when it hits ``stop_token`` or its ``n_tokens`` budget.
+
+    Returns (tokens, stats).  For B == 1 tokens is (n_tokens,) and
+    ``stats["accept_counts"]`` is a list of ints (legacy single-lane API);
+    for B > 1 tokens is (B, n_tokens) and accept_counts holds per-round
+    (B,) arrays.  stats also carries ``n_generated`` (B,).
     """
     tmodel, dmodel = get_model(target_cfg), get_model(draft_cfg)
     b, s = prompt.shape
-    assert b == 1
     max_len = max_len or (s + n_tokens + k_draft + 1)
+    lens = (jnp.full((b,), s, jnp.int32) if lens is None
+            else jnp.asarray(lens, jnp.int32))
 
-    tcache = tmodel.make_cache(target_cfg, 1, max_len)
-    dcache = dmodel.make_cache(draft_cfg, 1, max_len)
-    lens = jnp.array([s], jnp.int32)
+    tcache = tmodel.make_cache(target_cfg, b, max_len)
+    dcache = dmodel.make_cache(draft_cfg, b, max_len)
     tlog, tcache = tmodel.prefill(target_params, target_cfg,
                                   {"tokens": prompt, "lens": lens}, tcache)
-    dlog, dcache = dmodel.prefill(draft_params, draft_cfg,
-                                  {"tokens": prompt, "lens": lens}, dcache)
-
-    out = []
-    cur = _greedy(tlog)                      # first token from the target
-    out.append(int(cur[0]))
-    accepted_hist = []
+    _, dcache = dmodel.prefill(draft_params, draft_cfg,
+                               {"tokens": prompt, "lens": lens}, dcache)
 
     decode_t = jax.jit(lambda p, b_, c: tmodel.decode(p, target_cfg, b_, c))
     decode_d = jax.jit(lambda p, b_, c: dmodel.decode(p, draft_cfg, b_, c))
-    prefill_t = jax.jit(lambda p, b_, c: tmodel.prefill(p, target_cfg, b_, c))
 
-    while len(out) < n_tokens:
-        # ---- draft speculates k tokens (the speculative load) ----
-        draft_toks = []
+    cur = _greedy(tlog)                            # (B,) first target token
+    out = jnp.zeros((b, n_tokens), jnp.int32)
+    out = out.at[:, 0].set(cur)
+    n_gen = jnp.ones((b,), jnp.int32)
+    alive = n_gen < n_tokens
+    if stop_token is not None:
+        alive = alive & (cur != stop_token)
+
+    kp1 = k_draft + 1
+    j = jnp.arange(kp1, dtype=jnp.int32)[None, :]   # window lane index
+    rows = jnp.arange(b)[:, None]
+    accepted_hist = []
+
+    while bool(jnp.any(alive)):
+        pos0 = tcache["pos"]                       # (B,) committed lengths
+
+        # ---- draft speculates K tokens per lane (the speculative load) ----
+        dtoks = []
         dtok = cur
-        dc = dcache
         for _ in range(k_draft):
-            dlog, dc = decode_d(draft_params, {"token": dtok[:, None]}, dc)
+            dlog, dcache = decode_d(draft_params, {"token": dtok[:, None]},
+                                    dcache)
             dtok = _greedy(dlog)
-            draft_toks.append(dtok)
-        window = jnp.stack([cur] + draft_toks, axis=1)      # (1, K+1)
+            dtoks.append(dtok)
+        # one extra decode writes the last draft token's K/V, so a fully
+        # accepted window needs no special case (rollback truncates instead)
+        _, dcache = decode_d(draft_params, {"token": dtok[:, None]}, dcache)
+        draft = jnp.stack(dtoks, axis=1)           # (B, K)
+        window = jnp.concatenate([cur[:, None], draft], axis=1)  # (B, K+1)
 
-        # ---- target verifies the window in one pass ----
-        # prefill-style forward over the window against the current cache:
-        # logits at every window position (teacher forcing)
+        # ---- target verifies the whole window (teacher forcing) ----
         tlogs = []
-        tc = tcache
-        for i in range(window.shape[1]):
-            tl, tc = decode_t(target_params, {"token": window[:, i:i + 1]}, tc)
+        for i in range(kp1):
+            tl, tcache = decode_t(target_params,
+                                  {"token": window[:, i:i + 1]}, tcache)
             tlogs.append(tl)
-        tlogs = jnp.stack(tlogs, axis=1)                    # (1, K+1, V)
-        tgt_next = _greedy(tlogs[0])                        # (K+1,)
+        tgt_next = _greedy(jnp.stack(tlogs, axis=1))  # (B, K+1)
 
-        # ---- FFR acceptance: brkb over the mismatch predicate ----
-        draft_vec = jnp.stack([t[0] for t in draft_toks])   # (K,)
-        match = draft_vec == tgt_next[:-1]
-        acc = PT.accept_prefix(match)                       # maximal prefix
-        n_acc = int(P.cntp(acc))
-        accepted_hist.append(n_acc)
+        # ---- FFR acceptance: brkb over the per-lane mismatch predicate ----
+        match = draft == tgt_next[:, :-1]            # (B, K)
+        acc = PT.accept_prefix(match)                # maximal prefix per lane
+        n_acc = P.cntp(acc)                          # (B,)
+        accepted_hist.append(jnp.where(alive, n_acc, -1))   # -1 = dead lane
 
-        # accepted tokens commit; the first mismatching lane is replaced by
-        # the target's own token (the architectural retry of the first fault)
-        commit = [int(draft_vec[i]) for i in range(n_acc)]
-        commit.append(int(tgt_next[n_acc]))
-        for t in commit:
-            out.append(t)
-            if len(out) >= n_tokens:
-                break
+        # committed window: accepted draft tokens, then the target's own
+        # token at the first fault (the architectural retry)
+        fix = jnp.take_along_axis(tgt_next, n_acc[:, None], axis=1)  # (B, 1)
+        draft_ext = jnp.concatenate([draft, fix], axis=1)            # (B, K+1)
+        commit = jnp.where(j < n_acc[:, None], draft_ext, fix)       # (B, K+1)
+
+        # valid partition of the commit window: whilelt against each lane's
+        # remaining budget, then brka on the stop predicate (stop commits,
+        # nothing after it does)
+        remaining = n_tokens - n_gen                                 # (B,)
+        valid = (j < (n_acc + 1)[:, None]) & (j < remaining[:, None])
+        valid = valid & alive[:, None]
+        if stop_token is not None:
+            valid = PT.brka(valid, commit == stop_token)
+
+        # scatter committed tokens at each lane's write cursor; invalid
+        # window slots are routed out of bounds and dropped, so they can
+        # never clobber a valid lane's write
+        cols = jnp.where(valid, n_gen[:, None] + j, n_tokens)
+        out = out.at[rows, cols].set(commit, mode="drop")
+        n_commit = P.cntp(valid)                                     # (B,)
+        n_gen = n_gen + n_commit
 
         # ---- roll caches back to the committed position ----
-        # Rejected lanes' K/V are inert (whilelt predication by pos) and the
-        # already-written accepted K/V stays valid, so rollback = set pos.
-        if n_acc == k_draft:
-            # fully-accepted window: the draft never wrote K/V for its last
-            # speculation; one extra decode keeps its cache gap-free
-            _, dc = decode_d(draft_params, {"token": draft_toks[-1][:, None]}, dc)
-        n_commit = n_acc + 1
-        new_pos = tcache["pos"] + n_commit
-        tcache = _rollback(tc, new_pos)
-        dcache = _rollback(dc, new_pos)
-        cur = jnp.asarray([out[-1]], jnp.int32)
+        # Stale slots beyond pos are inert (whilelt predication by kv_lens);
+        # dead lanes keep their old pos, live lanes advance by n_acc + 1.
+        stopped = (jnp.any(valid & (commit == stop_token), axis=1)
+                   if stop_token is not None else jnp.zeros((b,), bool))
+        new_pos = jnp.where(alive, pos0 + n_acc + 1, pos0)
+        tcache = _rollback(tcache, new_pos)
+        dcache = _rollback(dcache, new_pos)
 
-    stats = {"accept_counts": accepted_hist,
-             "mean_accepted": (sum(accepted_hist) / len(accepted_hist)
-                               if accepted_hist else 0.0),
-             "k_draft": k_draft}
-    return jnp.asarray(out[:n_tokens], jnp.int32), stats
+        # SVE lastb: the next feed token is each lane's last committed one
+        cur = jnp.where(alive & (n_commit > 0),
+                        PT.lastb(valid, commit), cur)
+        alive = alive & ~stopped & (n_gen < n_tokens)
+
+    counts = [np.asarray(c) for c in accepted_hist]
+    if b == 1:
+        flat = [int(c[0]) for c in counts]
+        stats = {"accept_counts": flat,
+                 "mean_accepted": (sum(flat) / len(flat) if flat else 0.0),
+                 "k_draft": k_draft,
+                 "n_generated": np.asarray(n_gen)}
+        return out[0, :n_tokens], stats
+    live = np.concatenate([c[c >= 0] for c in counts]) if counts else np.array([])
+    mean = float(live.mean()) if live.size else 0.0
+    stats = {"accept_counts": counts, "mean_accepted": mean,
+             "k_draft": k_draft, "n_generated": np.asarray(n_gen)}
+    return out, stats
 
 
 def _rollback(cache, new_pos):
-    """Set the cache position (stale slots beyond pos are inert: every
-    attention read is predicated by kv_lens = pos + 1 — whilelt makes
+    """Set the per-lane cache position (stale slots beyond pos are inert:
+    every attention read is predicated by kv_lens = pos + 1 — whilelt makes
     rollback free, no memory needs clearing)."""
     cache = dict(cache)
     cache["pos"] = jnp.broadcast_to(new_pos, cache["pos"].shape)

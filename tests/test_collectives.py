@@ -13,6 +13,16 @@ from repro.dist.collectives import (ordered_psum, pairwise_psum,
                                     compressed_psum)
 from repro.launch.mesh import make_mesh
 
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    def smap(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    def smap(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
 mesh = make_mesh((8,), ("data",))
 rng = np.random.RandomState(0)
 x = rng.randn(8, 16).astype(np.float32)
@@ -20,8 +30,7 @@ x = rng.randn(8, 16).astype(np.float32)
 # ---- ordered_psum: bit-identical to the sequential loop over shards ----
 def f(xs):
     return ordered_psum(xs, "data")
-out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(),
-                            check_vma=False))(
+out = jax.jit(smap(f, mesh=mesh, in_specs=P("data"), out_specs=P()))(
     jnp.asarray(x).reshape(8, 1, 16))
 want = np.zeros((1, 16), np.float32)
 for i in range(8):
@@ -30,9 +39,8 @@ np.testing.assert_array_equal(np.asarray(out).reshape(1, 16), want)
 print("ordered OK")
 
 # ---- pairwise_psum: deterministic and close to f64 ----
-out2 = jax.jit(jax.shard_map(lambda xs: pairwise_psum(xs, "data"), mesh=mesh,
-                             in_specs=P("data"), out_specs=P(),
-                             check_vma=False))(
+out2 = jax.jit(smap(lambda xs: pairwise_psum(xs, "data"), mesh=mesh,
+                    in_specs=P("data"), out_specs=P()))(
     jnp.asarray(x).reshape(8, 1, 16))
 np.testing.assert_allclose(np.asarray(out2).reshape(1, 16),
                            x.sum(0, keepdims=True), rtol=1e-5, atol=1e-5)
@@ -41,10 +49,9 @@ print("pairwise OK")
 # ---- compressed_psum: int8 + error feedback converges like exact mean ----
 def step(g_local, err):
     return compressed_psum(g_local, "data", err)
-jstep = jax.jit(jax.shard_map(step, mesh=mesh,
-                              in_specs=(P("data"), P("data")),
-                              out_specs=(P(), P("data")),
-                              check_vma=False))
+jstep = jax.jit(smap(step, mesh=mesh,
+                     in_specs=(P("data"), P("data")),
+                     out_specs=(P(), P("data"))))
 err = jnp.zeros((8, 1, 16), jnp.float32)
 # single round: quantization error bounded by scale
 g = jnp.asarray(x).reshape(8, 1, 16)
@@ -68,6 +75,10 @@ def test_collectives_on_submesh():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # force CPU: without this jax probes for
+                            # accelerator plugins and can hang on
+                            # network lookups in the bare subprocess
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout + r.stderr
     for tag in ("ordered OK", "pairwise OK", "compressed OK"):

@@ -1,0 +1,170 @@
+"""Lane-permutation primitives (SVE compact/splice/lastb) + the cache lane
+interface they drive.  Deterministic sweeps (hypothesis-free) so the tier-1
+suite always exercises them; see test_partition.py for the property-test
+versions of the partition algebra itself."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import partition as PT
+from repro.core import predicate as P
+from repro.models import ModelConfig, gather_lanes, get_model, slot_update
+
+
+def _rand_pred(rng, vl):
+    return jnp.asarray(rng.rand(vl) < 0.5)
+
+
+# ---------------------------------------------------------------------------
+# compact / splice / lastb semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vl", [1, 2, 7, 16, 33])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_compact_matches_oracle(vl, seed):
+    rng = np.random.RandomState(100 * vl + seed)
+    p = _rand_pred(rng, vl)
+    x = jnp.asarray(rng.randint(0, 1000, vl))
+    got = np.asarray(PT.compact(p, x))
+    active = np.asarray(x)[np.asarray(p)]
+    want = np.concatenate([active, np.zeros(vl - len(active), np.int64)])
+    np.testing.assert_array_equal(got, want.astype(got.dtype))
+
+
+@pytest.mark.parametrize("vl", [1, 3, 8, 21])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_splice_matches_oracle(vl, seed):
+    rng = np.random.RandomState(7 * vl + seed)
+    p = _rand_pred(rng, vl)
+    a = jnp.asarray(rng.randint(0, 1000, vl))
+    b = jnp.asarray(rng.randint(0, 1000, vl))
+    got = np.asarray(PT.splice(p, a, b))
+    pn, an, bn = np.asarray(p), np.asarray(a), np.asarray(b)
+    if pn.any():
+        first, last = pn.argmax(), vl - 1 - pn[::-1].argmax()
+        seg = an[first:last + 1]
+    else:
+        seg = an[:0]
+    want = np.concatenate([seg, bn[:vl - len(seg)]])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_compact_splice_roundtrip():
+    """compact∘splice round-trip: compacting survivors then splicing in the
+    inactive-lane values at the tail reconstructs a permutation of x — and
+    with a prefix predicate it reconstructs x itself."""
+    rng = np.random.RandomState(0)
+    for vl in (1, 2, 5, 16, 40):
+        for _ in range(5):
+            p = _rand_pred(rng, vl)
+            x = jnp.asarray(rng.randint(0, 1000, vl))
+            n = int(P.cntp(p))
+            dense = PT.compact(p, x)
+            inactive = PT.compact(~p, x)
+            # splice the compacted survivors (a prefix partition of length n)
+            # with the compacted inactive values: a permutation of x
+            prefix = jnp.arange(vl) < n
+            merged = PT.splice(prefix, dense, inactive) if n else inactive
+            np.testing.assert_array_equal(np.sort(np.asarray(merged)),
+                                          np.sort(np.asarray(x)))
+            # prefix predicates are a fixed point of compaction
+            np.testing.assert_array_equal(
+                np.asarray(PT.compact(prefix, merged))[:n],
+                np.asarray(merged)[:n])
+
+
+def test_compact_perm_is_permutation_and_stable():
+    rng = np.random.RandomState(3)
+    for vl in (1, 4, 17, 64):
+        p = _rand_pred(rng, vl)
+        perm = np.asarray(PT.compact_perm(p))
+        assert sorted(perm.tolist()) == list(range(vl))
+        pn = np.asarray(p)
+        n = pn.sum()
+        # active indices first, in original order; inactive after, in order
+        np.testing.assert_array_equal(perm[:n], np.flatnonzero(pn))
+        np.testing.assert_array_equal(perm[n:], np.flatnonzero(~pn))
+
+
+def test_lastb_lasta():
+    p = jnp.asarray([False, True, True, False])
+    x = jnp.asarray([10, 20, 30, 40])
+    assert int(PT.lastb(p, x)) == 30
+    assert int(PT.lasta(p, x)) == 40
+    none = jnp.zeros(4, bool)
+    assert int(PT.lastb(none, x)) == 40          # architected fallback: lane VL-1
+    assert int(PT.lasta(none, x)) == 10
+    # batched rows
+    pb = jnp.stack([p, jnp.asarray([True, False, False, False])])
+    xb = jnp.stack([x, x])
+    np.testing.assert_array_equal(np.asarray(PT.lastb(pb, xb)), [30, 10])
+
+
+# ---------------------------------------------------------------------------
+# whilelt dtype promotion + saturating overflow (runs without hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_whilelt_index_dtype_follows_inputs():
+    # weak Python ints resolve to the default int dtype
+    assert np.asarray(P.whilelt(0, 4, 8)).tolist() == [True] * 4 + [False] * 4
+    # explicit narrow dtypes promote, never downcast
+    p = P.whilelt(jnp.int16(3), jnp.int32(6), 8)
+    assert np.asarray(p).tolist() == [True] * 3 + [False] * 5
+
+
+def test_whilelt_saturates_at_int_max():
+    """Near INT_MAX the architected semantics saturate instead of wrapping:
+    lanes whose element index overflows must be INACTIVE even though the
+    wrapped value would compare < limit."""
+    imax = np.int32(np.iinfo(np.int32).max)
+    p = np.asarray(P.whilelt(imax - 2, imax, 8))
+    # elements imax-2, imax-1 are < imax; imax hits the limit; beyond wraps
+    assert p.tolist() == [True, True] + [False] * 6
+    # degenerate: start == INT_MAX, limit == INT_MAX -> empty partition
+    assert not np.asarray(P.whilelt(imax, imax, 8)).any()
+
+
+# ---------------------------------------------------------------------------
+# cache lane interface: gather_lanes / slot_update
+# ---------------------------------------------------------------------------
+
+BASE = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+            vocab_size=32, param_dtype="float32", compute_dtype="float32")
+
+
+def test_gather_then_slot_update_roundtrip():
+    cfg = ModelConfig(name="t", family="dense", **BASE)
+    model = get_model(cfg)
+    cache = model.make_cache(cfg, 4, 8)
+    rng = np.random.RandomState(0)
+    cache = {k: jnp.asarray(rng.randn(*v.shape).astype(np.float32), v.dtype)
+             if v.ndim > 1 else jnp.arange(v.shape[0], dtype=v.dtype)
+             for k, v in cache.items()}
+    # pull lanes [2, 0] out, write them into lanes [1, 3] of a zero cache
+    sub = gather_lanes(cfg, cache, jnp.asarray([2, 0]))
+    dst = model.make_cache(cfg, 4, 8)
+    dst = slot_update(cfg, dst, jnp.asarray([1, 3]), sub)
+    np.testing.assert_array_equal(np.asarray(dst["k"][:, 1]),
+                                  np.asarray(cache["k"][:, 2]))
+    np.testing.assert_array_equal(np.asarray(dst["v"][:, 3]),
+                                  np.asarray(cache["v"][:, 0]))
+    assert int(dst["pos"][1]) == 2 and int(dst["pos"][3]) == 0
+    # untouched lanes stay zero
+    assert float(jnp.abs(dst["k"][:, 0]).sum()) == 0.0
+
+
+@pytest.mark.parametrize("family,kwargs", [
+    ("dense", {}),
+    ("moe", dict(n_experts=4, top_k=2)),
+    ("ssm", dict(ssm_state=8, ssm_headdim=8, ssm_chunk=8)),
+])
+def test_cache_batch_axes_cover_every_key(family, kwargs):
+    cfg = ModelConfig(name="t", family=family, **{**BASE, **kwargs})
+    model = get_model(cfg)
+    cache = (model.make_cache(cfg, 3, 8) if family != "ssm"
+             else model.make_cache(cfg, 3))
+    axes = model.cache_batch_axes(cfg)
+    assert set(axes) == set(cache)
+    for k, v in cache.items():
+        assert v.shape[axes[k]] == 3, (k, v.shape, axes[k])
