@@ -1,14 +1,20 @@
 """Serving throughput under Poisson traffic: tokens/sec and lane occupancy
 for the continuous-batching scheduler vs the static-batch engine, at several
-lane capacities.  Emits ``BENCH_serving.json`` so the perf trajectory of the
-serve path is recorded per PR.
+lane capacities — plus a PAGED leg that serves the same trace at HALF the
+dense KV memory and reports page-pool occupancy and prefix-hit rate.  Emits
+``BENCH_serving.json`` so the perf trajectory of the serve path is recorded
+per PR.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving [--fast]
+    PYTHONPATH=src python -m benchmarks.bench_serving [--fast] \
+        [--seed 0] [--trace-len 8]
 
 The arrival trace is Poisson in DECODE-STEP time (the scheduler's clock):
 request inter-arrival gaps are exponential with the given rate, so bursts and
 lulls both occur — exactly the ragged traffic that makes lane recycling (and
-compaction below the occupancy threshold) pay off.
+compaction below the occupancy threshold) pay off.  A fraction of requests
+share a common "system prompt" prefix, the traffic shape that prefix sharing
+converts into skipped prefill work.  ``--seed``/``--trace-len`` pin the trace
+for the CI smoke job (deterministic, < 2 min).
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.paging import pages_needed
 from repro.models import ModelConfig, get_model
 from repro.serve import ContinuousBatchingScheduler, ServeEngine
 
@@ -28,24 +35,38 @@ CFG = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
            vocab_size=256, param_dtype="float32", compute_dtype="float32")
 
 
-def poisson_trace(rng, n_requests, rate, prompt_lo, prompt_hi):
-    """(arrival_step, prompt) pairs with exponential inter-arrival gaps."""
+def poisson_trace(rng, n_requests, rate, prompt_lo, prompt_hi,
+                  share_frac=0.0, shared_prefix_len=8):
+    """(arrival_step, prompt) pairs with exponential inter-arrival gaps.
+
+    ``share_frac`` of the requests open with one common prefix (a "system
+    prompt"), the traffic shape prefix sharing converts into refcount bumps.
+    """
     t = 0.0
     out = []
+    prefix = rng.randint(1, CFG["vocab_size"], shared_prefix_len)
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
-        out.append((t, rng.randint(1, CFG["vocab_size"],
-                                   rng.randint(prompt_lo, prompt_hi))))
+        prompt = rng.randint(1, CFG["vocab_size"],
+                             rng.randint(prompt_lo, prompt_hi))
+        if rng.rand() < share_frac:
+            prompt = np.concatenate([prefix, prompt])[:prompt_hi]
+        # ragged per-request budgets: co-admitted requests then retire at
+        # DIFFERENT rounds, so a donor's prefix pages are still resident when
+        # sharers arrive (uniform budgets retire whole admission waves at
+        # once and the prefix index would always be empty at lookup time)
+        out.append((t, prompt, int(rng.randint(3, 9))))
     return out
 
 
 def bench_capacity(eng, trace, *, capacity, max_len, chunk,
-                   compact_threshold):
+                   compact_threshold, page_size=None, pool_pages=None):
     sched = ContinuousBatchingScheduler(
         eng, capacity=capacity, max_len=max_len, chunk=chunk,
-        compact_threshold=compact_threshold)
-    for arrival, prompt in trace:
-        sched.submit(prompt, arrival=arrival)
+        compact_threshold=compact_threshold, page_size=page_size,
+        pool_pages=pool_pages)
+    for arrival, prompt, max_new in trace:
+        sched.submit(prompt, arrival=arrival, max_new_tokens=max_new)
     t0 = time.perf_counter()
     results = sched.run()
     wall = time.perf_counter() - t0
@@ -53,7 +74,7 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
     occ = sched.stats["occupancy_trace"]
     lane_eff = (sched.stats["active_lane_steps"]
                 / max(sched.stats["lane_steps"], 1))
-    return {
+    rec = {
         "capacity": capacity,
         "requests": len(results),
         "tokens": int(toks),
@@ -64,12 +85,25 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
         "compactions": sched.stats["compactions"],
         "rounds": sched.stats["steps"],
     }
+    if page_size is not None:
+        pocc = sched.stats["page_occupancy_trace"]
+        rec.update({
+            "page_size": page_size,
+            "pool_pages": sched.pool_pages,
+            "mean_page_occupancy": float(np.mean(pocc)) if pocc else 0.0,
+            "prefix_hits": sched.stats["prefix_hits"],
+            "prefix_hit_rate": sched.stats["prefix_hits"] / max(len(results), 1),
+            "prefix_hit_tokens": sched.stats["prefix_hit_tokens"],
+            "prefill_tokens": sched.stats["prefill_tokens"],
+            "page_waits": sched.stats["page_waits"],
+        })
+    return rec
 
 
 def bench_static(eng, trace, *, capacity, max_len):
     """Static batching baseline: serve the same requests in fixed batches of
     ``capacity`` (each batch waits for its slowest lane)."""
-    prompts = [p for _, p in trace]
+    prompts = [p for _, p, _ in trace]
     t0 = time.perf_counter()
     toks = 0
     for i in range(0, len(prompts), capacity):
@@ -91,13 +125,23 @@ def bench_static(eng, trace, *, capacity, max_len):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--requests", "--trace-len", dest="trace_len", type=int,
+                    default=None,
+                    help="number of requests in the trace (deterministic "
+                         "given --seed)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace RNG seed (fixed trace for the CI smoke job)")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per decode step")
+    ap.add_argument("--share-frac", type=float, default=0.4,
+                    help="fraction of requests opening with the common "
+                         "system-prompt prefix")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV page size for the paged leg")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
-    n_requests = args.requests or (8 if args.fast else 24)
+    n_requests = args.trace_len or (8 if args.fast else 24)
     capacities = [2, 4] if args.fast else [2, 4, 8]
     max_new, max_len = 8, 24
 
@@ -106,12 +150,15 @@ def main(argv=None):
     params, _ = model.init(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, max_new_tokens=max_new, stop_token=7)
 
-    rng = np.random.RandomState(0)
-    trace = poisson_trace(rng, n_requests, args.rate, 4, 13)
+    rng = np.random.RandomState(args.seed)
+    trace = poisson_trace(rng, n_requests, args.rate, 4, 13,
+                          share_frac=args.share_frac,
+                          shared_prefix_len=args.page_size)
 
     record = {"bench": "serving", "requests": n_requests, "rate": args.rate,
+              "seed": args.seed, "share_frac": args.share_frac,
               "max_new_tokens": max_new, "cfg": CFG,
-              "continuous": [], "static": []}
+              "continuous": [], "static": [], "paged": []}
     for cap in capacities:
         # untimed warmup over the FULL trace: the admission prefill shapes
         # are bucketed but still trace-dependent, so replaying the identical
@@ -124,10 +171,28 @@ def main(argv=None):
         bench_static(eng, trace, capacity=cap, max_len=max_len)  # warmup
         s = bench_static(eng, trace, capacity=cap, max_len=max_len)
         record["static"].append(s)
+        # paged leg at HALF the dense KV memory: tokens/sec at fixed memory
+        # is the number the paged layout is supposed to move.  The floor is
+        # one lane's worst case — below that a max-size request can never
+        # admit — which keeps the pool at exactly half for capacity >= 2.
+        per_lane = pages_needed(max_len, args.page_size)
+        dense_pages = cap * per_lane
+        pool = max(dense_pages // 2, per_lane)
+        bench_capacity(eng, trace, capacity=cap, max_len=max_len, chunk=4,
+                       compact_threshold=0.5, page_size=args.page_size,
+                       pool_pages=pool)
+        p = bench_capacity(eng, trace, capacity=cap, max_len=max_len, chunk=4,
+                           compact_threshold=0.5, page_size=args.page_size,
+                           pool_pages=pool)
+        record["paged"].append(p)
         print(f"capacity={cap:2d}  continuous {r['tokens_per_s']:8.1f} tok/s "
               f"(occ {r['mean_occupancy']:.2f}, "
               f"compactions {r['compactions']})   "
-              f"static {s['tokens_per_s']:8.1f} tok/s")
+              f"static {s['tokens_per_s']:8.1f} tok/s   "
+              f"paged@{p['pool_pages']}/{dense_pages}pg "
+              f"{p['tokens_per_s']:8.1f} tok/s "
+              f"(pool occ {p['mean_page_occupancy']:.2f}, "
+              f"prefix hits {p['prefix_hits']}/{p['requests']})")
 
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)

@@ -4,6 +4,6 @@ execution, first-faulting speculation, vector partitioning and horizontal
 operations, adapted for TPU execution at lane/chip/cluster scales.
 """
 
-from . import ffr, partition, predicate, reductions, vla  # noqa: F401
+from . import ffr, paging, partition, predicate, reductions, vla  # noqa: F401
 
-__all__ = ["vla", "predicate", "partition", "ffr", "reductions"]
+__all__ = ["vla", "predicate", "partition", "ffr", "reductions", "paging"]

@@ -1,0 +1,122 @@
+"""Page-table indirection (SVE §2.3.3 gather/scatter) for non-contiguous state.
+
+SVE's gather-load / scatter-store instructions make non-contiguous physical
+layout a first-class citizen: code addresses LOGICAL elements while the
+hardware indirects through an index vector.  This module applies the same
+contract to decode caches: a *page pool* holds fixed-size physical pages and a
+per-lane *page table* (an index vector) maps logical token blocks to physical
+pages.  Every access below is a pure ``jnp.take`` / ``.at[].set`` — the JAX
+spelling of gather-load / scatter-store — so the compiler sees plain index
+arithmetic and the serving layer can reshuffle physical placement (allocation,
+reuse, prefix sharing) without ever moving the logical view.
+
+Layout conventions
+------------------
+* a **pool** is ``lead + (P, Hkv, page_size, D)`` — ``lead`` is any tuple of
+  leading axes (layer stacks etc.), ``P`` the physical page count.
+* a **page table** is ``(B, n_pages) int32`` — lane b's logical block j lives
+  in physical page ``table[b, j]``.  One page id spans ALL pools of a cache
+  (every layer's K and V for that token block), so refcounting is per page.
+* the dense layout is the degenerate case ``page_size == max_len``,
+  ``table[b] == [b]`` — one private page per lane, gather is the identity
+  permutation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pages_needed(length: int, page_size: int) -> int:
+    """How many pages cover ``length`` tokens (the strip-mine trip count)."""
+    return -(-length // page_size)
+
+
+def page_whilelt(lens, n_pages: int, page_size: int) -> Array:
+    """Page-granular ``whilelt``: page j of a lane is live iff its first
+    token position ``j * page_size`` is below the lane's valid length.
+
+    Shape ``(*lens, n_pages)`` bool — the governing predicate for page-table
+    walks (which table entries are meaningful) exactly as ``whilelt`` governs
+    element strips.
+    """
+    first_tok = jnp.arange(n_pages, dtype=jnp.int32) * page_size
+    return first_tok < jnp.asarray(lens, jnp.int32)[..., None]
+
+
+def gather_pages(pool: Array, table: Array, *, n_lead: int = 0) -> Array:
+    """Gather-load the dense logical view of a paged tensor.
+
+    pool: ``lead + (P, Hkv, page_size, D)``; table: ``(B, n_pages) int32``.
+    Returns ``lead + (B, Hkv, n_pages * page_size, D)`` where lane b's logical
+    positions ``[j*ps, (j+1)*ps)`` read physical page ``table[b, j]`` — the
+    SVE gather-load with the page table as the index vector.  Out-of-range
+    page ids clamp (JAX gather semantics); garbage beyond a lane's valid
+    length is masked downstream by ``kv_lens`` predicates, mirroring the
+    dense cache's garbage-beyond-pos contract.
+    """
+    b, n_pages = table.shape
+    lead = pool.shape[:n_lead]
+    hkv, ps, d = pool.shape[n_lead + 1:]
+    flat = jnp.take(pool, table.reshape(-1).astype(jnp.int32), axis=n_lead)
+    out = flat.reshape(lead + (b, n_pages, hkv, ps, d))
+    out = jnp.moveaxis(out, n_lead + 1, n_lead + 2)     # lead+(B,Hkv,n,ps,D)
+    return out.reshape(lead + (b, hkv, n_pages * ps, d))
+
+
+def scatter_page(pool: Array, page_ids: Array, offsets: Array, values: Array,
+                 *, n_lead: int = 0) -> Array:
+    """Scatter-store one element per lane into its page.
+
+    ``values`` is ``lead + (B, Hkv, D)``; lane b's element lands at
+    ``pool[..., page_ids[b], :, offsets[b], :]``.  Targets must be distinct
+    across lanes (the serving invariant: every lane's write position lives in
+    a page it owns exclusively — shared prefix pages are immutable).
+    """
+    lead = pool.shape[:n_lead]
+    hkv, d = pool.shape[n_lead + 1], pool.shape[n_lead + 3]
+    b = page_ids.shape[0]
+    pool2 = pool.reshape((-1,) + pool.shape[n_lead:])            # (lead*,P,Hkv,ps,D)
+    vals = values.reshape((-1, b, hkv, d))                       # (lead*,B,Hkv,D)
+    vals = jnp.moveaxis(vals, 0, 1)                              # (B,lead*,Hkv,D)
+    idx = (slice(None), page_ids.astype(jnp.int32), slice(None),
+           offsets.astype(jnp.int32), slice(None))
+    # the two advanced indices are non-adjacent, so the broadcast lane axis
+    # leads the indexed result — vals is laid out to match
+    pool2 = pool2.at[idx].set(vals.astype(pool.dtype))
+    return pool2.reshape(lead + pool.shape[n_lead:])
+
+
+def scatter_block(pool: Array, page_ids: Array, blocks: Array,
+                  *, n_lead: int = 0) -> Array:
+    """Scatter-store whole pages: ``blocks`` is ``(K,) + lead + (Hkv, ps, D)``
+    written to physical pages ``page_ids (K,)`` — the admission path copying
+    freshly prefilled K/V blocks into their allocated pages.
+    """
+    pool_m = jnp.moveaxis(pool, n_lead, 0)                       # (P,)+lead+...
+    pool_m = pool_m.at[page_ids.astype(jnp.int32)].set(blocks.astype(pool.dtype))
+    return jnp.moveaxis(pool_m, 0, n_lead)
+
+
+def gather_block(pool: Array, page_ids: Array, *, n_lead: int = 0) -> Array:
+    """Gather whole pages: returns ``(K,) + lead + (Hkv, ps, D)`` for pages
+    ``page_ids (K,)`` — used to seed a prefill sub-batch with resident shared
+    prefix pages."""
+    return jnp.moveaxis(jnp.take(pool, page_ids.astype(jnp.int32), axis=n_lead),
+                        n_lead, 0)
+
+
+def alloc_pools(spec: dict, pool_pages: int, page_size: int, kv_heads: int,
+                head_dim: int, dtype) -> dict:
+    """Allocate the zeroed page pools for a family's paged-cache spec.
+
+    ``spec`` maps cache key -> tuple of leading (layer-stack) dims; the pool
+    for key ``k`` is stored under ``k + "_pages"`` with shape
+    ``lead + (pool_pages, kv_heads, page_size, head_dim)``.
+    """
+    return {key + "_pages": jnp.zeros(tuple(lead) + (pool_pages, kv_heads,
+                                                     page_size, head_dim), dtype)
+            for key, lead in spec.items()}

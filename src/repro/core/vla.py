@@ -16,7 +16,6 @@ always a multiple of 128, with the sublane dim a multiple of the dtype packing.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import jax.numpy as jnp

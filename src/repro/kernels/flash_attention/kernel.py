@@ -91,6 +91,88 @@ def _flash_kernel(
         o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Paged variant: the page table drives the K/V BlockSpec index_map
+# ---------------------------------------------------------------------------
+#
+# With scalar prefetch (PrefetchScalarGridSpec) the page table is available to
+# the index_map itself, so the pipeline fetches physical page
+# ``table[b, j]`` when the grid asks for lane b's logical block j — the SVE
+# gather-load contract expressed at the block-fetch level: the kernel body is
+# UNCHANGED from the dense path (same predicate algebra, same online softmax),
+# only the address stream indirects through the index vector.
+
+def _flash_kernel_paged(
+    # scalar-prefetch operands (SMEM)
+    table_ref, kvlen_ref, qoff_ref, win_ref,
+    # blocked operands
+    q_ref, k_ref, v_ref,
+    # blocked output
+    o_ref,
+    # VMEM scratch
+    m_scr, l_scr, acc_scr,
+    *, bq: int, page_size: int, n_pages: int, causal: bool, scale: float,
+):
+    del table_ref                                  # consumed by the index_maps
+    _flash_kernel(kvlen_ref, qoff_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, bq=bq, bk=page_size, n_kv=n_pages,
+                  causal=causal, scale=scale)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "causal", "scale", "interpret"))
+def flash_attention_pallas_paged(
+    q, k_pool, v_pool, page_table, kv_lens, q_offset, window,
+    *, bq: int = 256, causal: bool = False,
+    scale: float | None = None, interpret: bool = True,
+):
+    """q: (B, Hq, Sq, D) with Sq % bq == 0; k_pool/v_pool: (P, Hkv, ps, D);
+    page_table: (B, n_pages) int32.  The KV grid axis walks LOGICAL pages;
+    the BlockSpec index_map reads the prefetched page table to pick the
+    PHYSICAL page, so block (b, j) fetches ``pool[table[b, j]]``."""
+    bsz, hq, sq, d = q.shape
+    hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    n_pages = page_table.shape[1]
+    group = hq // hkv
+    assert sq % bq == 0, (sq, bq)
+    n_q = sq // bq
+    scale = (d ** -0.5) if scale is None else scale
+
+    kernel = functools.partial(
+        _flash_kernel_paged, bq=bq, page_size=ps, n_pages=n_pages,
+        causal=causal, scale=scale)
+
+    def q_map(b, h, i, j, table, kvl, qo, win):
+        return (b, h, i, 0)
+
+    def kv_map(b, h, i, j, table, kvl, qo, win):
+        return (table[b, j], h // group, 0, 0)     # the gather: index vector
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                     # table, kv_lens, qoff, win
+        grid=(bsz, hq, n_q, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, ps, d), kv_map),
+            pl.BlockSpec((1, 1, ps, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_lens, q_offset, window,
+      q, k_pool, v_pool)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bq", "bk", "causal", "scale", "interpret"))

@@ -4,11 +4,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import paging as _paging
 from repro.core import vla
 
 from . import ref as _ref
-from .kernel import flash_attention_pallas
-from .xla_impl import flash_attention_xla
+from .kernel import flash_attention_pallas, flash_attention_pallas_paged
+from .xla_impl import flash_attention_xla, flash_attention_xla_paged
 
 
 def _pick_blocks(sq: int, skv: int, d: int, dtype) -> tuple[int, int]:
@@ -32,7 +33,7 @@ def flash_attention(
     *, kv_lens=None, causal: bool = False, window: int | None = None,
     q_offset=None, scale: float | None = None,
     impl: str = "kernel", bq: int | None = None, bk: int | None = None,
-    interpret: bool = True,
+    interpret: bool = True, page_table=None,
 ):
     """Predicated attention.  q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).
 
@@ -43,7 +44,15 @@ def flash_attention(
     - ``impl``: "kernel" (Pallas TPU; interpret=True on CPU), "xla" (chunked
       lax.scan flash with custom VJP — the introspectable O(S)-memory path the
       dry-run lowers), or "naive" (quadratic oracle; tests only).
+    - ``page_table``: (B, n_pages) int32 — PAGED mode: ``k``/``v`` are page
+      POOLS of shape (P, Hkv, page_size, D) and attention reads K/V through
+      the table (SVE §2.3.3 gather-load).  Forward-only (serving).
     """
+    if page_table is not None:
+        return _flash_paged(q, k, v, page_table, kv_lens=kv_lens,
+                            causal=causal, window=window, q_offset=q_offset,
+                            scale=scale, impl=impl, bq=bq,
+                            interpret=interpret)
     b, hq, sq, d = q.shape
     skv = k.shape[2]
     if kv_lens is None:
@@ -83,4 +92,49 @@ def flash_attention(
         out = flash_attention_pallas(
             q, k, v, kv_lens, q_offset, win, bq=bq, bk=bk, causal=causal,
             scale=scale, interpret=interpret)
+    return out[:, :, :sq, :]
+
+
+def _flash_paged(q, k_pool, v_pool, page_table, *, kv_lens, causal, window,
+                 q_offset, scale, impl, bq, interpret):
+    """Paged dispatch: pools + page table instead of dense K/V."""
+    b, hq, sq, d = q.shape
+    ps = k_pool.shape[2]
+    n_pages = page_table.shape[1]
+    skv = n_pages * ps                               # logical KV extent
+    if kv_lens is None:
+        kv_lens = jnp.full((b,), skv, jnp.int32)
+    else:
+        kv_lens = jnp.asarray(kv_lens, jnp.int32)
+    if q_offset is None:
+        off = skv - sq if causal else 0
+        q_offset = jnp.full((b,), off, jnp.int32)
+    else:
+        q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+
+    if impl == "naive":
+        # quadratic oracle over the gathered dense view (tests only)
+        k = _paging.gather_pages(k_pool, page_table)
+        v = _paging.gather_pages(v_pool, page_table)
+        return _ref.mha_ref(q, k, v, kv_lens=kv_lens, causal=causal,
+                            window=window, q_offset=q_offset, scale=scale)
+
+    if bq is None:
+        bq, _ = _pick_blocks(sq, skv, d, q.dtype)
+    bq = min(bq, vla.pad_to_vl(sq, 8))
+    sq_p = vla.pad_to_vl(sq, bq)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    win = jnp.asarray(2 ** 30 if window is None else window,
+                      jnp.int32).reshape((1,))
+    scale_f = float(d ** -0.5) if scale is None else float(scale)
+    if impl == "xla":
+        out = flash_attention_xla_paged(
+            q, k_pool, v_pool, page_table, kv_lens, q_offset, win[0],
+            causal=causal, scale=scale_f, bq=bq)
+    else:
+        out = flash_attention_pallas_paged(
+            q, k_pool, v_pool, page_table, kv_lens, q_offset, win,
+            bq=bq, causal=causal, scale=scale_f, interpret=interpret)
     return out[:, :, :sq, :]

@@ -187,3 +187,68 @@ def flash_attention_xla(q, k, v, kv_lens, q_offset, window, *, causal,
                         scale, bq, bk):
     """Public entry (shapes already padded to block multiples by ops.py)."""
     return _flash(q, k, v, kv_lens, q_offset, window, causal, scale, bq, bk)
+
+
+# ---------------------------------------------------------------------------
+# Paged forward: K/V blocks ARE pages, fetched through the page table
+# ---------------------------------------------------------------------------
+
+def flash_attention_xla_paged(q, k_pool, v_pool, page_table, kv_lens,
+                              q_offset, window, *, causal, scale, bq):
+    """Flash forward over a PAGED KV cache (SVE §2.3.3 gather-load).
+
+    k_pool / v_pool: ``(P, Hkv, page_size, D)`` page pools; ``page_table``:
+    ``(B, n_pages) int32``.  The kv-block scan walks LOGICAL pages and fetches
+    each lane's physical page with a ``jnp.take`` on the pool — the index
+    vector, not the layout, addresses memory, so the same kernel serves any
+    physical placement (allocation order, prefix-shared pages, reuse).  The
+    online-softmax math is identical to the dense path with ``bk ==
+    page_size``; logical positions come from the page index, so masks are
+    unchanged.  Serving/decode only — no VJP.
+    """
+    from repro.core.paging import page_whilelt
+
+    b, h, sq, d = q.shape
+    hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    n_pg = page_table.shape[1]
+    g = h // hkv
+    f32 = jnp.float32
+    nq = sq // bq
+    qs = _split_q(q.astype(f32), bq).reshape(nq, b, hkv, g, bq, d)
+    # out-of-strip table entries may be stale: clamp them to page 0 under the
+    # page-granular whilelt so the gather never chases a freed id (the element
+    # predicate below masks their contribution anyway)
+    table = jnp.where(page_whilelt(kv_lens, n_pg, ps), page_table, 0)
+
+    def q_block(_, xs):
+        qb, iq = xs
+
+        def kv_block(carry, ik):
+            m, l, acc = carry
+            pids = table[:, ik]
+            kb = jnp.take(k_pool, pids, axis=0).astype(f32)   # (B,Hkv,ps,D)
+            vb = jnp.take(v_pool, pids, axis=0).astype(f32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
+            pred = _block_pred(iq, ik, bq, ps, kv_lens, q_offset, window,
+                               causal)[:, None, None]
+            s = jnp.where(pred, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(pred, jnp.exp(s - m_new[..., None]), 0.0)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, hkv, g, bq), NEG_INF, f32),
+                jnp.zeros((b, hkv, g, bq), f32),
+                jnp.zeros((b, hkv, g, bq, d), f32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init,
+                                      jnp.arange(n_pg, dtype=jnp.int32))
+        out_b = jnp.where(l[..., None] > 0.0,
+                          acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+        return None, out_b
+
+    _, out_blocks = jax.lax.scan(q_block, None,
+                                 (qs, jnp.arange(nq, dtype=jnp.int32)))
+    out = out_blocks.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, d)
+    return out.astype(q.dtype)

@@ -33,6 +33,14 @@ def main():
     ap.add_argument("--chunk", type=int, default=4,
                     help="decode steps between admission opportunities")
     ap.add_argument("--compact-threshold", type=float, default=0.5)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page; enables the paged cache "
+                         "(admission gated on page availability)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical pages in the pool (default: the dense "
+                         "footprint, capacity * pages-per-lane)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable prompt-prefix page sharing under --page-size")
     ap.add_argument("--static", action="store_true",
                     help="one-shot ServeEngine.generate instead of scheduler")
     args = ap.parse_args()
@@ -81,7 +89,9 @@ def main():
     max_len = args.prompt_len + args.max_new
     sched = ContinuousBatchingScheduler(
         eng, capacity=args.batch, max_len=max_len, chunk=args.chunk,
-        compact_threshold=args.compact_threshold)
+        compact_threshold=args.compact_threshold, page_size=args.page_size,
+        pool_pages=args.pool_pages,
+        prefix_sharing=not args.no_prefix_sharing)
     rid_len = {}
     for _ in range(args.requests):
         plen = int(rng.randint(4, args.prompt_len + 1))
@@ -96,6 +106,14 @@ def main():
     print(f"[scheduler] rounds={sched.stats['steps']} "
           f"compactions={sched.stats['compactions']} "
           f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}")
+    if args.page_size is not None:
+        pocc = sched.stats["page_occupancy_trace"]
+        print(f"[paged] pool={sched.pool_pages} pages "
+              f"(page_size={args.page_size})  "
+              f"mean pool occupancy={sum(pocc) / max(len(pocc), 1):.2f}  "
+              f"prefix hits={sched.stats['prefix_hits']} "
+              f"({sched.stats['prefix_hit_tokens']} tokens skipped)  "
+              f"page waits={sched.stats['page_waits']}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,8 @@ on the predicated attention + SSD kernels and the VLA core.
 
 import jax.numpy as jnp
 
+from repro.core import paging as PG
+
 from .config import ModelConfig  # noqa: F401
 
 
@@ -15,7 +17,9 @@ def get_model(cfg: "ModelConfig"):
     prefill(params, cfg, batch) -> (logits_last, cache);
     decode(params, cfg, batch, cache) -> (logits, cache);
     make_cache(cfg, batch_size, ...) -> cache pytree;
-    cache_batch_axes(cfg) -> {cache key: request-lane axis}.
+    cache_batch_axes(cfg) -> {cache key: request-lane axis};
+    paged_cache_spec(cfg) -> {KV cache key: leading layer-stack dims};
+    make_paged_cache(cfg, batch_size, max_len, page_size=, pool_pages=).
     """
     from . import dense, encdec, hybrid, moe, ssm
     return {
@@ -38,16 +42,31 @@ def get_model(cfg: "ModelConfig"):
 # "first axis that matches B" guessing).
 # ---------------------------------------------------------------------------
 
+def _lane_axes(cfg, cache):
+    """Lane axis per cache key, paged-layout aware: page pools carry NO lane
+    axis (lanes address them only through the page table), the page table's
+    lane axis is 0."""
+    axes = get_model(cfg).cache_batch_axes(cfg)
+    if "page_table" not in cache:
+        return axes
+    out = {k: ax for k, ax in axes.items() if k in cache}
+    out["page_table"] = 0
+    return out
+
+
 def gather_lanes(cfg, cache, lanes):
     """Permute/select request lanes of every cache array: out lane i takes the
     state of input lane ``lanes[i]`` (SVE ``compact``-style index gather).
 
     ``lanes`` may be shorter than the lane count (slicing a sub-batch out) or
-    a full permutation (lane compaction).  jit-safe.
+    a full permutation (lane compaction).  On a paged cache the pools pass
+    through untouched — moving a lane moves its page-table ROW, never its
+    pages, so compaction is O(n_pages) instead of O(cache).  jit-safe.
     """
-    axes = get_model(cfg).cache_batch_axes(cfg)
+    axes = _lane_axes(cfg, cache)
     lanes = jnp.asarray(lanes, jnp.int32)
-    return {k: jnp.take(v, lanes, axis=axes[k]) for k, v in cache.items()}
+    return {k: (jnp.take(v, lanes, axis=axes[k]) if k in axes else v)
+            for k, v in cache.items()}
 
 
 def slot_update(cfg, cache, lanes, sub_cache):
@@ -56,13 +75,89 @@ def slot_update(cfg, cache, lanes, sub_cache):
     scatters along each array's declared lane axis.
 
     This is the admission path of continuous batching: a freshly prefilled
-    sub-batch splices into recycled lanes of the live cache.  jit-safe.
+    sub-batch splices into recycled lanes of the live cache.  Keys without a
+    lane axis (page pools) and keys missing from ``sub_cache`` (paged
+    admission updates KV through page copies, not lane scatters) pass
+    through.  jit-safe.
     """
-    axes = get_model(cfg).cache_batch_axes(cfg)
+    axes = _lane_axes(cfg, cache)
     lanes = jnp.asarray(lanes, jnp.int32)
     out = dict(cache)
     for k, v in cache.items():
+        if k not in axes or k not in sub_cache:
+            continue
         ax = axes[k]
         idx = tuple([slice(None)] * ax + [lanes])
         out[k] = v.at[idx].set(sub_cache[k].astype(v.dtype))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Paged cache layout (SVE §2.3.3 gather/scatter applied to KV memory)
+#
+# A paged cache replaces each KV tensor's per-lane (max_len) axis with a
+# shared page POOL (``<key>_pages``: lead + (P, Hkv, page_size, D)) plus one
+# per-lane int32 ``page_table`` (B, n_pages) shared by every pool.  The dense
+# layout is the degenerate case page_size == max_len with one private page per
+# lane.  Two bridges connect the layouts:
+#
+#   * ``paged_view``     — gather-load the dense logical view (bitwise equal
+#                          to the dense cache the model functions expect);
+#   * ``paged_writeback``— scatter-store a decode step's single-token writes
+#                          back into the pools.
+#
+# Both are pure index gathers/scatters, jit-safe, and run INSIDE the serving
+# engine's compiled decode loop.
+# ---------------------------------------------------------------------------
+
+def is_paged(cache) -> bool:
+    return isinstance(cache, dict) and "page_table" in cache
+
+
+def paged_view(cfg, cache):
+    """Materialize the dense logical view of a paged cache through the page
+    table (SVE gather-load).  Non-paged per-lane entries pass through."""
+    spec = get_model(cfg).paged_cache_spec(cfg)
+    table = cache["page_table"]
+    out = {k: v for k, v in cache.items()
+           if k != "page_table" and not k.endswith("_pages")}
+    for key, lead in spec.items():
+        out[key] = PG.gather_pages(cache[key + "_pages"], table,
+                                   n_lead=len(lead))
+    return out
+
+
+def paged_writeback(cfg, cache, view, pos):
+    """Scatter the ONE token a decode step wrote at per-lane position ``pos``
+    from the dense view back into the page pools, and carry the updated
+    per-lane state (pos, conv/ssm state, ...) across.
+
+    ``pos`` is the position written (the lane's length BEFORE the step).
+    Writes land in the lane's tail page, which the allocator guarantees is
+    privately owned — shared prefix pages are immutable.
+    """
+    spec = get_model(cfg).paged_cache_spec(cfg)
+    table = cache["page_table"]
+    n_pages = table.shape[1]
+    out = dict(cache)
+    pos = jnp.asarray(pos, jnp.int32)
+    page_col = jnp.clip(pos // _page_size_of(cfg, cache), 0, n_pages - 1)
+    page_ids = jnp.take_along_axis(table, page_col[:, None], axis=1)[:, 0]
+    offsets = pos % _page_size_of(cfg, cache)
+    for key, lead in spec.items():
+        v = view[key]                                 # lead+(B,Hkv,S,D)
+        s = v.shape[-2]
+        idx = jnp.clip(pos, 0, s - 1).reshape((1,) * len(lead) + (-1, 1, 1, 1))
+        tok = jnp.take_along_axis(v, idx, axis=-2)[..., 0, :]   # lead+(B,Hkv,D)
+        out[key + "_pages"] = PG.scatter_page(cache[key + "_pages"], page_ids,
+                                              offsets, tok, n_lead=len(lead))
+    for k, v in view.items():
+        if k not in spec:
+            out[k] = v
+    return out
+
+
+def _page_size_of(cfg, cache):
+    spec = get_model(cfg).paged_cache_spec(cfg)
+    key, lead = next(iter(spec.items()))
+    return cache[key + "_pages"].shape[len(lead) + 2]

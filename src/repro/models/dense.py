@@ -14,7 +14,6 @@ Implementation notes
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -164,6 +163,50 @@ def cache_batch_axes(cfg):
     return {"k": 1, "v": 1, "pos": 0}
 
 
+# full prefix state lives in paged KV + pos, so prefix sharing is sound
+PAGED_PREFIX_OK = True
+
+
+def paged_decode_ok(cfg):
+    """decode() accepts a paged cache directly (flash attention reads K/V
+    through the page table instead of a gathered dense view)."""
+    return not cfg.cross_attn_group
+
+
+def paged_cache_spec(cfg):
+    """KV cache keys with a (max_len) token axis -> their leading layer dims.
+
+    Cross-attention K/V (llama-vision) are per-request constants, not
+    token-indexed, so they stay per-lane dense arrays.
+    """
+    if cfg.cross_attn_group:
+        g = cfg.cross_attn_group
+        return {"k": (cfg.n_layers // g, g - 1), "v": (cfg.n_layers // g, g - 1)}
+    return {"k": (cfg.n_layers,), "v": (cfg.n_layers,)}
+
+
+def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
+                     pool_pages: int, dtype=None):
+    """Paged decode cache: shared page pools + per-lane page table (+ the
+    non-token-indexed remainder of make_cache)."""
+    from repro.core import paging as PG
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache = PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
+                           hkv, hd, dtype)
+    cache["page_table"] = jnp.zeros(
+        (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
+    cache["pos"] = jnp.zeros((batch_size,), jnp.int32)
+    if cfg.cross_attn_group:
+        g = cfg.cross_attn_group
+        n_groups = cfg.n_layers // g
+        cache["cross_k"] = jnp.zeros(
+            (n_groups, batch_size, hkv, cfg.n_cross_tokens, hd), dtype)
+        cache["cross_v"] = jnp.zeros(
+            (n_groups, batch_size, hkv, cfg.n_cross_tokens, hd), dtype)
+    return cache
+
+
 def _cross_kv(params_cross_attn, cross_emb, cfg):
     """Precompute cross K/V from (stub) image embeddings for one group."""
     hd = cfg.resolved_head_dim
@@ -178,15 +221,24 @@ def _cross_kv(params_cross_attn, cross_emb, cfg):
 def prefill(params, cfg, batch, cache):
     """Run the prompt, fill caches, return (last-token logits, cache).
 
-    batch: tokens (B, S), lens (B,) [+ cross_emb].  The cache must have
-    max_len >= S.  Per-row ragged lengths are first-class (whilelt masks).
+    batch: tokens (B, S), lens (B,) [+ cross_emb] [+ pos0 (B,)].  The cache
+    must have max_len >= pos0 + S.  Per-row ragged lengths are first-class
+    (whilelt masks).  ``pos0`` is the per-row start offset of a SUFFIX
+    prefill: rows whose prompt prefix is already resident in the cache
+    (prefix sharing) run only their suffix tokens, attending over the cached
+    prefix K/V at positions [0, pos0) — per-row numerics are identical to a
+    cold prefill of the full prompt because K/V blocking depends only on the
+    cache length and each query row's mask depends only on its absolute
+    position.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
     lens = batch.get("lens")
     lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    zero_pos = jnp.zeros((b,), jnp.int32)
+    pos0 = batch.get("pos0")
+    pos0 = jnp.zeros((b,), jnp.int32) if pos0 is None else jnp.asarray(pos0, jnp.int32)
+    positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+    kv_lens = pos0 + lens
     x = L.embed(params["embed"], tokens, cfg)
     wins = layer_windows(cfg)
 
@@ -210,9 +262,9 @@ def prefill(params, cfg, batch, cache):
                     cvs.append(cv)
                 lp = jax.tree.map(lambda a, si=si: a[si], gp["self"])
                 h, (kn, vn) = L.block_apply(
-                    lp, h, positions, cfg, causal=True, kv_lens=lens,
-                    q_offset=zero_pos, cache=(cache["k"][gi, si], cache["v"][gi, si]),
-                    cache_pos=zero_pos)
+                    lp, h, positions, cfg, causal=True, kv_lens=kv_lens,
+                    q_offset=pos0, cache=(cache["k"][gi, si], cache["v"][gi, si]),
+                    cache_pos=pos0)
                 ks_g.append(kn)
                 vs_g.append(vn)
             new_k.append(jnp.stack(ks_g))
@@ -225,8 +277,8 @@ def prefill(params, cfg, batch, cache):
             h, = carry
             lp, win, kc, vc = xs
             h, (kc, vc) = L.block_apply(
-                lp, h, positions, cfg, causal=True, window=win, kv_lens=lens,
-                q_offset=zero_pos, cache=(kc, vc), cache_pos=zero_pos)
+                lp, h, positions, cfg, causal=True, window=win, kv_lens=kv_lens,
+                q_offset=pos0, cache=(kc, vc), cache_pos=pos0)
             return (h,), (kc, vc)
 
         (h,), (k_new, v_new) = jax.lax.scan(
@@ -234,7 +286,7 @@ def prefill(params, cfg, batch, cache):
         cache = dict(cache)
         cache["k"], cache["v"] = k_new, v_new
 
-    cache["pos"] = lens
+    cache["pos"] = pos0 + lens
     h = L.apply_norm(params["final_norm"], h, cfg)
     # logits at each row's last valid position (ragged gather)
     idx = jnp.clip(lens - 1, 0, s - 1)
@@ -276,6 +328,23 @@ def decode(params, cfg, batch, cache):
             new_v.append(jnp.stack(vs))
         cache = dict(cache)
         cache["k"], cache["v"] = jnp.stack(new_k), jnp.stack(new_v)
+    elif "k_pages" in cache:
+        # native paged decode: each layer's attention scatter-stores the new
+        # token into its page and gathers K/V blocks through the page table
+        # (SVE §2.3.3) — the pool, not a per-lane dense cache, is the operand
+        h = x
+        kp, vp = cache["k_pages"], cache["v_pages"]     # (L, P, Hkv, ps, Dh)
+        table = cache["page_table"]
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, li=li: a[li], params["blocks"])
+            h, (kl, vl) = L.block_apply(
+                lp, h, positions, cfg, causal=False, window=wins[li],
+                kv_lens=pos + 1, q_offset=pos, cache=(kp[li], vp[li], table),
+                cache_pos=pos)
+            kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
+            vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+        cache = dict(cache)
+        cache["k_pages"], cache["v_pages"] = kp, vp
     elif not cfg.scan_layers_decode:
         # unrolled decode: per-layer dynamic-update-slice on the STACKED cache
         # lets XLA alias in place — no scan-ys double buffer (EXPERIMENTS §Perf)

@@ -136,6 +136,34 @@ def cache_batch_axes(cfg):
             "src_lens": 0, "pos": 0}
 
 
+# cross K/V depend on the (per-request) source memory, so a shared text
+# prefix does not imply shared decoder state
+PAGED_PREFIX_OK = False
+
+
+def paged_cache_spec(cfg):
+    """Only decoder self-attention K/V grows with the target length; cross
+    K/V is a per-request constant of the source frames."""
+    return {"k": (cfg.n_dec_layers,), "v": (cfg.n_dec_layers,)}
+
+
+def make_paged_cache(cfg, batch_size: int, max_len: int, src_len: int = 1, *,
+                     page_size: int, pool_pages: int, dtype=None):
+    from repro.core import paging as PG
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    lcount = cfg.n_dec_layers
+    cache = PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
+                           hkv, hd, dtype)
+    cache["page_table"] = jnp.zeros(
+        (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
+    cache["cross_k"] = jnp.zeros((lcount, batch_size, hkv, src_len, hd), dtype)
+    cache["cross_v"] = jnp.zeros((lcount, batch_size, hkv, src_len, hd), dtype)
+    cache["src_lens"] = jnp.zeros((batch_size,), jnp.int32)
+    cache["pos"] = jnp.zeros((batch_size,), jnp.int32)
+    return cache
+
+
 def prefill(params, cfg, batch, cache):
     """Encode source + run decoder prompt, filling self and cross caches."""
     src_lens = batch.get("src_lens")

@@ -98,6 +98,32 @@ def cache_batch_axes(cfg):
             "shared_k": 1, "shared_v": 1, "pos": 0}
 
 
+# conv/ssm state is NOT paged, so a prompt prefix is not fully captured by
+# resident pages — prefix sharing would silently drop the SSM carry
+PAGED_PREFIX_OK = False
+
+
+def paged_cache_spec(cfg):
+    """Only the shared attention block's K/V grows with sequence length; the
+    mamba conv tails and SSM states stay per-lane O(1) arrays."""
+    _, n_groups, _ = _split_layout(cfg)
+    return {"shared_k": (n_groups,), "shared_v": (n_groups,)}
+
+
+def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
+                     pool_pages: int, dtype=None):
+    from repro.core import paging as PG
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    dense = make_cache(cfg, batch_size, max_len, dtype=dtype)
+    cache = {k: v for k, v in dense.items()
+             if k not in ("shared_k", "shared_v")}
+    cache.update(PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
+                                cfg.n_kv_heads, cfg.resolved_head_dim, dtype))
+    cache["page_table"] = jnp.zeros(
+        (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
+    return cache
+
+
 def _groups_cached(params, cfg, x, positions, cache, *, lens, q_offset,
                    cache_pos, causal, decode_step):
     shared = params["shared"]

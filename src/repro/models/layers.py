@@ -13,12 +13,12 @@ Conventions
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import paging as PG
 from repro.dist import sharding as SH
 from repro.kernels.flash_attention import flash_attention
 
@@ -296,15 +296,32 @@ def attention(p, x, positions, cfg, *,
         k = rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor)
 
     new_cache = None
+    page_table = None
     if cache is not None:
-        k_cache, v_cache = cache
-        k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, cache_pos)
-        k, v = k_cache.astype(cdt(cfg)), v_cache.astype(cdt(cfg))
-        new_cache = (k_cache, v_cache)
+        if len(cache) == 3:
+            # paged cache (k_pool, v_pool, page_table): scatter-store the new
+            # token into the lane's tail page; attention gathers K/V blocks
+            # through the page table (SVE §2.3.3).  Decode-only (Snew == 1).
+            k_pool, v_pool, page_table = cache
+            ps = k_pool.shape[2]
+            page_col = jnp.clip(cache_pos // ps, 0, page_table.shape[1] - 1)
+            page_ids = jnp.take_along_axis(page_table, page_col[:, None],
+                                           axis=1)[:, 0]
+            k_pool = PG.scatter_page(k_pool, page_ids, cache_pos % ps,
+                                     k[:, :, 0, :])
+            v_pool = PG.scatter_page(v_pool, page_ids, cache_pos % ps,
+                                     v[:, :, 0, :])
+            k, v = k_pool.astype(cdt(cfg)), v_pool.astype(cdt(cfg))
+            new_cache = (k_pool, v_pool)
+        else:
+            k_cache, v_cache = cache
+            k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, cache_pos)
+            k, v = k_cache.astype(cdt(cfg)), v_cache.astype(cdt(cfg))
+            new_cache = (k_cache, v_cache)
 
     out = flash_attention(
         q, k, v, kv_lens=kv_lens, causal=causal, window=window,
-        q_offset=q_offset, impl=cfg.attn_impl)
+        q_offset=q_offset, impl=cfg.attn_impl, page_table=page_table)
     out = shard_act(cfg, out, ("batch", "act_heads", None, None))
     out = _merge_heads(out).astype(cdt(cfg)) @ p["wo"].astype(cdt(cfg))
     if cfg.use_bias:

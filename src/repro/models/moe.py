@@ -209,6 +209,34 @@ def cache_batch_axes(cfg):
     return {"dense_k": 1, "dense_v": 1, "k": 1, "v": 1, "pos": 0}
 
 
+# prefix sharing is OFF for MoE: grouped expert dispatch (capacity dropping)
+# makes hidden states — and therefore cached K/V — depend on the batch
+# composition of the donor's prefill, so a sharer reusing donor pages is not
+# guaranteed bit-identical to its own cold prefill.  Paged layout itself is
+# sound (the view reproduces whatever was cached).
+PAGED_PREFIX_OK = False
+
+
+def paged_cache_spec(cfg):
+    """Every KV tensor pages; one page id spans dense AND MoE layer stacks."""
+    return {"dense_k": (max(cfg.first_k_dense, 1),),
+            "dense_v": (max(cfg.first_k_dense, 1),),
+            "k": (cfg.n_layers - cfg.first_k_dense,),
+            "v": (cfg.n_layers - cfg.first_k_dense,)}
+
+
+def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
+                     pool_pages: int, dtype=None):
+    from repro.core import paging as PG
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    cache = PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
+                           cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+    cache["page_table"] = jnp.zeros(
+        (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
+    cache["pos"] = jnp.zeros((batch_size,), jnp.int32)
+    return cache
+
+
 def _run_cached(params, cfg, x, positions, *, kv_lens, q_offset, cache,
                 cache_pos, causal):
     new_cache = dict(cache)
@@ -244,13 +272,14 @@ def prefill(params, cfg, batch, cache):
     b, s = tokens.shape
     lens = batch.get("lens")
     lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    zero = jnp.zeros((b,), jnp.int32)
+    pos0 = batch.get("pos0")                    # suffix prefill (prefix sharing)
+    pos0 = jnp.zeros((b,), jnp.int32) if pos0 is None else jnp.asarray(pos0, jnp.int32)
+    positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
     x = L.embed(params["embed"], tokens, cfg)
-    h, cache = _run_cached(params, cfg, x, positions, kv_lens=lens,
-                           q_offset=zero, cache=cache, cache_pos=zero,
+    h, cache = _run_cached(params, cfg, x, positions, kv_lens=pos0 + lens,
+                           q_offset=pos0, cache=cache, cache_pos=pos0,
                            causal=True)
-    cache["pos"] = lens
+    cache["pos"] = pos0 + lens
     h = L.apply_norm(params["final_norm"], h, cfg)
     idx = jnp.clip(lens - 1, 0, s - 1)
     h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]

@@ -197,6 +197,19 @@ def cache_batch_axes(cfg):
     return {"conv": 1, "state": 1, "pos": 0}
 
 
+def paged_cache_spec(cfg):
+    """SSM caches are length-independent — nothing to page (the degenerate
+    case of the paged layout: zero pools, every lane's state is O(1))."""
+    return {}
+
+
+def make_paged_cache(cfg, batch_size: int, max_len: int = 0, *,
+                     page_size: int = 0, pool_pages: int = 0, dtype=None):
+    raise ValueError(
+        "ssm caches carry no per-token KV state; paging does not apply — "
+        "serve this family with the dense cache (it is already O(1)/lane)")
+
+
 def prefill(params, cfg, batch, cache):
     tokens = batch["tokens"]
     b, s = tokens.shape

@@ -1,3 +1,8 @@
 from .engine import ServeEngine  # noqa: F401
-from .scheduler import ContinuousBatchingScheduler, Request  # noqa: F401
+from .scheduler import (  # noqa: F401
+    ContinuousBatchingScheduler,
+    PageAllocator,
+    PrefixIndex,
+    Request,
+)
 from .speculative import speculative_decode  # noqa: F401

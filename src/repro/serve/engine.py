@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import predicate as P
-from repro.models import get_model
+from repro.models import get_model, is_paged, paged_view, paged_writeback
 
 
 @dataclasses.dataclass
@@ -35,6 +35,11 @@ class ServeEngine:
     max_new_tokens: int = 32
     stop_token: int = 0
     greedy: bool = True
+    # paged decode: "gather" materializes the dense view through the page
+    # table before the (unchanged) model decode — bitwise identical to the
+    # dense cache by construction; "kernel" lets families that support it
+    # read K/V directly through the table inside flash attention.
+    paged_attn: str = "gather"
 
     def __post_init__(self):
         self.model = get_model(self.cfg)
@@ -78,8 +83,8 @@ class ServeEngine:
 
         def loop_body(carry):
             cache, out_buf, tok, p, n_gen, step = carry
-            logits, cache = self.model.decode(params, self.cfg,
-                                              {"token": tok[:, None]}, cache)
+            logits, cache = self._cached_decode(params, {"token": tok[:, None]},
+                                                cache)
             nxt = self._sample(logits)
             nxt = P.merging(p, nxt, jnp.full_like(nxt, stop))
             col = jnp.clip(n_gen, 0, max_out - 1)
@@ -94,9 +99,40 @@ class ServeEngine:
             (cache, out_buf, tok, p, n_gen, jnp.int32(0)))
         return cache, out_buf, tok, p, n_gen, steps
 
+    def _cached_decode(self, params, batch, cache):
+        """One decode step against a dense OR paged cache.
+
+        Paged "gather": gather-load the dense view through the page table,
+        run the family's unchanged decode, scatter-store the new token back
+        to its page — bitwise equal to the dense engine because the view IS
+        the dense cache.  Paged "kernel": the family's decode reads K/V
+        through the table inside flash attention (no view materialization).
+        All of it traces into the jitted decode loop.
+        """
+        if not is_paged(cache):
+            return self.model.decode(params, self.cfg, batch, cache)
+        paged_ok = getattr(self.model, "paged_decode_ok", None)
+        if self.paged_attn == "kernel" and paged_ok and paged_ok(self.cfg):
+            return self.model.decode(params, self.cfg, batch, cache)
+        view = paged_view(self.cfg, cache)
+        pos = view["pos"]
+        logits, view = self.model.decode(params, self.cfg, batch, view)
+        return logits, paged_writeback(self.cfg, cache, view, pos)
+
     # ------------------------------------------------------------------
     # one-shot batch API
     # ------------------------------------------------------------------
+
+    def make_paged_cache(self, b: int, max_len: int, *, page_size: int,
+                         pool_pages: int, batch: Optional[dict] = None):
+        """Allocate a paged cache: shared page pools + per-lane page table."""
+        if self.cfg.family == "encdec":
+            return self.model.make_paged_cache(
+                self.cfg, b, max_len, src_len=batch["src_emb"].shape[1],
+                page_size=page_size, pool_pages=pool_pages)
+        return self.model.make_paged_cache(self.cfg, b, max_len,
+                                           page_size=page_size,
+                                           pool_pages=pool_pages)
 
     def make_cache(self, b: int, max_len: int, batch: Optional[dict] = None):
         """Allocate a cache for ``b`` request lanes (family-dispatched)."""

@@ -17,6 +17,14 @@ paper's §2.3.4 partition algebra applied to traffic instead of loop strips:
     admission always splices into the tail and throughput is a function of
     ACTIVE lanes, not peak batch size.
 
+With ``page_size`` set the cache is PAGED (SVE §2.3.3 gather/scatter): each
+lane addresses logical token blocks through a per-lane page table while the
+physical pages live in a shared ref-counted pool.  Admission is then gated on
+PAGE availability, not lane count — memory, not the lane vector, is the
+capacity currency — and a prefix index lets a request whose prompt prefix is
+already resident skip prefill for the shared pages (refcount bump + suffix
+prefill).  Compacting lanes never moves a page: only the table rows permute.
+
 Everything that moves request state is an index gather/scatter; nothing is
 recompiled when traffic gets ragged — the vector-length-agnostic contract.
 """
@@ -30,14 +38,124 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import paging as PG
 from repro.core import partition as PT
-from repro.models import gather_lanes, slot_update
+from repro.models import gather_lanes, get_model, slot_update
 
 from .engine import ServeEngine
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+class PageAllocator:
+    """Ref-counted physical page allocator with a LIFO free list.
+
+    Invariants (property-tested in tests/test_page_allocator.py): a page is
+    either free or has refcount >= 1; ``alloc`` is all-or-nothing; releasing
+    to zero returns the page to the free list exactly once (double release
+    raises); free + live == pool_pages at all times.
+    """
+
+    def __init__(self, pool_pages: int):
+        self.pool_pages = pool_pages
+        self._free = list(range(pool_pages - 1, -1, -1))
+        self.refcount = np.zeros((pool_pages,), np.int64)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.pool_pages - len(self._free)
+
+    def alloc(self, n: int):
+        """n fresh pages with refcount 1, or None if the pool can't cover n."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self.refcount[p] == 0, f"page {p} on free list with refs"
+            self.refcount[p] = 1
+        return pages
+
+    def retain(self, page: int):
+        """Bump the refcount of a RESIDENT page (prefix sharing)."""
+        if self.refcount[page] <= 0:
+            raise ValueError(f"retain of free page {page}")
+        self.refcount[page] += 1
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; True if the page returned to the free list."""
+        if self.refcount[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+
+class PrefixIndex:
+    """Radix-style map from (parent page, token block) to a resident page.
+
+    A prompt's K/V pages are content-addressed by their token block AND the
+    identity of the parent page (which transitively pins the whole prefix —
+    K/V of a block depends on every token before it, so token bytes alone are
+    not a sound key).  Entries exist only while their page is resident; when
+    a page dies its subtree is unindexed so a recycled page id can never be
+    mistaken for the old prefix.
+    """
+
+    def __init__(self):
+        self._child: dict = {}                         # (parent, bytes) -> page
+        self._key_of: dict = {}                        # page -> its key
+        self._kids: dict = collections.defaultdict(set)  # parent -> pages
+
+    def __len__(self):
+        return len(self._child)
+
+    def lookup(self, tokens: np.ndarray, page_size: int) -> list:
+        """Longest resident chain of full prompt pages (possibly empty)."""
+        chain = []
+        parent = -1
+        for j in range(len(tokens) // page_size):
+            key = (parent, tokens[j * page_size:(j + 1) * page_size].tobytes())
+            page = self._child.get(key)
+            if page is None:
+                break
+            chain.append(page)
+            parent = page
+        return chain
+
+    def register(self, parent: int, block: np.ndarray, page: int):
+        key = (parent, block.tobytes())
+        if key in self._child:          # identical block admitted concurrently
+            return
+        self._child[key] = page
+        self._key_of[page] = key
+        self._kids[parent].add(page)
+
+    def drop(self, page: int):
+        """Unindex a dying page and (recursively) its indexed subtree."""
+        key = self._key_of.pop(page, None)
+        if key is not None:
+            self._child.pop(key, None)
+            self._kids[key[0]].discard(page)
+        for child in list(self._kids.pop(page, ())):
+            self.drop(child)
+
+
+@dataclasses.dataclass
+class _PagePlan:
+    """Admission plan for one request under the paged cache."""
+    shared: list                        # resident prefix pages (refs taken)
+    new: list                           # freshly allocated pages
+    budget: int                         # decode token budget
+    plen: int                           # full prompt length
+    pos0: int                           # len(shared) * page_size
 
 
 @dataclasses.dataclass
@@ -59,23 +177,37 @@ class ContinuousBatchingScheduler:
     ----------
     engine: a ``ServeEngine`` (supplies the jitted prefill/decode-chunk fns).
     capacity: number of request lanes (the vector length of the batch).
-    max_len: cache sequence capacity per lane (>= prompt + budget).
+    max_len: cache sequence capacity per lane (>= prompt + budget).  Under
+        paging it is rounded UP to a page multiple; pass a multiple of
+        ``page_size`` when bit-comparing against a dense engine of the same
+        max_len (the gathered view length then matches exactly).
     chunk: decode steps per burst between admission opportunities.
     compact_threshold: occupancy fraction below which live lanes are
         compacted to the front (the knob; 0 disables compaction).
+    page_size: tokens per KV page — enables the PAGED cache: admission is
+        gated on free pages, memory is the capacity currency.  None = dense.
+    pool_pages: physical pages in the pool (default: capacity * pages-per-
+        lane, i.e. the dense memory footprint; smaller values trade
+        admission concurrency for memory).
+    prefix_sharing: admit a request whose prompt prefix is already resident
+        by bumping page refcounts and prefilling only the suffix (families
+        whose full prefix state lives in paged KV only).
     """
 
     def __init__(self, engine: ServeEngine, *, capacity: int, max_len: int,
-                 chunk: int = 8, compact_threshold: float = 0.5):
+                 chunk: int = 8, compact_threshold: float = 0.5,
+                 page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         if engine.cfg.family == "encdec":
             raise NotImplementedError(
                 "encdec caches need src_emb/src_len at allocation time; "
                 "serve encdec batches via ServeEngine.generate instead")
         self.engine = engine
         self.capacity = capacity
-        self.max_len = max_len
         self.chunk = chunk
         self.compact_threshold = compact_threshold
+        self.page_size = page_size
 
         self.queue: collections.deque[Request] = collections.deque()
         self.results: dict[int, dict] = {}
@@ -84,7 +216,30 @@ class ContinuousBatchingScheduler:
 
         b = capacity
         self.lane_rid = np.full((b,), -1, np.int64)   # -1 = free lane
-        self.cache = engine.make_cache(b, max_len)
+        if page_size is not None:
+            self.n_pages = PG.pages_needed(max_len, page_size)
+            max_len = self.n_pages * page_size
+            self.pool_pages = pool_pages or capacity * self.n_pages
+            # one RESERVED page past the allocatable pool: lanes that are
+            # free or retired still decode architecturally inside the jitted
+            # chunk, and their clamped writes must never land in a page a
+            # live request owns — their table rows all point at the trash
+            # page (the garbage-beyond-pos contract, relocated)
+            self.trash_page = self.pool_pages
+            self.cache = engine.make_paged_cache(
+                b, max_len, page_size=page_size,
+                pool_pages=self.pool_pages + 1)
+            self.cache["page_table"] = jnp.full_like(
+                self.cache["page_table"], self.trash_page)
+            self.allocator = PageAllocator(self.pool_pages)
+            self.prefix_index = PrefixIndex()
+            self.prefix_sharing = prefix_sharing and getattr(
+                get_model(engine.cfg), "PAGED_PREFIX_OK", False)
+            self.lane_pages: dict[int, list] = {}     # lane -> held page ids
+        else:
+            self.cache = engine.make_cache(b, max_len)
+            self.prefix_sharing = False
+        self.max_len = max_len
         max_out = engine.max_new_tokens
         self.out_buf = jnp.zeros((b, max_out), jnp.int32)
         self.tok = jnp.full((b,), engine.stop_token, jnp.int32)
@@ -93,7 +248,9 @@ class ContinuousBatchingScheduler:
         self.budget = jnp.zeros((b,), jnp.int32)
         self.stats = {"steps": 0, "decode_steps": 0, "lane_steps": 0,
                       "active_lane_steps": 0, "compactions": 0,
-                      "occupancy_trace": []}
+                      "occupancy_trace": [], "page_occupancy_trace": [],
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefill_tokens": 0, "page_waits": 0}
 
     # ------------------------------------------------------------------
     # public API
@@ -125,6 +282,9 @@ class ContinuousBatchingScheduler:
         occupied = self.lane_rid >= 0
         self.stats["occupancy_trace"].append(float(occupied.sum())
                                              / self.capacity)
+        if self.page_size is not None:
+            self.stats["page_occupancy_trace"].append(
+                self.allocator.live_pages / self.pool_pages)
         if occupied.any():
             eng = self.engine
             gen_before = int(self.n_gen.sum())
@@ -162,6 +322,46 @@ class ContinuousBatchingScheduler:
     def _due(self, req: Request) -> bool:
         return req.arrival <= self.now
 
+    def _plan_pages(self, req: Request) -> Optional[_PagePlan]:
+        """Reserve pages for one request: longest resident prompt prefix is
+        SHARED (refcount bump, no prefill), the rest freshly allocated.
+        Returns None — and touches nothing — when the pool can't cover it:
+        admission is gated on page availability, not lane count."""
+        ps = self.page_size
+        plen = len(req.tokens)
+        budget = min(self.engine.max_new_tokens if req.max_new_tokens is None
+                     else req.max_new_tokens,
+                     self.engine.max_new_tokens, self.max_len - plen)
+        shared: list = []
+        if self.prefix_sharing and not req.extras:
+            shared = self.prefix_index.lookup(req.tokens, ps)
+            # the suffix prefill must be non-empty (the last prompt token's
+            # logits seed decode), so never share the whole prompt
+            while shared and len(shared) * ps >= plen:
+                shared.pop()
+        n_total = PG.pages_needed(min(plen + budget, self.max_len), ps)
+        new = self.allocator.alloc(n_total - len(shared))
+        if new is None:
+            self.stats["page_waits"] += 1
+            return None
+        for pid in shared:
+            self.allocator.retain(pid)
+        if shared:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += len(shared) * ps
+        return _PagePlan(shared=shared, new=new, budget=budget, plen=plen,
+                         pos0=len(shared) * ps)
+
+    def _unplan_pages(self, plan: _PagePlan):
+        """Roll back a reservation for a candidate that didn't fit the
+        admission group after all (releases never free a donor's pages —
+        the donor still holds its own references)."""
+        for pid in plan.new + plan.shared:
+            self.allocator.release(pid)
+        if plan.shared:
+            self.stats["prefix_hits"] -= 1
+            self.stats["prefix_hit_tokens"] -= plan.pos0
+
     def _admit(self):
         """Prefill due queued requests as one sub-batch and splice them into
         free lanes (slot_update = the in-place `.at[]` scatter).
@@ -170,11 +370,15 @@ class ContinuousBatchingScheduler:
         ones behind it); FIFO order is preserved among the due.  One prefill
         sub-batch must stack homogeneously, so only requests with the same
         extras keys are admitted together — the rest wait for the next round.
+        Under paging each candidate must also fit the page pool
+        (``_plan_pages``); prefix-hit rows prefill only their suffix.
         """
         free = self._free_lanes()
         batch_reqs: list[Request] = []
+        plans: list[_PagePlan] = []
         rest: list[Request] = []
         extras_keys = None
+        suffix_max = pos0_max = 0
         for req in self.queue:
             if len(batch_reqs) >= len(free) or not self._due(req):
                 rest.append(req)
@@ -185,6 +389,26 @@ class ContinuousBatchingScheduler:
             if keys != extras_keys:
                 rest.append(req)
                 continue
+            if self.page_size is not None:
+                plan = self._plan_pages(req)
+                if plan is None:                    # pool exhausted: wait
+                    rest.append(req)
+                    continue
+                # group-fit guard: the prefill writes ONE padded suffix block
+                # per row at its pos0, and dynamic_update_slice CLAMPS the
+                # start when pos0 + plen_pad > max_len — which would shift a
+                # prefix-shared row's K/V over its seeded prefix.  Only
+                # co-admit candidates whose shared padded width still fits
+                # every row's offset; a lone candidate always fits (its
+                # suffix <= max_len - pos0 by construction).
+                s_max = max(suffix_max, plan.plen - plan.pos0)
+                p_max = max(pos0_max, plan.pos0)
+                if min(_next_pow2(s_max), self.max_len - p_max) < s_max:
+                    self._unplan_pages(plan)        # wait for a better group
+                    rest.append(req)
+                    continue
+                suffix_max, pos0_max = s_max, p_max
+                plans.append(plan)
             batch_reqs.append(req)
         if not batch_reqs:
             return
@@ -192,18 +416,28 @@ class ContinuousBatchingScheduler:
         lanes = free[:len(batch_reqs)]
         eng = self.engine
         n = len(batch_reqs)
+        pos0 = np.array([pl.pos0 for pl in plans] or [0] * n, np.int32)
         # bucket the prefill shape (rows to a power of two, columns to a
         # power of two capped at max_len) so a ragged trace compiles a
         # BOUNDED set of prefill programs instead of one per (n, plen) pair
         n_pad = min(_next_pow2(n), self.capacity)
-        plen = max(len(r.tokens) for r in batch_reqs)
-        plen_pad = min(_next_pow2(plen), self.max_len)
+        plen = max(len(r.tokens) - int(pos0[i])
+                   for i, r in enumerate(batch_reqs))
+        # cap the bucket so pos0 + plen_pad <= max_len for every admitted row
+        # (the group-fit guard above guarantees plen still fits the cap)
+        plen_pad = min(_next_pow2(plen), self.max_len - int(pos0.max()))
         toks = np.zeros((n_pad, plen_pad), np.int32)
         lens = np.ones((n_pad,), np.int32)          # dummy rows: 1-token pad
+        pos0_pad = np.zeros((n_pad,), np.int32)
         for i, r in enumerate(batch_reqs):
-            toks[i, :len(r.tokens)] = r.tokens
-            lens[i] = len(r.tokens)
+            suffix = r.tokens[pos0[i]:]
+            toks[i, :len(suffix)] = suffix
+            lens[i] = len(suffix)
+            pos0_pad[i] = pos0[i]
+        self.stats["prefill_tokens"] += int(lens[:n].sum())
         batch = {"tokens": jnp.asarray(toks), "lens": jnp.asarray(lens)}
+        if self.page_size is not None:
+            batch["pos0"] = jnp.asarray(pos0_pad)
         if batch_reqs[0].extras:
             for k in batch_reqs[0].extras:
                 batch[k] = jnp.stack([jnp.asarray(r.extras[k])
@@ -213,8 +447,14 @@ class ContinuousBatchingScheduler:
                                      (n_pad - n))
 
         sub_cache = eng.make_cache(n_pad, self.max_len, batch)
+        if self.page_size is not None:
+            sub_cache = self._seed_shared_prefix(sub_cache, plans, n_pad)
         logits, sub_cache = eng._prefill(eng.params, batch, sub_cache)
         first_tok = eng._sample(logits)[:n]
+        if self.page_size is not None:
+            self._copy_pages(sub_cache, plans, lanes)
+            for req, pl in zip(batch_reqs, plans):
+                self._register_prefix(req, pl)
         if n_pad > n:                               # drop the dummy rows
             sub_cache = gather_lanes(eng.cfg, sub_cache,
                                      jnp.arange(n, dtype=jnp.int32))
@@ -222,12 +462,15 @@ class ContinuousBatchingScheduler:
         # ---- splice the sub-batch into the recycled lanes ----
         lane_idx = jnp.asarray(lanes, jnp.int32)
         self.cache = slot_update(eng.cfg, self.cache, lane_idx, sub_cache)
-        budgets = np.asarray(
-            [min(eng.max_new_tokens if r.max_new_tokens is None
-                 else r.max_new_tokens,
-                 eng.max_new_tokens,
-                 self.max_len - int(lens[i]))
-             for i, r in enumerate(batch_reqs)], np.int32)
+        if plans:
+            budgets = np.asarray([pl.budget for pl in plans], np.int32)
+        else:
+            budgets = np.asarray(
+                [min(eng.max_new_tokens if r.max_new_tokens is None
+                     else r.max_new_tokens,
+                     eng.max_new_tokens,
+                     self.max_len - int(lens[i]))
+                 for i, r in enumerate(batch_reqs)], np.int32)
         self.tok = self.tok.at[lane_idx].set(first_tok)
         self.out_buf = self.out_buf.at[lane_idx].set(0)
         self.out_buf = self.out_buf.at[lane_idx, 0].set(first_tok)
@@ -237,6 +480,85 @@ class ContinuousBatchingScheduler:
         self.p = self.p.at[lane_idx].set(alive)
         for i, r in enumerate(batch_reqs):
             self.lane_rid[lanes[i]] = r.rid
+
+    # ------------------------------------------------------------------
+    # paged admission plumbing
+    # ------------------------------------------------------------------
+
+    def _paged_spec(self):
+        return get_model(self.engine.cfg).paged_cache_spec(self.engine.cfg)
+
+    def _seed_shared_prefix(self, sub_cache, plans, n_pad):
+        """Gather resident shared-prefix pages into the prefill sub-cache so
+        suffix rows attend over the donor's K/V (positions [0, pos0))."""
+        if not any(pl.shared for pl in plans):
+            return sub_cache
+        ps = self.page_size
+        seed_tab = np.zeros((n_pad, self.n_pages), np.int32)
+        shared_len = np.zeros((n_pad,), np.int32)
+        for i, pl in enumerate(plans):
+            seed_tab[i, :len(pl.shared)] = pl.shared
+            shared_len[i] = len(pl.shared) * ps
+        seed_tab = jnp.asarray(seed_tab)
+        mask = jnp.asarray(
+            np.arange(self.max_len)[None, :] < shared_len[:, None])
+        sub_cache = dict(sub_cache)
+        for key, lead in self._paged_spec().items():
+            view = PG.gather_pages(self.cache[key + "_pages"], seed_tab,
+                                   n_lead=len(lead))
+            m = mask.reshape((1,) * len(lead) + (n_pad, 1, self.max_len, 1))
+            sub_cache[key] = jnp.where(m, view.astype(sub_cache[key].dtype),
+                                       sub_cache[key])
+        return sub_cache
+
+    def _copy_pages(self, sub_cache, plans, lanes):
+        """Scatter-store freshly prefilled K/V blocks into their allocated
+        pages, install the page-table rows, and index the new full prompt
+        pages for future prefix hits."""
+        ps = self.page_size
+        rows, cols, dsts = [], [], []
+        tab_rows = np.zeros((len(plans), self.n_pages), np.int32)
+        for i, pl in enumerate(plans):
+            n_sh = len(pl.shared)
+            n_used = PG.pages_needed(pl.plen, ps)
+            for j in range(n_sh, n_used):
+                rows.append(i)
+                cols.append(j)
+                dsts.append(pl.new[j - n_sh])
+            ids = pl.shared + pl.new
+            tab_rows[i, :len(ids)] = ids
+            # pad the tail with the lane's LAST private page so clamped
+            # out-of-budget writes from retired lanes can never touch a page
+            # another request owns
+            tab_rows[i, len(ids):] = pl.new[-1]
+        rows_a, cols_a = jnp.asarray(rows), jnp.asarray(cols)
+        dsts_a = jnp.asarray(dsts)
+        for key, lead in self._paged_spec().items():
+            dn = sub_cache[key]                     # lead+(n_pad,Hkv,S,Dh)
+            nl = len(lead)
+            shp = dn.shape
+            dnp = dn.reshape(shp[:nl + 2] + (self.n_pages, ps, shp[-1]))
+            dnp = jnp.moveaxis(dnp, nl, 0)          # (n_pad,)+lead+(Hkv,n,ps,D)
+            dnp = jnp.moveaxis(dnp, nl + 2, 1)      # (n_pad,n_pages)+lead+...
+            blocks = dnp[rows_a, cols_a]            # (K,)+lead+(Hkv,ps,D)
+            self.cache[key + "_pages"] = PG.scatter_block(
+                self.cache[key + "_pages"], dsts_a, blocks, n_lead=nl)
+        self.cache["page_table"] = self.cache["page_table"].at[
+            jnp.asarray(lanes, jnp.int32)].set(jnp.asarray(tab_rows))
+        for i, pl in enumerate(plans):
+            self.lane_pages[int(lanes[i])] = pl.shared + pl.new
+
+    def _register_prefix(self, req: Request, plan: _PagePlan):
+        """Make this request's full prompt pages discoverable for sharing."""
+        if not self.prefix_sharing or req.extras:
+            return
+        ps = self.page_size
+        parent = plan.shared[-1] if plan.shared else -1
+        ids = plan.shared + plan.new
+        for j in range(len(plan.shared), plan.plen // ps):
+            self.prefix_index.register(parent, req.tokens[j * ps:(j + 1) * ps],
+                                       ids[j])
+            parent = ids[j]
 
     def _harvest(self):
         """Collect lanes whose request left the active partition."""
@@ -252,6 +574,16 @@ class ContinuousBatchingScheduler:
                                  "n_generated": n,
                                  "finished_at": self.now}
             self.lane_rid[lane] = -1
+            if self.page_size is not None:
+                for pid in self.lane_pages.pop(int(lane)):
+                    if self.allocator.release(pid):
+                        self.prefix_index.drop(pid)
+        if self.page_size is not None:
+            # retired lanes keep decoding architecturally until their slot is
+            # refilled: repoint their table rows at the trash page so the
+            # freed pages can be reused without interference
+            self.cache["page_table"] = self.cache["page_table"].at[
+                jnp.asarray(finished, jnp.int32)].set(self.trash_page)
 
     def _maybe_compact(self):
         """SVE ``compact`` over the lane vector: squeeze live lanes to the
@@ -273,6 +605,9 @@ class ContinuousBatchingScheduler:
             return
         perm = np.asarray(PT.compact_perm(jnp.asarray(occupied)))
         perm_idx = jnp.asarray(perm, jnp.int32)
+        # on a paged cache this moves page-table ROWS only — the pools (the
+        # actual KV bytes) never move, so compaction cost is O(n_pages), not
+        # O(cache)
         self.cache = gather_lanes(self.engine.cfg, self.cache, perm_idx)
         self.out_buf = jnp.take(self.out_buf, perm_idx, axis=0)
         self.tok = jnp.take(self.tok, perm_idx, axis=0)
@@ -281,4 +616,8 @@ class ContinuousBatchingScheduler:
         self.n_gen = jnp.take(self.n_gen, perm_idx, axis=0)
         self.budget = jnp.take(self.budget, perm_idx, axis=0)
         self.lane_rid = self.lane_rid[perm]
+        if self.page_size is not None:
+            self.lane_pages = {new: self.lane_pages[int(old)]
+                               for new, old in enumerate(perm)
+                               if int(old) in self.lane_pages}
         self.stats["compactions"] += 1

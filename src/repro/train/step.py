@@ -8,7 +8,6 @@ decode step functions against donated caches.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

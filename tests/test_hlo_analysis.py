@@ -4,7 +4,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 sys.path.insert(0, ".")
 from benchmarks.hlo_analysis import analyze  # noqa: E402

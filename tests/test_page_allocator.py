@@ -1,0 +1,190 @@
+"""Page allocator + prefix index invariants: alloc/free/refcount never
+double-frees or leaks pages across randomized submit/retire schedules.
+
+The deterministic seeded schedules always run; the hypothesis variants widen
+the search when hypothesis is installed (they skip cleanly otherwise, like
+the other property suites)."""
+
+import numpy as np
+import pytest
+
+from repro.serve import PageAllocator, PrefixIndex
+
+
+def _check_invariants(alloc: PageAllocator):
+    free = alloc.free_pages
+    held = int((alloc.refcount > 0).sum())
+    assert free + held == alloc.pool_pages          # no leak, no double-count
+    assert (alloc.refcount >= 0).all()
+    assert len(set(alloc._free)) == len(alloc._free)  # free list has no dups
+
+
+def _random_schedule(seed: int, pool: int, steps: int):
+    """Random interleaving of alloc / retain / release with live tracking."""
+    rng = np.random.RandomState(seed)
+    alloc = PageAllocator(pool)
+    holdings: list[list[int]] = []                  # per-request page lists
+    for _ in range(steps):
+        op = rng.randint(3)
+        if op == 0:                                 # submit: alloc a few
+            want = int(rng.randint(1, pool + 2))
+            pages = alloc.alloc(want)
+            if want > alloc.pool_pages or pages is None:
+                assert pages is None or len(pages) == want
+            else:
+                assert len(pages) == want
+                holdings.append(list(pages))
+        elif op == 1 and holdings:                  # share: retain a prefix
+            donor = holdings[rng.randint(len(holdings))]
+            k = int(rng.randint(1, len(donor) + 1))
+            for p in donor[:k]:
+                alloc.retain(p)
+            holdings.append(list(donor[:k]))
+        elif op == 2 and holdings:                  # retire: release all
+            idx = rng.randint(len(holdings))
+            for p in holdings.pop(idx):
+                alloc.release(p)
+        _check_invariants(alloc)
+    for pages in holdings:                          # drain
+        for p in pages:
+            alloc.release(p)
+    _check_invariants(alloc)
+    assert alloc.free_pages == alloc.pool_pages     # everything returned
+    assert (alloc.refcount == 0).all()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_schedule_never_leaks_or_double_frees(seed):
+    _random_schedule(seed, pool=int(np.random.RandomState(seed).randint(1, 12)),
+                     steps=200)
+
+
+def test_alloc_is_all_or_nothing():
+    a = PageAllocator(4)
+    assert a.alloc(5) is None
+    assert a.free_pages == 4                        # nothing consumed
+    pages = a.alloc(4)
+    assert sorted(pages) == [0, 1, 2, 3]
+    assert a.alloc(1) is None
+
+
+def test_double_release_raises():
+    a = PageAllocator(2)
+    (p,) = a.alloc(1)
+    assert a.release(p) is True
+    with pytest.raises(ValueError, match="double free"):
+        a.release(p)
+
+
+def test_retain_of_free_page_raises():
+    a = PageAllocator(2)
+    with pytest.raises(ValueError, match="retain of free page"):
+        a.retain(0)
+
+
+def test_release_returns_true_only_at_zero():
+    a = PageAllocator(2)
+    (p,) = a.alloc(1)
+    a.retain(p)
+    assert a.release(p) is False                    # sharer still holds it
+    assert a.free_pages == 1
+    assert a.release(p) is True
+    assert a.free_pages == 2
+
+
+# ---------------------------------------------------------------------------
+# prefix index
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_lookup_walks_longest_resident_chain():
+    idx = PrefixIndex()
+    toks = np.arange(12, dtype=np.int32)
+    idx.register(-1, toks[0:4], 10)
+    idx.register(10, toks[4:8], 11)
+    assert idx.lookup(toks, 4) == [10, 11]          # page 2 not indexed
+    idx.register(11, toks[8:12], 12)
+    assert idx.lookup(toks, 4) == [10, 11, 12]
+    # a different prefix shares nothing
+    assert idx.lookup(np.arange(1, 13, dtype=np.int32), 4) == []
+
+
+def test_prefix_index_drop_unindexes_subtree():
+    idx = PrefixIndex()
+    toks = np.arange(8, dtype=np.int32)
+    idx.register(-1, toks[0:4], 5)
+    idx.register(5, toks[4:8], 6)
+    idx.drop(5)                                     # parent dies
+    assert idx.lookup(toks, 4) == []                # child unreachable AND gone
+    assert len(idx) == 0
+    # page id 5 recycled for a different prompt must not resurrect the chain
+    other = np.arange(100, 108, dtype=np.int32)
+    idx.register(-1, other[0:4], 5)
+    assert idx.lookup(toks, 4) == []
+    assert idx.lookup(other, 4) == [5]
+
+
+def test_prefix_index_same_block_under_different_parents():
+    """K/V of a block depends on the WHOLE prefix, so identical token blocks
+    under different parents must stay distinct entries."""
+    idx = PrefixIndex()
+    blk = np.arange(4, dtype=np.int32)
+    idx.register(-1, blk, 1)
+    idx.register(1, blk, 2)                         # same bytes, parent 1
+    assert idx.lookup(np.concatenate([blk, blk]), 4) == [1, 2]
+    idx.drop(2)
+    assert idx.lookup(np.concatenate([blk, blk]), 4) == [1]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-widened schedules (optional dependency; the seeded tests above
+# must keep running without it, so no module-level importorskip here)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1), pool=st.integers(1, 16),
+           steps=st.integers(1, 120))
+    def test_property_random_schedules(seed, pool, steps):
+        _random_schedule(seed, pool=pool, steps=steps)
+
+    @settings(max_examples=50, deadline=None)
+    @given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 15)),
+                        max_size=60))
+    def test_property_index_register_drop_consistent(ops):
+        """Register/drop in arbitrary order keeps the index internally
+        consistent: every indexed page resolves through its own key."""
+        idx = PrefixIndex()
+        rng = np.random.RandomState(0)
+        blocks = [rng.randint(0, 50, 4).astype(np.int32) for _ in range(16)]
+        live = set()
+        for op, arg in ops:
+            if op == 0:                             # register under root
+                if arg not in live:
+                    idx.register(-1, blocks[arg], arg)
+                    live.add(arg)
+            elif op == 1 and live:                  # register under a parent
+                parent = sorted(live)[arg % len(live)]
+                child = arg
+                if child not in live and child != parent:
+                    idx.register(parent, blocks[child], child)
+                    live.add(child)
+            elif op == 2 and live:                  # drop
+                page = sorted(live)[arg % len(live)]
+                idx.drop(page)
+                live.discard(page)
+                # dropping may cascade to children: resync from the index
+                live &= set(idx._key_of)
+        for page, key in idx._key_of.items():
+            assert idx._child[key] == page
+        assert len(idx._child) == len(idx._key_of)
+else:
+    def test_property_schedules_skipped_without_hypothesis():
+        pytest.skip("hypothesis not installed (optional dependency)")

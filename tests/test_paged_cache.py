@@ -1,0 +1,426 @@
+"""Paged KV cache (SVE §2.3.3 gather/scatter): core helpers, bit-identity of
+paged decode against the dense engine on ragged stop patterns, prefix sharing
+(refcount bump + suffix-only prefill + identical tokens), and the paged flash
+attention paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import paging as PG
+from repro.kernels.flash_attention import flash_attention
+from repro.models import ModelConfig, get_model, paged_view
+from repro.serve import ContinuousBatchingScheduler, ServeEngine
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=64, param_dtype="float32", compute_dtype="float32")
+MAX_LEN = 24
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = ModelConfig(name="t", family="dense", **BASE)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+def _fresh_reference(eng, prompt, budget=None):
+    res = eng.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                       max_len=MAX_LEN)
+    n = int(res["n_generated"][0])
+    if budget is not None:
+        n = min(n, budget)
+    return np.asarray(res["tokens"][0, :n]), n
+
+
+# ---------------------------------------------------------------------------
+# core paging helpers
+# ---------------------------------------------------------------------------
+
+def test_gather_pages_reproduces_dense_layout():
+    rng = np.random.RandomState(0)
+    P, hkv, ps, d, b, npg = 10, 2, 4, 8, 3, 2
+    pool = jnp.asarray(rng.randn(P, hkv, ps, d).astype(np.float32))
+    table = jnp.asarray(rng.randint(0, P, (b, npg)), jnp.int32)
+    view = PG.gather_pages(pool, table)
+    assert view.shape == (b, hkv, npg * ps, d)
+    for i in range(b):
+        for j in range(npg):
+            np.testing.assert_array_equal(
+                view[i, :, j * ps:(j + 1) * ps, :], pool[int(table[i, j])])
+
+
+def test_gather_pages_with_lead_axes():
+    rng = np.random.RandomState(1)
+    L, P, hkv, ps, d = 3, 6, 2, 4, 8
+    pool = jnp.asarray(rng.randn(L, P, hkv, ps, d).astype(np.float32))
+    table = jnp.asarray([[5, 0], [1, 3]], jnp.int32)
+    view = PG.gather_pages(pool, table, n_lead=1)
+    assert view.shape == (L, 2, hkv, 2 * ps, d)
+    np.testing.assert_array_equal(view[:, 0, :, :ps, :], pool[:, 5])
+    np.testing.assert_array_equal(view[:, 1, :, ps:, :], pool[:, 3])
+
+
+def test_scatter_page_roundtrip():
+    rng = np.random.RandomState(2)
+    P, hkv, ps, d, b = 8, 2, 4, 8, 3
+    pool = jnp.zeros((P, hkv, ps, d), jnp.float32)
+    page_ids = jnp.asarray([6, 1, 3], jnp.int32)
+    offsets = jnp.asarray([0, 2, 3], jnp.int32)
+    vals = jnp.asarray(rng.randn(b, hkv, d).astype(np.float32))
+    pool = PG.scatter_page(pool, page_ids, offsets, vals)
+    for i in range(b):
+        np.testing.assert_array_equal(
+            pool[int(page_ids[i]), :, int(offsets[i]), :], vals[i])
+    # every other slot untouched
+    assert float(jnp.abs(pool).sum()) == pytest.approx(
+        float(jnp.abs(vals).sum()), rel=1e-6)
+
+
+def test_scatter_block_and_gather_block_inverse():
+    rng = np.random.RandomState(3)
+    L, P, hkv, ps, d = 2, 7, 2, 4, 8
+    pool = jnp.zeros((L, P, hkv, ps, d), jnp.float32)
+    ids = jnp.asarray([4, 2], jnp.int32)
+    blocks = jnp.asarray(rng.randn(2, L, hkv, ps, d).astype(np.float32))
+    pool = PG.scatter_block(pool, ids, blocks, n_lead=1)
+    got = PG.gather_block(pool, ids, n_lead=1)
+    np.testing.assert_array_equal(got, blocks)
+
+
+def test_page_whilelt():
+    lens = jnp.asarray([0, 1, 8, 9, 24])
+    live = PG.page_whilelt(lens, n_pages=3, page_size=8)
+    np.testing.assert_array_equal(
+        np.asarray(live),
+        [[False, False, False], [True, False, False], [True, False, False],
+         [True, True, False], [True, True, True]])
+
+
+# ---------------------------------------------------------------------------
+# paged flash attention reads through the page table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["naive", "xla", "kernel"])
+def test_paged_flash_matches_dense(impl):
+    rng = np.random.RandomState(0)
+    B, Hq, Hkv, D, ps, npg, P = 2, 4, 2, 16, 8, 3, 9
+    S = npg * ps
+    kd = rng.randn(B, Hkv, S, D).astype(np.float32)
+    vd = rng.randn(B, Hkv, S, D).astype(np.float32)
+    q = jnp.asarray(rng.randn(B, Hq, 1, D).astype(np.float32))
+    perm = rng.permutation(P)[:B * npg]
+    table = np.zeros((B, npg), np.int32)
+    pool_k = np.zeros((P, Hkv, ps, D), np.float32)
+    pool_v = np.zeros((P, Hkv, ps, D), np.float32)
+    it = iter(perm)
+    for b in range(B):
+        for j in range(npg):
+            pid = int(next(it))
+            table[b, j] = pid
+            pool_k[pid] = kd[b, :, j * ps:(j + 1) * ps, :]
+            pool_v[pid] = vd[b, :, j * ps:(j + 1) * ps, :]
+    kv_lens = jnp.asarray([11, S], jnp.int32)
+    q_off = kv_lens - 1
+    ref = flash_attention(jnp.asarray(q), jnp.asarray(kd), jnp.asarray(vd),
+                          kv_lens=kv_lens, q_offset=q_off, causal=True,
+                          impl="xla")
+    out = flash_attention(q, jnp.asarray(pool_k), jnp.asarray(pool_v),
+                          page_table=jnp.asarray(table), kv_lens=kv_lens,
+                          q_offset=q_off, causal=True, impl=impl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged scheduler: bit-identity on ragged stop patterns
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_bit_identical_to_dense_engine(dense_setup):
+    """Acceptance criterion: streamed requests through the PAGED scheduler —
+    ragged prompts, ragged budgets, natural stop tokens, lane recycling and
+    page reuse — decode bit-identically to fresh dense-engine batches."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, 64, rng.randint(4, 12)) for _ in range(10)]
+    budgets = [int(rng.randint(2, 9)) for _ in prompts]
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=MAX_LEN,
+                                        chunk=4, compact_threshold=0.5,
+                                        page_size=8)
+    rids = [sched.submit(p, max_new_tokens=bud)
+            for p, bud in zip(prompts, budgets)]
+    results = sched.run()
+    assert sorted(results) == sorted(rids)
+    for rid, prompt, bud in zip(rids, prompts, budgets):
+        want, n = _fresh_reference(eng, prompt, budget=bud)
+        got = results[rid]
+        assert got["n_generated"] == n
+        np.testing.assert_array_equal(got["tokens"], want)
+    # no page leaked and no refcount survived the drain
+    assert sched.allocator.free_pages == sched.pool_pages
+    assert (sched.allocator.refcount == 0).all()
+    assert len(sched.prefix_index) == 0
+
+
+def test_paged_matches_dense_scheduler_under_memory_pressure(dense_setup):
+    """A pool HALF the dense footprint gates admission on pages (waits occur)
+    yet still serves every request bit-identically."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, 64, rng.randint(4, 12)) for _ in range(8)]
+    dense_pages = 4 * (MAX_LEN // 8)
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=MAX_LEN,
+                                        chunk=4, page_size=8,
+                                        pool_pages=dense_pages // 2)
+    rids = [sched.submit(p) for p in prompts]
+    results = sched.run()
+    assert sched.stats["page_waits"] > 0      # admission was page-gated
+    for rid, prompt in zip(rids, prompts):
+        want, n = _fresh_reference(eng, prompt)
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"], want)
+    assert sched.allocator.free_pages == sched.pool_pages
+
+
+def test_paged_compaction_moves_tables_not_pools(dense_setup):
+    """Lane compaction on a paged cache permutes page-table rows; the pools
+    are untouched (same buffers' contents), and results stay bit-identical."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=12, stop_token=7)
+    rng = np.random.RandomState(2)
+    wave1 = [rng.randint(1, 64, rng.randint(4, 10)) for _ in range(4)]
+    wave2 = [rng.randint(1, 64, rng.randint(4, 10)) for _ in range(3)]
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=MAX_LEN,
+                                        chunk=2, compact_threshold=0.75,
+                                        page_size=8)
+    rids1 = [sched.submit(p, max_new_tokens=(12 if i == 2 else 1))
+             for i, p in enumerate(wave1)]
+    rids2 = [sched.submit(p, arrival=2.0) for p in wave2]
+    results = sched.run()
+    assert sched.stats["compactions"] >= 1
+    for rid, prompt in zip(rids1 + rids2, wave1 + wave2):
+        budget = 1 if (rid in rids1 and rid != rids1[2]) else 12
+        want, n = _fresh_reference(eng, prompt, budget=budget)
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"], want)
+
+
+def test_kernel_paged_decode_matches_dense(dense_setup):
+    """paged_attn="kernel": flash reads K/V through the page table inside the
+    model's decode (no gathered view) — tokens match the dense engine."""
+    cfg, _, params = dense_setup
+    ref_eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7,
+                      paged_attn="kernel")
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 64, rng.randint(4, 12)) for _ in range(6)]
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=MAX_LEN,
+                                        chunk=4, page_size=8)
+    rids = [sched.submit(p) for p in prompts]
+    results = sched.run()
+    for rid, prompt in zip(rids, prompts):
+        want, n = _fresh_reference(ref_eng, prompt)
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"], want)
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_refcount_bump_and_identical_tokens(dense_setup):
+    """Acceptance criterion: a second request sharing a prompt prefix admits
+    WITHOUT re-prefilling the shared pages — observable as a refcount bump on
+    the donor's pages and a suffix-sized prefill — and still produces tokens
+    identical to a cold decode of its full prompt."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=12, stop_token=7)
+    rng = np.random.RandomState(3)
+    ps = 4
+    donor = rng.randint(1, 64, 11)                   # 2 full pages of 4
+    sharer = np.concatenate([donor[:8], rng.randint(1, 64, 5)])
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=32,
+                                        chunk=2, page_size=ps)
+    rid_a = sched.submit(donor, max_new_tokens=12)   # long-lived donor
+    sched.step()                                     # admit donor
+    assert sched.stats["prefix_hits"] == 0
+    donor_pages = list(sched.lane_pages[0][:2])
+    prefill_before = sched.stats["prefill_tokens"]
+    assert (sched.allocator.refcount[donor_pages] == 1).all()
+
+    rid_b = sched.submit(sharer)
+    sched.step()                                     # admit sharer (hit)
+    assert sched.stats["prefix_hits"] == 1
+    assert sched.stats["prefix_hit_tokens"] == 8
+    # refcount bump observed on the shared pages while both are resident
+    assert (sched.allocator.refcount[donor_pages] == 2).all()
+    # the sharer prefilled ONLY its suffix (13 - 8 tokens), not the prefix
+    assert sched.stats["prefill_tokens"] - prefill_before == len(sharer) - 8
+
+    results = sched.run()
+    for rid, prompt in ((rid_a, donor), (rid_b, sharer)):
+        res = eng.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                           max_len=32)
+        n = int(res["n_generated"][0])
+        want = np.asarray(res["tokens"][0, :n])
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"], want)
+    assert sched.allocator.free_pages == sched.pool_pages
+
+
+def test_prefix_never_shares_the_whole_prompt(dense_setup):
+    """A prompt fully covered by resident pages still re-prefills its last
+    block: the suffix prefill must produce the next-token logits."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(4)
+    ps = 4
+    donor = rng.randint(1, 64, 8)                    # exactly 2 pages
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=32,
+                                        chunk=2, page_size=ps)
+    rid_a = sched.submit(donor, max_new_tokens=8)
+    sched.step()
+    rid_b = sched.submit(donor.copy())               # identical prompt
+    sched.step()
+    # only ONE page may be shared (the final block re-prefills)
+    assert sched.stats["prefix_hit_tokens"] <= len(donor) - 1
+    results = sched.run()
+    want, n = _fresh_reference(eng, donor)
+    for rid in (rid_a, rid_b):
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"], want)
+
+
+def test_prefix_pages_outlive_the_donor(dense_setup):
+    """The DONOR retiring while the sharer still decodes must not free the
+    shared pages: the sharer's references keep them resident."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=12, stop_token=7)
+    rng = np.random.RandomState(5)
+    ps = 4
+    donor = rng.randint(1, 64, 9)
+    sharer = np.concatenate([donor[:8], rng.randint(1, 64, 4)])
+    sched = ContinuousBatchingScheduler(eng, capacity=2, max_len=32,
+                                        chunk=2, page_size=ps)
+    rid_a = sched.submit(donor, max_new_tokens=6)    # donor retires early
+    sched.step()                                     # admit donor
+    shared = list(sched.lane_pages[0][:2])
+    rid_b = sched.submit(sharer, max_new_tokens=12)
+    sched.step()                                     # admit sharer (hit)
+    assert sched.stats["prefix_hits"] == 1
+    assert (sched.allocator.refcount[shared] == 2).all()
+    while rid_a not in sched.results:                # run until donor retires
+        sched.step()
+    assert rid_b not in sched.results                # sharer still decoding
+    # donor's references dropped; the sharer's keep the pages resident
+    assert (sched.allocator.refcount[shared] == 1).all()
+    results = sched.run()
+    res = eng.generate({"tokens": jnp.asarray(sharer)[None, :]}, max_len=32)
+    n = int(res["n_generated"][0])
+    np.testing.assert_array_equal(results[rid_b]["tokens"],
+                                  np.asarray(res["tokens"][0, :n]))
+    assert results[rid_a]["n_generated"] == 6
+    assert sched.allocator.free_pages == sched.pool_pages
+
+
+def test_prefix_hit_coadmitted_with_longer_cold_request(dense_setup):
+    """Regression: a prefix-shared row (pos0 > 0) co-admitted with a longer
+    cold request must not have its padded suffix write clamp-shifted over its
+    seeded prefix K/V (the admission group-fit guard defers the mismatch).
+    Both orders of arrival must produce tokens identical to cold decode."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(8)
+    ps, ml = 8, 32
+    donor = rng.randint(1, 64, 19)                   # 2 full pages shared
+    sharer = np.concatenate([donor[:16], rng.randint(1, 64, 3)])
+    cold = rng.randint(1, 64, 24)                    # forces plen_pad 32
+    for first, second in ((sharer, cold), (cold, sharer)):
+        sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=ml,
+                                            chunk=2, page_size=ps)
+        rid_d = sched.submit(donor, max_new_tokens=8)
+        sched.step()                                 # donor resident
+        rid_1 = sched.submit(first)
+        rid_2 = sched.submit(second)
+        results = sched.run()
+        assert sched.stats["prefix_hits"] == 1
+        for rid, prompt in ((rid_d, donor), (rid_1, first), (rid_2, second)):
+            res = eng.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                               max_len=ml)
+            n = int(res["n_generated"][0])
+            assert results[rid]["n_generated"] == n
+            np.testing.assert_array_equal(results[rid]["tokens"],
+                                          np.asarray(res["tokens"][0, :n]))
+        assert sched.allocator.free_pages == sched.pool_pages
+        assert (sched.allocator.refcount == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# paged view bridge + other families
+# ---------------------------------------------------------------------------
+
+def test_paged_view_roundtrips_prefill_state(dense_setup):
+    """Admitting through pages and gathering the view reproduces the dense
+    sub-cache contents for every valid position."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=4, stop_token=-1)
+    rng = np.random.RandomState(6)
+    prompt = rng.randint(1, 64, 9)
+    sched = ContinuousBatchingScheduler(eng, capacity=2, max_len=16,
+                                        chunk=1, page_size=8)
+    sched.submit(prompt)
+    sched._maybe_compact()
+    sched._admit()                                   # prefill + page copy
+    view = paged_view(cfg, sched.cache)
+    dense = eng.make_cache(1, 16)
+    logits, dense = eng._prefill(
+        eng.params, {"tokens": jnp.asarray(prompt)[None, :],
+                     "lens": jnp.asarray([9]),
+                     "pos0": jnp.asarray([0], jnp.int32)}, dense)
+    plen = len(prompt)
+    np.testing.assert_array_equal(view["k"][:, 0, :, :plen, :],
+                                  dense["k"][:, 0, :, :plen, :])
+    np.testing.assert_array_equal(view["v"][:, 0, :, :plen, :],
+                                  dense["v"][:, 0, :, :plen, :])
+    assert int(view["pos"][0]) == plen
+
+
+def test_hybrid_family_paged_bit_identity():
+    cfg = ModelConfig(name="t", family="hybrid", n_layers=3,
+                      shared_attn_period=2, ssm_state=16, ssm_headdim=16,
+                      ssm_chunk=16, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab_size=64, param_dtype="float32",
+                      compute_dtype="float32")
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7)
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(1, 64, rng.randint(4, 10)) for _ in range(4)]
+    sched = ContinuousBatchingScheduler(eng, capacity=2, max_len=16,
+                                        chunk=3, page_size=8)
+    assert not sched.prefix_sharing          # SSM carry is not paged
+    rids = [sched.submit(p) for p in prompts]
+    results = sched.run()
+    for rid, prompt in zip(rids, prompts):
+        res = eng.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                           max_len=16)
+        n = int(res["n_generated"][0])
+        np.testing.assert_array_equal(results[rid]["tokens"],
+                                      np.asarray(res["tokens"][0, :n]))
+    assert sched.allocator.free_pages == sched.pool_pages
+
+
+def test_ssm_family_refuses_paging():
+    cfg = ModelConfig(name="t", family="ssm", n_layers=2, ssm_state=16,
+                      ssm_headdim=16, ssm_chunk=16, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=64,
+                      param_dtype="float32", compute_dtype="float32")
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_new_tokens=4)
+    with pytest.raises(ValueError, match="paging does not apply"):
+        ContinuousBatchingScheduler(eng, capacity=2, max_len=16, page_size=8)

@@ -7,7 +7,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import predicate as P
 from repro.core import reductions as R
 
 floats = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False, width=32)
