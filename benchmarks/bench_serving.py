@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core.paging import pages_needed
 from repro.models import ModelConfig, get_model
-from repro.serve import ContinuousBatchingScheduler, ServeEngine
+from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
 
 CFG = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
            vocab_size=256, param_dtype="float32", compute_dtype="float32")
@@ -60,16 +60,32 @@ def poisson_trace(rng, n_requests, rate, prompt_lo, prompt_hi,
 
 
 def bench_capacity(eng, trace, *, capacity, max_len, chunk,
-                   compact_threshold, page_size=None, pool_pages=None):
+                   compact_threshold, page_size=None, pool_pages=None,
+                   sampling=None):
+    """One scheduler run; ``sampling`` is a per-request SamplingParams
+    factory rid -> params (None = greedy).  Steps the scheduler manually so
+    per-DECODE-STEP latency percentiles can be reported alongside
+    throughput (p99 is the number continuous batching is supposed to hold
+    down while admission/compaction churn the lane vector)."""
     sched = ContinuousBatchingScheduler(
         eng, capacity=capacity, max_len=max_len, chunk=chunk,
         compact_threshold=compact_threshold, page_size=page_size,
         pool_pages=pool_pages)
-    for arrival, prompt, max_new in trace:
-        sched.submit(prompt, arrival=arrival, max_new_tokens=max_new)
+    for rid, (arrival, prompt, max_new) in enumerate(trace):
+        sched.submit(prompt, arrival=arrival, max_new_tokens=max_new,
+                     sampling=sampling(rid) if sampling else None)
+    step_lat = []
     t0 = time.perf_counter()
-    results = sched.run()
+    while sched.queue or (sched.lane_rid >= 0).any():
+        ds0 = sched.stats["decode_steps"]
+        s0 = time.perf_counter()
+        sched.step()
+        dt = time.perf_counter() - s0
+        ran = sched.stats["decode_steps"] - ds0
+        if ran:                      # amortize the round over its decode steps
+            step_lat += [dt / ran] * ran
     wall = time.perf_counter() - t0
+    results = sched.results
     toks = sum(r["n_generated"] for r in results.values())
     occ = sched.stats["occupancy_trace"]
     lane_eff = (sched.stats["active_lane_steps"]
@@ -84,6 +100,10 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
         "lane_efficiency": lane_eff,
         "compactions": sched.stats["compactions"],
         "rounds": sched.stats["steps"],
+        "decode_step_p50_ms": (float(np.percentile(step_lat, 50)) * 1e3
+                               if step_lat else 0.0),
+        "decode_step_p99_ms": (float(np.percentile(step_lat, 99)) * 1e3
+                               if step_lat else 0.0),
     }
     if page_size is not None:
         pocc = sched.stats["page_occupancy_trace"]
@@ -138,6 +158,10 @@ def main(argv=None):
                          "system-prompt prefix")
     ap.add_argument("--page-size", type=int, default=8,
                     help="KV page size for the paged leg")
+    ap.add_argument("--sampling", action="store_true",
+                    help="add a stochastic leg (temperature=0.8, top_p=0.9, "
+                         "per-request seed = rid): exercises the per-lane "
+                         "predicated sampler deterministically")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -158,7 +182,13 @@ def main(argv=None):
     record = {"bench": "serving", "requests": n_requests, "rate": args.rate,
               "seed": args.seed, "share_frac": args.share_frac,
               "max_new_tokens": max_new, "cfg": CFG,
-              "continuous": [], "static": [], "paged": []}
+              "continuous": [], "static": [], "paged": [], "sampled": []}
+
+    def _sampled_params(rid: int):
+        # fixed per-request seed (the rid) => the stochastic leg is exactly
+        # reproducible run-to-run and across capacities
+        return SamplingParams(temperature=0.8, top_p=0.9, seed=rid,
+                              greedy=False)
     for cap in capacities:
         # untimed warmup over the FULL trace: the admission prefill shapes
         # are bucketed but still trace-dependent, so replaying the identical
@@ -187,12 +217,27 @@ def main(argv=None):
         record["paged"].append(p)
         print(f"capacity={cap:2d}  continuous {r['tokens_per_s']:8.1f} tok/s "
               f"(occ {r['mean_occupancy']:.2f}, "
-              f"compactions {r['compactions']})   "
+              f"compactions {r['compactions']}, "
+              f"p50/p99 {r['decode_step_p50_ms']:.1f}/"
+              f"{r['decode_step_p99_ms']:.1f} ms)   "
               f"static {s['tokens_per_s']:8.1f} tok/s   "
               f"paged@{p['pool_pages']}/{dense_pages}pg "
               f"{p['tokens_per_s']:8.1f} tok/s "
               f"(pool occ {p['mean_page_occupancy']:.2f}, "
               f"prefix hits {p['prefix_hits']}/{p['requests']})")
+        if args.sampling:
+            bench_capacity(eng, trace, capacity=cap, max_len=max_len,
+                           chunk=4, compact_threshold=0.5,
+                           sampling=_sampled_params)       # warmup
+            q = bench_capacity(eng, trace, capacity=cap, max_len=max_len,
+                               chunk=4, compact_threshold=0.5,
+                               sampling=_sampled_params)
+            q.update(temperature=0.8, top_p=0.9)
+            record["sampled"].append(q)
+            print(f"             sampled(T=0.8,p=0.9) "
+                  f"{q['tokens_per_s']:8.1f} tok/s "
+                  f"(p50/p99 {q['decode_step_p50_ms']:.1f}/"
+                  f"{q['decode_step_p99_ms']:.1f} ms)")
 
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)

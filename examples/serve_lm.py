@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ModelConfig, get_model
-from repro.serve import (ContinuousBatchingScheduler, ServeEngine,
-                         speculative_decode)
+from repro.serve import (ContinuousBatchingScheduler, SamplingParams,
+                         ServeEngine, speculative_decode)
 
 BASE = dict(family="dense", param_dtype="float32", compute_dtype="float32",
             vocab_size=512)
@@ -56,6 +56,28 @@ def main():
           f"compactions={sched.stats['compactions']} "
           f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}")
 
+    print("== per-lane heterogeneous sampling (one jitted decode loop) ==")
+    # four lanes, four different decoding distributions, ONE compiled
+    # program: greedy argmax, creative top-p, tight top-k, and a
+    # repetition-penalised lane — each stream reproducible from its own seed
+    specs = [None,                                           # greedy
+             SamplingParams(temperature=1.0, top_p=0.9, seed=1, greedy=False),
+             SamplingParams(temperature=0.7, top_k=8, seed=2, greedy=False),
+             SamplingParams(temperature=0.9, repetition_penalty=1.3, seed=3,
+                            greedy=False)]
+    res_s = eng.generate({"tokens": prompts, "lens": lens}, sampling=specs)
+    labels = ["greedy", "top_p=0.9", "top_k=8", "rep_pen=1.3"]
+    for i in range(4):
+        n = int(res_s["n_generated"][i])
+        print(f"  lane{i} [{labels[i]:>10s}]: "
+              f"{res_s['tokens'][i, :n].tolist()}")
+    assert res_s["tokens"][0].tolist() == res["tokens"][0].tolist(), \
+        "greedy lane must be bit-identical to the all-greedy engine"
+    rerun = eng.generate({"tokens": prompts, "lens": lens}, sampling=specs)
+    assert rerun["tokens"].tolist() == res_s["tokens"].tolist(), \
+        "fixed seeds must reproduce the streams exactly"
+    print("  greedy lane bit-identical + streams seed-reproducible: True")
+
     print("== speculative decoding (FFR acceptance) ==")
     out, stats = speculative_decode(tcfg, tparams, dcfg, dparams,
                                     prompts[:1], n_tokens=12, k_draft=4)
@@ -82,6 +104,20 @@ def main():
         print(f"  lane{i}: {outs[i].tolist()}")
     print(f"  mean accepted across lanes: {bstats['mean_accepted']:.2f} "
           f"of k={bstats['k_draft']}")
+
+    print("== stochastic speculative decoding (rejection sampling) ==")
+    # draft == target => q == p => every proposal accepted even under
+    # temperature sampling (the rejection ratio is identically 1)
+    sp = [SamplingParams(temperature=0.9, top_p=0.95, seed=10 + i,
+                         greedy=False) for i in range(4)]
+    souts, sstats = speculative_decode(tcfg, tparams, tcfg, tparams, prompts,
+                                       n_tokens=8, k_draft=3, lens=lens,
+                                       sampling=sp)
+    for i in range(souts.shape[0]):
+        print(f"  lane{i}: {souts[i].tolist()}")
+    print(f"  mean accepted with a perfect draft: "
+          f"{sstats['mean_accepted']:.2f} of k={sstats['k_draft']} "
+          f"(rejection ratio p/q == 1)")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,25 @@ def sminv(p, x, axis=-1):
 
 # ---- strictly-ordered reduction ----
 
+def _ordered_scan(p, x, init, axis, partials: bool):
+    """The one strictly-ordered accumulation core shared by ``fadda`` and
+    ``fadda_scan`` (a single definition of the accumulation order; the
+    reduction form carries only the scalar accumulator, no O(N) partials
+    buffer).  Returns lax.scan's (final_acc, stacked_partials_or_None)."""
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+        if p is not None and p.ndim == x.ndim:
+            p = jnp.moveaxis(p, axis, -1)
+    xm = jnp.moveaxis(_masked(p, x, 0), -1, 0)      # scan over the lane axis
+
+    def step(acc, v):
+        acc = acc + v
+        return acc, (acc if partials else None)
+
+    init_arr = jnp.broadcast_to(jnp.asarray(init, x.dtype), xm.shape[1:])
+    return jax.lax.scan(step, init_arr, xm)
+
+
 def fadda(p, x, init=0.0, axis=-1):
     """Strictly-ordered FP add reduction (SVE ``fadda``).
 
@@ -74,19 +93,27 @@ def fadda(p, x, init=0.0, axis=-1):
     Implemented as lax.scan (serial, like the hardware instruction whose cost
     is proportional to VL).
     """
-    if axis != -1:
-        x = jnp.moveaxis(x, axis, -1)
-        if p is not None and p.ndim == x.ndim:
-            p = jnp.moveaxis(p, axis, -1)
-    xm = _masked(p, x, 0)
-    xm = jnp.moveaxis(xm, -1, 0)            # scan over the lane axis
-
-    def step(acc, v):
-        return acc + v, None
-
-    init_arr = jnp.broadcast_to(jnp.asarray(init, x.dtype), xm.shape[1:])
-    acc, _ = jax.lax.scan(step, init_arr, xm)
+    acc, _ = _ordered_scan(p, x, init, axis, partials=False)
     return acc
+
+
+def fadda_scan(p, x, init=0.0, axis=-1):
+    """All partial accumulations of ``fadda``: the inclusive ordered prefix
+    sums, in ascending element order.
+
+    ``fadda_scan(p, x)[..., i]`` is exactly the accumulator value after the
+    hardware ``fadda`` has consumed elements 0..i — bit-identical to the
+    sequential scalar loop, so a threshold test against it (e.g. the nucleus
+    cutoff of top-p sampling) is deterministic across vector lengths and
+    backends, unlike ``jnp.cumsum`` whose FP association order is
+    implementation-defined.  Inactive lanes contribute 0 and repeat the
+    running accumulator.
+    """
+    _, partials = _ordered_scan(p, x, init, axis, partials=True)
+    out = jnp.moveaxis(partials, 0, -1)
+    if axis != -1:
+        out = jnp.moveaxis(out, -1, axis)
+    return out
 
 
 def fadda_tiled(p, x, init=0.0, vl: int = 128):

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import all_arch_names, get_config
 from repro.models import get_model
-from repro.serve import ContinuousBatchingScheduler, ServeEngine
+from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
 
 from .train import REDUCE
 
@@ -43,7 +43,29 @@ def main():
                     help="disable prompt-prefix page sharing under --page-size")
     ap.add_argument("--static", action="store_true",
                     help="one-shot ServeEngine.generate instead of scheduler")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="enable per-request stochastic sampling at this "
+                         "temperature (default: greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k vocab filtering (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus filtering mass (1.0 disables)")
+    ap.add_argument("--min-p", type=float, default=0.0,
+                    help="min-p filtering (0 disables)")
+    ap.add_argument("--repetition-penalty", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed+i, so "
+                         "every stream is reproducible per request")
     args = ap.parse_args()
+
+    def _sampling(i: int):
+        """Per-request SamplingParams (None = greedy) for request index i."""
+        if args.temperature is None:
+            return None
+        return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              top_p=args.top_p, min_p=args.min_p,
+                              repetition_penalty=args.repetition_penalty,
+                              seed=args.sample_seed + i, greedy=False)
 
     cfg = get_config(args.arch)
     over = dict(REDUCE)
@@ -78,7 +100,8 @@ def main():
     eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7)
     if args.static or cfg.family == "encdec" or cfg.cross_attn_group:
         # modality extras are per-batch, not yet per-request: static path
-        res = eng.generate(batch)
+        res = eng.generate(batch, sampling=[_sampling(i)
+                                            for i in range(args.batch)])
         for i in range(args.batch):
             n = int(res["n_generated"][i])
             print(f"req{i} len={int(batch['lens'][i]):2d} -> "
@@ -93,9 +116,10 @@ def main():
         pool_pages=args.pool_pages,
         prefix_sharing=not args.no_prefix_sharing)
     rid_len = {}
-    for _ in range(args.requests):
+    for i in range(args.requests):
         plen = int(rng.randint(4, args.prompt_len + 1))
-        rid = sched.submit(rng.randint(1, cfg.vocab_size, plen))
+        rid = sched.submit(rng.randint(1, cfg.vocab_size, plen),
+                           sampling=_sampling(i))
         rid_len[rid] = plen
     results = sched.run()
     for rid in sorted(results):

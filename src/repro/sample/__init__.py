@@ -1,0 +1,28 @@
+"""Per-lane predicated sampling: heterogeneous stochastic decoding as SVE
+predicate algebra (§2.3.2 per-lane predication, §2.3.5 ordered reductions).
+
+Layout: ``params`` (per-request spec + batched lane state with the cache's
+lane interface), ``processors`` (vocab keep-predicates: top-k/top-p/min-p/
+bans, penalty rewrites), ``sampler`` (the jit-safe ``sample`` entry point —
+bit-exact argmax under the greedy predicate), ``rejection`` (distribution-
+preserving speculative acceptance), ``numpy_ref`` (the O(V) scalar oracle).
+"""
+
+from .params import (  # noqa: F401
+    GREEDY,
+    SamplingParams,
+    gather_lanes,
+    greedy_state,
+    is_all_greedy,
+    lane_state,
+    slot_update,
+    split_keys,
+)
+from .rejection import residual_dist, speculative_accept  # noqa: F401
+from .sampler import (  # noqa: F401
+    categorical_probs,
+    greedy_tokens,
+    gumbel_argmax,
+    process_logits,
+    sample,
+)

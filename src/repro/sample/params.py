@@ -1,0 +1,152 @@
+"""Per-lane sampling parameters and the batched sampler lane state.
+
+A serving batch is a vector of request LANES (paper §2.3.4); every request
+carries its own decoding distribution.  ``SamplingParams`` is the host-side
+per-request spec; ``lane_state`` stacks specs into a dict of (B,)-shaped
+arrays — the same layout discipline as the KV cache's lane interface
+(``models.gather_lanes`` / ``slot_update``) — so sampler state rides the
+engine's jitted decode carry and moves with its lane under admission
+splicing and compaction, never with the batch.
+
+The per-lane PRNG key is the determinism contract: a request's key chain is
+a function of its OWN seed only (``jax.random.PRNGKey(seed)``, split once
+per decode step the lane participates in), so its token stream depends on
+(seed, prompt, params) and never on batch composition — the property the
+scheduler bit-identity tests extend to stochastic decoding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+#: dict keys of a lane state, with per-lane dtypes (all shape (B,) except key)
+_FIELDS = (
+    ("temperature", jnp.float32),
+    ("top_k", jnp.int32),
+    ("top_p", jnp.float32),
+    ("min_p", jnp.float32),
+    ("repetition_penalty", jnp.float32),
+    ("presence_penalty", jnp.float32),
+    ("greedy", jnp.bool_),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Decoding distribution for ONE request.
+
+    ``greedy=True`` (the default) is bit-exact ``argmax`` over the raw
+    logits — no processor, no PRNG consumption on the selected token value
+    (keys still advance so a lane's chain position stays equal to its token
+    count).  ``temperature <= 0`` is treated as greedy.  ``top_k <= 0``
+    disables top-k; ``top_p >= 1`` disables nucleus; ``min_p <= 0`` disables
+    min-p; penalties at their identity (1.0 / 0.0) are no-ops.
+    """
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    repetition_penalty: float = 1.0
+    presence_penalty: float = 0.0
+    seed: int = 0
+    greedy: bool = True
+    # key derivation: PRNGKey(seed), then fold_in(fold) when fold is set —
+    # how broadcast lanes and engine-default fallbacks decorrelate WITHOUT
+    # colliding with another request's explicit seed (fold_in(k, i) never
+    # equals PRNGKey(j))
+    fold: Optional[int] = None
+
+
+#: the all-greedy spec (what a request without SamplingParams decodes with)
+GREEDY = SamplingParams()
+
+
+def _spec_key(spec: SamplingParams) -> np.ndarray:
+    k = jax.random.PRNGKey(int(spec.seed))
+    if spec.fold is not None:
+        k = jax.random.fold_in(k, int(spec.fold))
+    return np.asarray(k)
+
+
+def lane_state(specs: Union[None, SamplingParams,
+                            Sequence[Optional[SamplingParams]]],
+               b: int) -> dict:
+    """Stack per-request specs into a batched lane state of ``b`` lanes.
+
+    ``specs`` may be None (all lanes greedy), a single ``SamplingParams``
+    (broadcast to every lane; each lane's key is decorrelated by folding
+    the lane index unless the spec already pins a ``fold``), or a sequence
+    of per-request specs (None entries mean greedy) — the admission path.
+    Rows past the specs (padded admission sub-batches) are greedy with a
+    zero key.
+    """
+    if specs is None:
+        return greedy_state(b)
+    if isinstance(specs, SamplingParams):
+        specs = [specs if specs.fold is not None
+                 else dataclasses.replace(specs, fold=i) for i in range(b)]
+    if len(specs) > b:
+        raise ValueError(f"{len(specs)} sampling specs for {b} lanes")
+    rows = [s if s is not None else GREEDY for s in specs]
+    keys = np.stack([_spec_key(s) for s in rows] +
+                    [np.zeros((2,), np.uint32)] * (b - len(rows)))
+    rows = rows + [GREEDY] * (b - len(rows))
+    return _stack(rows, keys)
+
+
+def _stack(rows: Sequence[SamplingParams], keys: np.ndarray) -> dict:
+    state = {name: jnp.asarray(np.asarray([getattr(r, name) for r in rows]),
+                               dtype)
+             for name, dtype in _FIELDS}
+    # temperature <= 0 is greedy by definition: fold it into the flag so the
+    # sampler's per-lane select is a single predicate
+    state["greedy"] = state["greedy"] | (state["temperature"] <= 0.0)
+    state["key"] = jnp.asarray(keys, jnp.uint32)
+    return state
+
+
+def greedy_state(b: int) -> dict:
+    """All-greedy lane state (zero keys: greedy lanes never read them)."""
+    return _stack([GREEDY] * b, np.zeros((b, 2), np.uint32))
+
+
+def is_all_greedy(state: dict) -> bool:
+    """Host-side query (concrete states only): every lane greedy?"""
+    return bool(np.asarray(state["greedy"]).all())
+
+
+# ----------------------------------------------------------------------
+# lane permutation — the same contract as the cache lane interface
+# ----------------------------------------------------------------------
+
+def gather_lanes(state: dict, lanes) -> dict:
+    """Permute/select sampler lanes (SVE ``compact``-style index gather):
+    out lane i takes the state of input lane ``lanes[i]``.  jit-safe."""
+    lanes = jnp.asarray(lanes, jnp.int32)
+    return {k: jnp.take(v, lanes, axis=0) for k, v in state.items()}
+
+
+def slot_update(state: dict, lanes, sub: dict) -> dict:
+    """Splice ``sub`` (lane count == len(lanes)) into ``state`` at ``lanes``
+    via in-place ``.at[].set`` scatters — the admission path.  jit-safe."""
+    lanes = jnp.asarray(lanes, jnp.int32)
+    return {k: v.at[lanes].set(sub[k].astype(v.dtype))
+            for k, v in state.items()}
+
+
+def split_keys(state: dict):
+    """Advance every lane's PRNG chain one step: returns (new_state, subkeys).
+
+    One split per decode step per lane — a lane's chain position therefore
+    equals the number of steps since its admission, which for a live lane is
+    its committed token count: the chain is batch-composition independent.
+    """
+    ks = jax.vmap(jax.random.split)(state["key"])       # (B, 2, 2)
+    return dict(state, key=ks[:, 0]), ks[:, 1]

@@ -1,0 +1,171 @@
+"""Logit processors as SVE predicate algebra over the vocab axis.
+
+Each processor either rewrites logits under a predicate (penalties — merging
+predication, §2.3.2) or GENERATES a keep-predicate over the vocabulary
+(top-k / top-p / min-p / token bans).  Predicates compose by AND; masked-out
+vocab entries read as -inf so the final categorical (or argmax) only sees
+the active partition.  Everything here is jit-safe, batched over lanes on
+the leading axis, and traces into the engine's decode while-loop.
+
+The top-p cutoff is the paper's serialized-reduction idiom (§2.3.5): sort
+probabilities descending, accumulate with the strictly-ordered ``fadda``
+prefix sums (``core.reductions.fadda_scan`` — bit-identical to the scalar
+loop, so the cutoff never moves across vector lengths or backends), and the
+keep-set is a ``whilelt``-shaped monotone prefix predicate in sorted order,
+scattered back through the sort permutation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reductions as R
+
+Array = jax.Array
+
+#: additive identity of the masked vocab partition
+NEG_INF = float("-inf")
+
+
+def apply_penalties(logits: Array, out_tokens: Array, n_out: Array,
+                    repetition_penalty: Array,
+                    presence_penalty: Array) -> Array:
+    """Repetition/presence penalties over each lane's OWN output buffer.
+
+    ``out_tokens`` (B, T) is the lane's generated-token buffer and ``n_out``
+    (B,) its committed count — the "seen" vocab predicate is a scatter-store
+    of the first ``n_out`` tokens (§2.3.3 gather/scatter over the lane's
+    history, never the batch's), so the penalty depends only on the lane's
+    own stream.  HF semantics: seen ∧ logit>0 → logit/r, seen ∧ logit<=0 →
+    logit·r; presence subtracts a constant from seen tokens.
+    """
+    b, v = logits.shape
+    t = out_tokens.shape[1]
+    rows = jnp.arange(b)[:, None]
+    # positions >= n_out are routed out of bounds and dropped: stale buffer
+    # contents from a previous lane occupant can never leak into the predicate
+    j = jnp.arange(t, dtype=jnp.int32)[None, :]
+    cols = jnp.where(j < n_out[:, None], out_tokens, v)
+    seen = jnp.zeros((b, v), bool).at[rows, cols].set(True, mode="drop")
+    r = repetition_penalty[:, None]
+    pen = jnp.where(logits > 0, logits / r, logits * r)
+    out = jnp.where(seen, pen, logits)
+    return out - jnp.where(seen, presence_penalty[:, None], 0.0)
+
+
+def temperature_scale(logits: Array, temperature: Array) -> Array:
+    """Divide by per-lane temperature; non-positive temperatures pass through
+    unscaled (those lanes are greedy — the flag is folded in ``lane_state``)."""
+    t = jnp.where(temperature > 0, temperature, 1.0)
+    return logits / t[:, None]
+
+
+def top_k_pred(logits: Array, k: Array) -> Array:
+    """Keep-predicate of top-k filtering: active where logit >= the k-th
+    largest value of the lane (``smaxv``-style threshold, set semantics:
+    ties at the threshold stay active).  k <= 0 disables (all active).
+    A view of ``keep_pred`` with the other filters disabled."""
+    b = logits.shape[0]
+    return keep_pred(logits, k, jnp.ones((b,), jnp.float32),
+                     jnp.zeros((b,), jnp.float32))
+
+
+def top_p_pred(logits: Array, top_p: Array, *, ordered: bool = True) -> Array:
+    """Keep-predicate of nucleus (top-p) filtering.
+
+    The smallest prefix of the sorted vocab whose mass reaches ``top_p``:
+    entries are sorted by descending scaled logit (stable — deterministic
+    tie order, and monotone to probability order), probabilities are
+    accumulated in strict element order with ``fadda_scan`` (``ordered=
+    False`` falls back to ``jnp.cumsum``), and the keep-set is the
+    ``whilelt``-shaped predicate  exclusive_prefix_mass < top_p  — a
+    monotone prefix in sorted order (the top-1 token is always active),
+    scattered back to vocab order through the sort permutation.
+    ``top_p >= 1`` disables (all active).  A view of ``keep_pred``.
+    """
+    b = logits.shape[0]
+    return keep_pred(logits, jnp.zeros((b,), jnp.int32), top_p,
+                     jnp.zeros((b,), jnp.float32), ordered=ordered)
+
+
+def min_p_pred(logits: Array, min_p: Array) -> Array:
+    """Keep-predicate of min-p filtering: active where prob >= min_p times
+    the lane's max prob.  min_p <= 0 disables (all active).  A view of
+    ``keep_pred``."""
+    b = logits.shape[0]
+    return keep_pred(logits, jnp.zeros((b,), jnp.int32),
+                     jnp.ones((b,), jnp.float32), min_p)
+
+
+def ban_pred(vocab_size: int, banned_ids) -> Array:
+    """Static keep-predicate banning ``banned_ids`` (constrained decoding:
+    the complement of the banned set is the active vocab partition)."""
+    keep = jnp.ones((vocab_size,), bool)
+    banned = jnp.asarray(banned_ids, jnp.int32)
+    return keep.at[banned].set(False)
+
+
+def stop_sequence_pred(vocab_size: int, last_token: Array,
+                       stop_bigrams) -> Array:
+    """Per-lane keep-predicate suppressing the completion of two-token stop
+    sequences: where ``last_token[b]`` equals a bigram's first token, the
+    bigram's second token is masked out of lane b's vocab partition.
+
+    ``stop_bigrams`` is a static (N, 2) int sequence.  This is predicate
+    *generation* from lane history — the constrained-decoding shape of
+    §2.3.2 — kept deliberately minimal (longer sequences compose by
+    chaining against the output buffer the same way).
+    """
+    bg = jnp.asarray(stop_bigrams, jnp.int32).reshape(-1, 2)
+    hit = last_token[:, None] == bg[None, :, 0]          # (B, N)
+    b = last_token.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], hit.shape)
+    cols = jnp.where(hit, bg[None, :, 1], vocab_size)    # miss → dropped
+    return jnp.ones((b, vocab_size), bool).at[rows, cols].set(
+        False, mode="drop")
+
+
+def keep_pred(scaled: Array, top_k: Array, top_p: Array, min_p: Array,
+              *, ordered: bool = True) -> Array:
+    """Fused top-k ∧ top-p ∧ min-p keep-predicate — THE one definition the
+    three individual ``*_pred`` views share, so their equivalence holds by
+    construction.
+
+    One softmax and ONE stable descending argsort of the SCALED LOGITS
+    serve all three filters: the sort key is the logit (not the prob, whose
+    float32 underflow can collapse distinct logits onto equal probs and
+    scramble tie order), softmax monotonicity makes the same permutation
+    sort the probabilities, and the k-th element of the sorted array is
+    exactly the top-k threshold.  The nucleus cutoff accumulates the sorted
+    probs in strict element order (``fadda_scan``) and keeps the
+    ``whilelt``-shaped prefix  exclusive_mass < top_p  — the exclusive
+    prefix is the shifted inclusive scan, never a re-rounded subtraction,
+    so the cutoff is bit-identical to the scalar accumulator loop."""
+    b, v = scaled.shape
+    probs = jax.nn.softmax(scaled, axis=-1)
+    order = jnp.argsort(-scaled, axis=-1, stable=True)
+    sl = jnp.take_along_axis(scaled, order, axis=-1)
+    sp = jnp.take_along_axis(probs, order, axis=-1)
+    kth = jnp.take_along_axis(sl, jnp.clip(top_k[:, None] - 1, 0, v - 1),
+                              axis=-1)
+    keep = (top_k[:, None] <= 0) | (scaled >= kth)
+    csum = R.fadda_scan(None, sp) if ordered else jnp.cumsum(sp, axis=-1)
+    excl = jnp.concatenate([jnp.zeros_like(csum[..., :1]), csum[..., :-1]],
+                           axis=-1)
+    # sorted position 0 is retained UNCONDITIONALLY: the kept partition can
+    # never go empty, even for degenerate knobs (top_p <= 0, min_p > 1)
+    lane = jnp.arange(v, dtype=jnp.int32)[None, :]
+    keep_sorted = (excl < top_p[:, None]) | (lane == 0)
+    rows = jnp.arange(b)[:, None]
+    nucleus = jnp.zeros((b, v), bool).at[rows, order].set(keep_sorted)
+    keep &= (top_p[:, None] >= 1.0) | nucleus
+    thresh = min_p[:, None] * sp[:, :1]                 # sp[0] == max prob
+    minp_keep = (probs >= thresh) | (probs >= sp[:, :1])   # max always kept
+    return keep & ((min_p[:, None] <= 0) | minp_keep)
+
+
+def mask_logits(logits: Array, keep: Array) -> Array:
+    """Zeroing predication onto the extended reals: inactive vocab entries
+    read as -inf, so softmax/argmax see only the active partition."""
+    return jnp.where(keep, logits, NEG_INF)

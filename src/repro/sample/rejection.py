@@ -1,0 +1,81 @@
+"""Distribution-preserving rejection sampling for speculative decoding.
+
+Standard speculative rejection (Leviathan et al. / Chen et al.): the draft
+proposes x_i ~ q_i; the target accepts with probability min(1, p_i(x_i) /
+q_i(x_i)); the first rejected position is re-drawn from the residual
+distribution  norm(max(p_i − q_i, 0))  and a fully-accepted window earns a
+bonus draw from p_K.  The committed stream is then EXACTLY distributed as
+target-alone sampling — speculation stays lossless under stochastic
+decoding, the same contract greedy matching gives deterministic decoding.
+
+The acceptance predicate is the FFR partition algebra of ``serve.
+speculative``: stochastic accept bits replace the equality predicate, and
+``accept_prefix`` (brkb over the first rejection) is unchanged — the first
+"faulting" lane is re-executed from the residual, everything after is
+discarded.  Greedy lanes keep the exact-match predicate and the target's
+own argmax as the fix, so an all-greedy batch commits bit-identically to
+the pre-sampling speculative path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as PT
+from repro.core import predicate as P
+
+Array = jax.Array
+
+_TINY = 1e-30
+
+
+def residual_dist(p: Array, q: Array) -> Array:
+    """norm(max(p − q, 0)) with a p fallback when the residual has no mass
+    (p == q, where a rejection is a measure-zero/rounding event)."""
+    r = jnp.maximum(p - q, 0.0)
+    mass = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(mass > _TINY, r / jnp.maximum(mass, _TINY), p)
+
+
+def speculative_accept(draft: Array, q_probs: Array, p_probs: Array,
+                       tgt_greedy: Array, greedy: Array, round_key: Array):
+    """One round of batched rejection acceptance.
+
+    draft      (B, K)      proposed tokens
+    q_probs    (B, K, V)   proposal distributions the drafts were drawn from
+    p_probs    (B, K+1, V) target distributions (processed like the sampler)
+    tgt_greedy (B, K+1)    raw-argmax target tokens (greedy lanes' algebra)
+    greedy     (B,)        per-lane greedy predicate
+    round_key  (B, 2)      per-lane key for this round (fresh split)
+
+    Returns (acc (B, K) accepted-prefix predicate, fix (B,) the token at the
+    first fault — residual draw, bonus draw, or the greedy target token).
+    """
+    b, k = draft.shape
+    pk = p_probs[:, :k]                                   # (B, K, V)
+    pd = jnp.take_along_axis(pk, draft[..., None], axis=-1)[..., 0]
+    qd = jnp.take_along_axis(q_probs, draft[..., None], axis=-1)[..., 0]
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (k,)))(
+        jax.vmap(jax.random.fold_in)(round_key, jnp.zeros((b,), jnp.uint32)))
+    stoch_bits = u < jnp.minimum(1.0, pd / jnp.maximum(qd, _TINY))
+    match_bits = draft == tgt_greedy[:, :-1]
+    acc = PT.accept_prefix(jnp.where(greedy[:, None], match_bits, stoch_bits))
+    n_acc = P.cntp(acc)                                   # (B,)
+
+    # residual at the FIRST-FAULT position only (position K's "residual" is
+    # the bonus distribution p_K itself, via a zero q row), then draw the
+    # fix with a second fold — gathering p/q before residual_dist avoids
+    # normalizing K unused (B, V) distributions per round
+    q_ext = jnp.concatenate([q_probs, jnp.zeros_like(p_probs[:, :1])], axis=1)
+    p_at = jnp.take_along_axis(p_probs, n_acc[:, None, None], axis=1)[:, 0]
+    q_at = jnp.take_along_axis(q_ext, n_acc[:, None, None], axis=1)[:, 0]
+    res_at = residual_dist(p_at, q_at)                    # (B, V)
+    fix_key = jax.vmap(jax.random.fold_in)(round_key, jnp.ones((b,), jnp.uint32))
+    g = jax.vmap(lambda kk: jax.random.gumbel(kk, res_at.shape[-1:]))(fix_key)
+    stoch_fix = jnp.argmax(
+        jnp.where(res_at > 0, jnp.log(jnp.maximum(res_at, _TINY)), -jnp.inf)
+        + g, axis=-1).astype(jnp.int32)
+    greedy_fix = jnp.take_along_axis(tgt_greedy, n_acc[:, None],
+                                     axis=1)[:, 0]
+    return acc, jnp.where(greedy, greedy_fix, stoch_fix)

@@ -1,0 +1,95 @@
+"""The per-lane predicated sampler: one entry point for greedy AND stochastic.
+
+``sample(logits, state)`` runs the whole processor pipeline as predicate
+algebra (penalties → temperature → top-k ∧ top-p ∧ min-p ∧ bans → masked
+Gumbel-argmax) and then per-lane SELECTS between the stochastic draw and the
+bit-exact raw-logits ``argmax`` under the lane's ``greedy`` predicate — a
+merging move (§2.3.2), so an all-greedy batch is indistinguishable from the
+pre-sampling engine and a mixed batch decodes heterogeneously in one fused
+program.  Everything traces into the engine's jitted decode while-loop: no
+per-token Python dispatch, no host↔device sync.
+
+PRNG discipline: every call splits every lane's key exactly once (greedy
+lanes too — their chain position must stay equal to their token count so a
+later stochastic occupant of the lane is unaffected by history).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import processors as PR
+from .params import split_keys
+
+Array = jax.Array
+
+
+def greedy_tokens(logits: Array) -> Array:
+    """Bit-exact argmax over raw logits — THE greedy sampler (the single
+    copy that ``serve.engine``, ``serve.scheduler`` and ``serve.speculative``
+    all route through)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def process_logits(logits: Array, state: dict,
+                   out_tokens: Optional[Array] = None,
+                   n_out: Optional[Array] = None,
+                   ban: Optional[Array] = None) -> Array:
+    """The processor pipeline: penalised, temperature-scaled logits with the
+    inactive vocab partition at -inf.  ``softmax`` of the result is the
+    lane's categorical distribution; Gumbel-argmax of it is a draw."""
+    if out_tokens is not None:
+        logits = PR.apply_penalties(logits, out_tokens, n_out,
+                                    state["repetition_penalty"],
+                                    state["presence_penalty"])
+    scaled = PR.temperature_scale(logits, state["temperature"])
+    # the ban predicate applies BEFORE top-k/top-p/min-p generation: banned
+    # entries read -inf, so they carry zero nucleus mass, can't set the
+    # top-k threshold, and the kept set always contains the (allowed)
+    # argmax — the partition can never go empty
+    if ban is not None:
+        scaled = PR.mask_logits(scaled, ban[None, :])
+    keep = PR.keep_pred(scaled, state["top_k"], state["top_p"],
+                        state["min_p"])
+    return PR.mask_logits(scaled, keep)
+
+
+def categorical_probs(logits: Array, state: dict,
+                      out_tokens: Optional[Array] = None,
+                      n_out: Optional[Array] = None,
+                      ban: Optional[Array] = None) -> Array:
+    """Normalized per-lane sampling distribution (B, V) — what speculative
+    rejection sampling verifies against."""
+    return jax.nn.softmax(
+        process_logits(logits, state, out_tokens, n_out, ban), axis=-1)
+
+
+def gumbel_argmax(masked_logits: Array, subkeys: Array) -> Array:
+    """Draw one token per lane from softmax(masked_logits) via per-lane
+    Gumbel noise: argmax(logits + g) ~ Categorical(softmax(logits)).
+    Inactive (-inf) vocab entries can never win."""
+    g = jax.vmap(lambda k: jax.random.gumbel(k, masked_logits.shape[-1:]))(
+        subkeys)
+    return jnp.argmax(masked_logits + g, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: Array, state: dict,
+           out_tokens: Optional[Array] = None,
+           n_out: Optional[Array] = None,
+           ban: Optional[Array] = None):
+    """Per-lane heterogeneous sampling: (tokens (B,), new_state).
+
+    Greedy lanes return the bit-exact raw-logits argmax (modulo ``ban``,
+    which also constrains greedy decoding when set); stochastic lanes draw
+    from their processed distribution with their own key.  jit-safe;
+    designed to live inside the decode while-loop body.
+    """
+    state, sub = split_keys(state)
+    raw = logits if ban is None else PR.mask_logits(logits, ban[None, :])
+    arg = greedy_tokens(raw)
+    masked = process_logits(logits, state, out_tokens, n_out, ban)
+    stoch = gumbel_argmax(masked, sub)
+    return jnp.where(state["greedy"], arg, stoch), state

@@ -14,18 +14,27 @@ harmless, because a finished lane is always refilled through
 ``repro.models.slot_update`` (a fresh prefill) before it is reused.  That is
 the contract that makes continuous batching (see ``serve.scheduler``) a pure
 lane-permutation problem.
+
+Sampling is per-lane predicated (``repro.sample``): every lane carries its
+own SamplingParams row (temperature/top-k/top-p/min-p/penalties/seed/greedy
+flag) and PRNG key inside the decode carry, so heterogeneous stochastic
+decoding runs in the SAME jitted while-loop — greedy lanes select the
+bit-exact raw argmax under a merging predicate, and a request's stream is a
+function of (seed, prompt, params) only, never of batch composition.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro import sample as S
 from repro.core import predicate as P
 from repro.models import get_model, is_paged, paged_view, paged_writeback
+from repro.sample.processors import ban_pred, mask_logits
 
 
 @dataclasses.dataclass
@@ -34,7 +43,12 @@ class ServeEngine:
     params: object
     max_new_tokens: int = 32
     stop_token: int = 0
-    greedy: bool = True
+    # engine-wide default sampling spec for requests/batches that don't carry
+    # their own (None = greedy argmax, the bit-exact legacy behavior)
+    default_sampling: Optional[S.SamplingParams] = None
+    # constrained decoding: token ids masked out of EVERY lane's vocab
+    # partition (greedy lanes included) before sampling
+    banned_tokens: Optional[Sequence[int]] = None
     # paged decode: "gather" materializes the dense view through the page
     # table before the (unchanged) model decode — bitwise identical to the
     # dense cache by construction; "kernel" lets families that support it
@@ -43,25 +57,46 @@ class ServeEngine:
 
     def __post_init__(self):
         self.model = get_model(self.cfg)
+        # logits run over the PADDED vocab (the model already predicates the
+        # pad lanes to -1e30, so leaving them "allowed" here is inert)
+        v = getattr(self.cfg, "padded_vocab", self.cfg.vocab_size)
+        self._ban = (ban_pred(v, tuple(self.banned_tokens))
+                     if self.banned_tokens else None)
         self._prefill = jax.jit(
             lambda p, b, c: self.model.prefill(p, self.cfg, b, c))
-        # donate the mutable decode state (cache/out_buf/tok/p/n_gen) so XLA
-        # updates it in place instead of copying the KV cache every burst;
-        # the CPU backend has no donation (it would only warn), so gate it
-        donate = (1, 2, 3, 4, 5) if jax.default_backend() != "cpu" else ()
+        # donate the mutable decode state (cache/out_buf/tok/p/n_gen and the
+        # sampler lane state) so XLA updates it in place instead of copying
+        # the KV cache every burst; the CPU backend has no donation (it
+        # would only warn), so gate it
+        donate = (1, 2, 3, 4, 5, 7) if jax.default_backend() != "cpu" else ()
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
-                                     static_argnames=("n_steps",),
+                                     static_argnames=("n_steps", "stochastic"),
                                      donate_argnums=donate)
 
-    def _sample(self, logits):
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    def _sample(self, logits, sstate=None, out_buf=None, n_gen=None):
+        """Sample one token per lane through ``repro.sample`` (the single
+        sampler entry point).  With no state: bit-exact greedy argmax."""
+        if sstate is None:
+            return S.greedy_tokens(logits if self._ban is None else
+                                   mask_logits(logits, self._ban[None, :]))
+        return S.sample(logits, sstate, out_tokens=out_buf, n_out=n_gen,
+                        ban=self._ban)
+
+    def make_state(self, b: int, sampling=None) -> dict:
+        """Batched sampler lane state for ``b`` lanes (falls back to the
+        engine's ``default_sampling``, then to greedy)."""
+        if isinstance(sampling, dict):
+            return sampling
+        return S.lane_state(self.default_sampling if sampling is None
+                            else sampling, b)
 
     # ------------------------------------------------------------------
     # jitted decode loop
     # ------------------------------------------------------------------
 
     def _decode_chunk_impl(self, params, cache, out_buf, tok, p, n_gen,
-                           lane_budget, *, n_steps: int):
+                           lane_budget, sstate, *, n_steps: int,
+                           stochastic: bool = True):
         """The decode hot loop as ONE XLA while: §2.3.4 dynamic exits.
 
         Every iteration decodes all lanes, but only the active partition
@@ -71,33 +106,49 @@ class ServeEngine:
         calls; ``generate`` passes n_steps = max_new_tokens and uniform
         budgets so the same loop serves both paths (bit-identity between the
         one-shot and scheduled engines follows by construction).
-        Returns (cache, out_buf, tok, p, n_gen, steps_run).
+
+        ``sstate`` is the per-lane sampler state (``repro.sample``): keys
+        split once per iteration for EVERY lane — a live lane's chain
+        position therefore equals its committed token count, independent of
+        chunk boundaries and co-scheduled traffic — and the whole processor
+        pipeline (penalty gathers over the lane's own out_buf, top-k/top-p
+        predicates, the ordered top-p cumsum) traces into this while-loop:
+        no per-token host dispatch.  ``stochastic=False`` (a static flag the
+        caller derives host-side: no live lane samples) compiles the legacy
+        argmax-only body — greedy traffic pays zero pipeline cost and the
+        sampler state passes through untouched, which is sound because a
+        stochastic lane's key chain only needs to advance on steps it is
+        live for, and every such step runs a stochastic=True chunk.
+        Returns (cache, out_buf, tok, p, n_gen, sstate, steps_run).
         """
         stop = self.stop_token
         b, max_out = out_buf.shape
         rows = jnp.arange(b)
 
         def loop_cond(carry):
-            _, _, _, p, _, step = carry
+            _, _, _, p, _, _, step = carry
             return jnp.any(p) & (step < n_steps)
 
         def loop_body(carry):
-            cache, out_buf, tok, p, n_gen, step = carry
+            cache, out_buf, tok, p, n_gen, sstate, step = carry
             logits, cache = self._cached_decode(params, {"token": tok[:, None]},
                                                 cache)
-            nxt = self._sample(logits)
+            if stochastic:
+                nxt, sstate = self._sample(logits, sstate, out_buf, n_gen)
+            else:
+                nxt = self._sample(logits)
             nxt = P.merging(p, nxt, jnp.full_like(nxt, stop))
             col = jnp.clip(n_gen, 0, max_out - 1)
             out_buf = out_buf.at[rows, col].set(
                 jnp.where(p, nxt, out_buf[rows, col]))
             n_gen = n_gen + p.astype(jnp.int32)
             p = p & (nxt != stop) & (n_gen < lane_budget)
-            return cache, out_buf, nxt, p, n_gen, step + 1
+            return cache, out_buf, nxt, p, n_gen, sstate, step + 1
 
-        cache, out_buf, tok, p, n_gen, steps = jax.lax.while_loop(
+        cache, out_buf, tok, p, n_gen, sstate, steps = jax.lax.while_loop(
             loop_cond, loop_body,
-            (cache, out_buf, tok, p, n_gen, jnp.int32(0)))
-        return cache, out_buf, tok, p, n_gen, steps
+            (cache, out_buf, tok, p, n_gen, sstate, jnp.int32(0)))
+        return cache, out_buf, tok, p, n_gen, sstate, steps
 
     def _cached_decode(self, params, batch, cache):
         """One decode step against a dense OR paged cache.
@@ -143,20 +194,30 @@ class ServeEngine:
             return self.model.make_cache(self.cfg, b)
         return self.model.make_cache(self.cfg, b, max_len)
 
-    def generate(self, batch, *, max_len: Optional[int] = None):
+    def generate(self, batch, *, max_len: Optional[int] = None,
+                 sampling=None):
         """batch: {"tokens": (B, S) prompts, "lens": (B,)} (+ modality extras).
 
-        Returns dict with tokens (B, max_new), n_generated (B,), and the
-        final active partition (all-False when every lane exited).
+        ``sampling`` is None (engine default / greedy), one ``SamplingParams``
+        broadcast over lanes, a per-lane sequence of them, or a pre-built
+        lane state dict.  Returns dict with tokens (B, max_new), n_generated
+        (B,), and the final active partition (all-False when every lane
+        exited).
         """
         tokens = batch["tokens"]
         b, s = tokens.shape
         lens = jnp.asarray(batch.get("lens", jnp.full((b,), s)), jnp.int32)
         max_len = max_len or (s + self.max_new_tokens)
         cache = self.make_cache(b, max_len, batch)
+        sstate = self.make_state(b, sampling)
 
         logits, cache = self._prefill(self.params, dict(batch, lens=lens), cache)
-        first_tok = self._sample(logits)
+        # all-greedy batches skip the stochastic pipeline here too (keys of
+        # greedy lanes are never read, so not splitting them is inert)
+        if S.is_all_greedy(sstate):
+            first_tok = self._sample(logits)
+        else:
+            first_tok, sstate = self._sample(logits, sstate)
 
         max_new = self.max_new_tokens
         out = jnp.zeros((b, max_new), jnp.int32)
@@ -164,9 +225,10 @@ class ServeEngine:
         budget = jnp.full((b,), max_new, jnp.int32)
         p0 = (first_tok != self.stop_token) & (budget > 1)
         # ---- single dispatch: the whole decode loop runs inside XLA ----
-        cache, out, tok, _, n_gen, _ = self._decode_chunk(
+        cache, out, tok, _, n_gen, _, _ = self._decode_chunk(
             self.params, cache, out, first_tok, p0, jnp.ones((b,), jnp.int32),
-            budget, n_steps=max_new)
+            budget, sstate, n_steps=max_new,
+            stochastic=not S.is_all_greedy(sstate))
         p = tok != self.stop_token                  # lanes that never exited
         return {"tokens": out, "n_generated": n_gen, "active": p,
                 "cache": cache}

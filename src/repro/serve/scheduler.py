@@ -38,6 +38,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sample as S
 from repro.core import paging as PG
 from repro.core import partition as PT
 from repro.models import gather_lanes, get_model, slot_update
@@ -168,6 +169,7 @@ class Request:
     max_new_tokens: Optional[int] = None    # default: engine budget
     arrival: float = 0.0
     extras: Optional[dict] = None           # modality extras (cross_emb, ...)
+    sampling: Optional[S.SamplingParams] = None  # default: engine default
 
 
 class ContinuousBatchingScheduler:
@@ -246,6 +248,14 @@ class ContinuousBatchingScheduler:
         self.p = jnp.zeros((b,), bool)                # active partition
         self.n_gen = jnp.zeros((b,), jnp.int32)
         self.budget = jnp.zeros((b,), jnp.int32)
+        # per-lane sampler state rides the decode carry; a request's row is
+        # spliced in at admission and moves with its lane under compaction,
+        # so its key chain (and thus its token stream) is a function of its
+        # own seed only, never of batch composition.  _lane_stoch is the
+        # host-side shadow of which lanes actually sample — when none do,
+        # the decode chunk compiles the argmax-only (legacy-cost) body.
+        self.sstate = S.greedy_state(b)
+        self._lane_stoch = np.zeros((b,), bool)
         self.stats = {"steps": 0, "decode_steps": 0, "lane_steps": 0,
                       "active_lane_steps": 0, "compactions": 0,
                       "occupancy_trace": [], "page_occupancy_trace": [],
@@ -257,8 +267,10 @@ class ContinuousBatchingScheduler:
     # ------------------------------------------------------------------
 
     def submit(self, tokens, *, max_new_tokens: Optional[int] = None,
-               arrival: float = 0.0, extras: Optional[dict] = None) -> int:
-        """Queue a request; returns its rid."""
+               arrival: float = 0.0, extras: Optional[dict] = None,
+               sampling: Optional[S.SamplingParams] = None) -> int:
+        """Queue a request; returns its rid.  ``sampling`` carries the
+        request's own decoding distribution (None: engine default/greedy)."""
         tokens = np.asarray(tokens, np.int32)
         if tokens.ndim != 1:
             raise ValueError(f"prompt must be 1-D, got shape {tokens.shape}")
@@ -269,7 +281,7 @@ class ContinuousBatchingScheduler:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, tokens, max_new_tokens, arrival,
-                                  extras))
+                                  extras, sampling))
         return rid
 
     def occupancy(self) -> float:
@@ -289,9 +301,10 @@ class ContinuousBatchingScheduler:
             eng = self.engine
             gen_before = int(self.n_gen.sum())
             (self.cache, self.out_buf, self.tok, self.p,
-             self.n_gen, steps) = eng._decode_chunk(
+             self.n_gen, self.sstate, steps) = eng._decode_chunk(
                 eng.params, self.cache, self.out_buf, self.tok, self.p,
-                self.n_gen, self.budget, n_steps=self.chunk)
+                self.n_gen, self.budget, self.sstate, n_steps=self.chunk,
+                stochastic=bool(self._lane_stoch.any()))
             # the jitted loop exits early once every lane retires, and lanes
             # die mid-chunk: charge what actually ran (each active lane-step
             # commits exactly one token, so the n_gen delta is exact)
@@ -450,7 +463,18 @@ class ContinuousBatchingScheduler:
         if self.page_size is not None:
             sub_cache = self._seed_shared_prefix(sub_cache, plans, n_pad)
         logits, sub_cache = eng._prefill(eng.params, batch, sub_cache)
-        first_tok = eng._sample(logits)[:n]
+        # per-request sampler rows: built from each request's OWN spec/seed
+        # (dummy pad rows are greedy with a zero key), first token sampled
+        # through the same repro.sample entry point the decode loop uses
+        specs = [self._effective_spec(r) for r in batch_reqs]
+        sub_state = S.lane_state(specs, n_pad)
+        if any(self._is_stochastic(s) for s in specs):
+            first_tok, sub_state = eng._sample(logits, sub_state)
+        else:
+            # all-greedy admission skips the stochastic pipeline (greedy
+            # keys are never read, so leaving them unsplit is inert)
+            first_tok = eng._sample(logits)
+        first_tok = first_tok[:n]
         if self.page_size is not None:
             self._copy_pages(sub_cache, plans, lanes)
             for req, pl in zip(batch_reqs, plans):
@@ -462,6 +486,9 @@ class ContinuousBatchingScheduler:
         # ---- splice the sub-batch into the recycled lanes ----
         lane_idx = jnp.asarray(lanes, jnp.int32)
         self.cache = slot_update(eng.cfg, self.cache, lane_idx, sub_cache)
+        self.sstate = S.slot_update(
+            self.sstate, lane_idx,
+            S.gather_lanes(sub_state, jnp.arange(n, dtype=jnp.int32)))
         if plans:
             budgets = np.asarray([pl.budget for pl in plans], np.int32)
         else:
@@ -480,6 +507,24 @@ class ContinuousBatchingScheduler:
         self.p = self.p.at[lane_idx].set(alive)
         for i, r in enumerate(batch_reqs):
             self.lane_rid[lanes[i]] = r.rid
+            self._lane_stoch[lanes[i]] = self._is_stochastic(specs[i])
+
+    def _effective_spec(self, req: Request):
+        """The request's own SamplingParams, or the engine-wide default —
+        decorrelated per request by folding its rid into the default's key
+        (``fold_in`` can never collide with another request's explicit
+        ``PRNGKey(seed)``, and it bit-matches the one-shot engine's
+        broadcast path when submission order equals lane order)."""
+        if req.sampling is not None:
+            return req.sampling
+        d = self.engine.default_sampling
+        if d is None or d.greedy or d.temperature <= 0 or d.fold is not None:
+            return d
+        return dataclasses.replace(d, fold=req.rid)
+
+    @staticmethod
+    def _is_stochastic(spec) -> bool:
+        return not (spec is None or spec.greedy or spec.temperature <= 0)
 
     # ------------------------------------------------------------------
     # paged admission plumbing
@@ -574,6 +619,7 @@ class ContinuousBatchingScheduler:
                                  "n_generated": n,
                                  "finished_at": self.now}
             self.lane_rid[lane] = -1
+            self._lane_stoch[lane] = False
             if self.page_size is not None:
                 for pid in self.lane_pages.pop(int(lane)):
                     if self.allocator.release(pid):
@@ -609,6 +655,7 @@ class ContinuousBatchingScheduler:
         # actual KV bytes) never move, so compaction cost is O(n_pages), not
         # O(cache)
         self.cache = gather_lanes(self.engine.cfg, self.cache, perm_idx)
+        self.sstate = S.gather_lanes(self.sstate, perm_idx)
         self.out_buf = jnp.take(self.out_buf, perm_idx, axis=0)
         self.tok = jnp.take(self.tok, perm_idx, axis=0)
         self.p = jnp.take(self.p, perm_idx, axis=0) & jnp.asarray(
@@ -616,6 +663,7 @@ class ContinuousBatchingScheduler:
         self.n_gen = jnp.take(self.n_gen, perm_idx, axis=0)
         self.budget = jnp.take(self.budget, perm_idx, axis=0)
         self.lane_rid = self.lane_rid[perm]
+        self._lane_stoch = self._lane_stoch[perm]
         if self.page_size is not None:
             self.lane_pages = {new: self.lane_pages[int(old)]
                                for new, old in enumerate(perm)

@@ -8,6 +8,19 @@ fault commit, the first faulting lane is re-executed architecturally (here:
 the target's own token is substituted), everything after is discarded and
 retried next round.
 
+Under STOCHASTIC sampling (``sampling=`` carries per-lane
+``repro.sample.SamplingParams``) the equality predicate generalizes to
+distribution-preserving rejection sampling (``repro.sample.rejection``):
+accept draft token x_i with probability min(1, p_i(x_i)/q_i(x_i)), re-draw
+the first fault from the residual norm(max(p−q, 0)) — the committed stream
+is then EXACTLY target-alone sampling, so speculation stays lossless
+instead of asserting greedy.  Greedy lanes (and ``sampling=None``) keep the
+exact-match predicate and commit bit-identically to the deterministic path.
+The spec window applies temperature/top-k/top-p/min-p per lane; repetition/
+presence penalties are not applied inside the window (their vocab predicate
+would have to be rebuilt after every accepted token — a serialized
+dependency the window algebra deliberately avoids).
+
 NOTE: verification currently issues K+1 single-token target decodes (teacher
 forcing through the decode cache), so the latency win of real speculative
 decoding is not yet realized — that needs a windowed ``extend`` entry point
@@ -19,14 +32,10 @@ The implementation is BATCHED: every request lane carries its own speculation
 window, and each per-round step is the partition algebra applied row-wise —
 ``accept_prefix`` for acceptance, ``whilelt``-style budget masks for commit
 truncation, and SVE ``lastb`` to extract the next feed token from each lane's
-committed partition.  No lane count is special-cased (the old ``b == 1``
-assert is gone); caches roll back by a per-lane ``pos`` vector because every
-attention read is predicated by ``kv_lens = pos + 1`` — stale slots are
-architecturally inert, the same trick that makes FFR re-execution free.
-
-Greedy-match speculative decoding (deterministic targets) keeps the FFR
-analogy exact: accepted ⇔ bit-identical to what the target would have
-produced alone (asserted in tests).
+committed partition.  No lane count is special-cased; caches roll back by a
+per-lane ``pos`` vector because every attention read is predicated by
+``kv_lens = pos + 1`` — stale slots are architecturally inert, the same
+trick that makes FFR re-execution free.
 """
 
 from __future__ import annotations
@@ -35,24 +44,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sample as S
 from repro.core import partition as PT
 from repro.core import predicate as P
 from repro.models import get_model
 
 
-def _greedy(logits):
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-
 def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
                        prompt, *, n_tokens: int, k_draft: int = 4,
                        max_len: int | None = None, lens=None,
-                       stop_token: int | None = None):
-    """Batched greedy speculative decoding.
+                       stop_token: int | None = None, sampling=None):
+    """Batched speculative decoding (greedy matching or rejection sampling).
 
     prompt: (B, S) token ids (+ optional per-lane ``lens``).  Every lane
     speculates/commits independently each round; a lane leaves the active
     partition when it hits ``stop_token`` or its ``n_tokens`` budget.
+    ``sampling``: None (greedy — bit-identical to the pre-sampling path), a
+    single ``SamplingParams``, a per-lane sequence, or a lane state dict.
 
     Returns (tokens, stats).  For B == 1 tokens is (n_tokens,) and
     ``stats["accept_counts"]`` is a list of ints (legacy single-lane API);
@@ -64,6 +72,10 @@ def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
     max_len = max_len or (s + n_tokens + k_draft + 1)
     lens = (jnp.full((b,), s, jnp.int32) if lens is None
             else jnp.asarray(lens, jnp.int32))
+    state = None
+    if sampling is not None:
+        state = sampling if isinstance(sampling, dict) \
+            else S.lane_state(sampling, b)
 
     tcache = tmodel.make_cache(target_cfg, b, max_len)
     dcache = dmodel.make_cache(draft_cfg, b, max_len)
@@ -75,7 +87,10 @@ def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
     decode_t = jax.jit(lambda p, b_, c: tmodel.decode(p, target_cfg, b_, c))
     decode_d = jax.jit(lambda p, b_, c: dmodel.decode(p, draft_cfg, b_, c))
 
-    cur = _greedy(tlog)                            # (B,) first target token
+    if state is None:
+        cur = S.greedy_tokens(tlog)                # (B,) first target token
+    else:
+        cur, state = S.sample(tlog, state)
     out = jnp.zeros((b, n_tokens), jnp.int32)
     out = out.at[:, 0].set(cur)
     n_gen = jnp.ones((b,), jnp.int32)
@@ -90,19 +105,32 @@ def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
 
     while bool(jnp.any(alive)):
         pos0 = tcache["pos"]                       # (B,) committed lengths
+        if state is not None:
+            # one key split per round; draft proposals fold tags 2+i, the
+            # acceptance/residual draws inside speculative_accept fold 0/1
+            state, round_key = S.split_keys(state)
 
         # ---- draft speculates K tokens per lane (the speculative load) ----
-        dtoks = []
+        dtoks, qs = [], []
         dtok = cur
-        for _ in range(k_draft):
+        for i in range(k_draft):
             dlog, dcache = decode_d(draft_params, {"token": dtok[:, None]},
                                     dcache)
-            dtok = _greedy(dlog)
+            if state is None:
+                dtok = S.greedy_tokens(dlog)
+            else:
+                ml = S.process_logits(dlog, state)
+                ki = jax.vmap(jax.random.fold_in)(
+                    round_key, jnp.full((b,), 2 + i, jnp.uint32))
+                dtok = jnp.where(state["greedy"], S.greedy_tokens(dlog),
+                                 S.gumbel_argmax(ml, ki))
+                qs.append(jax.nn.softmax(ml, axis=-1))
             dtoks.append(dtok)
         # one extra decode writes the last draft token's K/V, so a fully
         # accepted window needs no special case (rollback truncates instead)
         _, dcache = decode_d(draft_params, {"token": dtok[:, None]}, dcache)
         draft = jnp.stack(dtoks, axis=1)           # (B, K)
+
         window = jnp.concatenate([cur[:, None], draft], axis=1)  # (B, K+1)
 
         # ---- target verifies the whole window (teacher forcing) ----
@@ -111,17 +139,29 @@ def speculative_decode(target_cfg, target_params, draft_cfg, draft_params,
             tl, tcache = decode_t(target_params,
                                   {"token": window[:, i:i + 1]}, tcache)
             tlogs.append(tl)
-        tgt_next = _greedy(jnp.stack(tlogs, axis=1))  # (B, K+1)
+        tgt_next = S.greedy_tokens(jnp.stack(tlogs, axis=1))  # (B, K+1)
 
-        # ---- FFR acceptance: brkb over the per-lane mismatch predicate ----
-        match = draft == tgt_next[:, :-1]            # (B, K)
-        acc = PT.accept_prefix(match)                # maximal prefix per lane
-        n_acc = P.cntp(acc)                          # (B,)
+        # ---- FFR acceptance: brkb over the per-lane fault predicate ----
+        if state is None:
+            match = draft == tgt_next[:, :-1]        # (B, K)
+            acc = PT.accept_prefix(match)            # maximal prefix per lane
+            n_acc = P.cntp(acc)                      # (B,)
+            # committed window: accepted draft tokens, then the target's own
+            # token at the first fault (the architectural retry)
+            fix = jnp.take_along_axis(tgt_next, n_acc[:, None], axis=1)
+        else:
+            q = jnp.stack(qs, axis=1)                # (B, K, V)
+            p_probs = jax.nn.softmax(
+                S.process_logits(
+                    jnp.stack(tlogs, axis=1).reshape(b * kp1, -1),
+                    S.gather_lanes(state, jnp.repeat(jnp.arange(b), kp1))
+                ).reshape(b, kp1, -1), axis=-1)      # (B, K+1, V)
+            acc, fix1 = S.speculative_accept(draft, q, p_probs, tgt_next,
+                                             state["greedy"], round_key)
+            n_acc = P.cntp(acc)
+            fix = fix1[:, None]
         accepted_hist.append(jnp.where(alive, n_acc, -1))   # -1 = dead lane
 
-        # committed window: accepted draft tokens, then the target's own
-        # token at the first fault (the architectural retry)
-        fix = jnp.take_along_axis(tgt_next, n_acc[:, None], axis=1)  # (B, 1)
         draft_ext = jnp.concatenate([draft, fix], axis=1)            # (B, K+1)
         commit = jnp.where(j < n_acc[:, None], draft_ext, fix)       # (B, K+1)
 

@@ -1,0 +1,421 @@
+"""Per-lane predicated sampling: greedy bit-identity, per-lane-seed stream
+invariance (batch composition / admission order / compaction / paged vs
+dense), processor masks vs the O(V) numpy reference, ordered top-p cumsum."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sample as S
+from repro.core import reductions as R
+from repro.models import ModelConfig, get_model
+from repro.sample import numpy_ref as NR
+from repro.sample import processors as PR
+from repro.serve import ContinuousBatchingScheduler, ServeEngine
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=64, param_dtype="float32", compute_dtype="float32")
+MAX_LEN = 24
+
+
+def _mk(seed=0, **over):
+    cfg = ModelConfig(name="t", family="dense", **{**BASE, **over})
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# greedy fallback is bit-exact
+# ---------------------------------------------------------------------------
+
+def test_greedy_params_bit_identical_to_argmax_engine():
+    """greedy=True and temperature<=0 both decode bit-identically to the
+    default (argmax) engine — the merging-predicate select never perturbs
+    greedy lanes."""
+    cfg, _, params = _mk()
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=-999)
+    prompts = jnp.asarray(np.random.RandomState(0).randint(1, 64, (3, 10)))
+    ref = eng.generate({"tokens": prompts})
+    for spec in (S.SamplingParams(greedy=True, seed=5),
+                 S.SamplingParams(temperature=0.0, greedy=False, seed=5),
+                 [S.SamplingParams(greedy=True),
+                  S.SamplingParams(temperature=-1.0, greedy=False, seed=9),
+                  None]):
+        got = eng.generate({"tokens": prompts}, sampling=spec)
+        np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                      np.asarray(ref["tokens"]))
+        np.testing.assert_array_equal(np.asarray(got["n_generated"]),
+                                      np.asarray(ref["n_generated"]))
+
+
+def test_mixed_batch_greedy_lane_unperturbed():
+    """A stochastic co-lane must not move a greedy lane by one bit."""
+    cfg, _, params = _mk(seed=1)
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=-999)
+    prompts = jnp.asarray(np.random.RandomState(1).randint(1, 64, (2, 8)))
+    ref = eng.generate({"tokens": prompts})
+    got = eng.generate({"tokens": prompts}, sampling=[
+        None,
+        S.SamplingParams(temperature=1.2, top_p=0.8, seed=3, greedy=False)])
+    np.testing.assert_array_equal(np.asarray(got["tokens"][0]),
+                                  np.asarray(ref["tokens"][0]))
+
+
+def test_sampled_stream_seed_reproducible():
+    cfg, _, params = _mk(seed=2)
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=-999)
+    prompts = jnp.asarray(np.random.RandomState(2).randint(1, 64, (2, 8)))
+    spec = [S.SamplingParams(temperature=0.8, top_p=0.9, seed=7, greedy=False),
+            S.SamplingParams(temperature=1.0, top_k=10, seed=8, greedy=False)]
+    a = eng.generate({"tokens": prompts}, sampling=spec)
+    b = eng.generate({"tokens": prompts}, sampling=spec)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    # a different seed must (overwhelmingly) move the stream
+    c = eng.generate({"tokens": prompts}, sampling=[
+        S.SamplingParams(temperature=0.8, top_p=0.9, seed=99, greedy=False),
+        spec[1]])
+    assert np.asarray(c["tokens"][0]).tolist() != \
+        np.asarray(a["tokens"][0]).tolist()
+    np.testing.assert_array_equal(np.asarray(c["tokens"][1]),
+                                  np.asarray(a["tokens"][1]))
+
+
+# ---------------------------------------------------------------------------
+# per-lane determinism: stream is a function of (seed, prompt, params) only
+# ---------------------------------------------------------------------------
+
+def _serve_one(eng, prompt, spec, *, co_prompts=(), co_specs=(),
+               arrivals=None, capacity=4, compact_threshold=0.5,
+               page_size=None, chunk=4):
+    sched = ContinuousBatchingScheduler(
+        eng, capacity=capacity, max_len=MAX_LEN, chunk=chunk,
+        compact_threshold=compact_threshold, page_size=page_size)
+    arrivals = arrivals or [0.0] * (1 + len(co_prompts))
+    rid = sched.submit(prompt, sampling=spec, arrival=arrivals[0])
+    for i, (p, s) in enumerate(zip(co_prompts, co_specs)):
+        sched.submit(p, sampling=s, arrival=arrivals[1 + i])
+    results = sched.run()
+    return np.asarray(results[rid]["tokens"])
+
+
+def test_sampled_stream_invariant_to_batch_composition():
+    """Acceptance criterion: a request's sampled tokens are a function of
+    (seed, prompt, params) only — co-scheduled traffic, admission order,
+    compaction threshold, and paged vs dense cache must not move them."""
+    cfg, _, params = _mk(seed=3)
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(1, 64, 9)
+    spec = S.SamplingParams(temperature=0.9, top_p=0.9, top_k=32, seed=42,
+                            greedy=False)
+
+    alone = _serve_one(eng, prompt, spec)
+
+    co = [rng.randint(1, 64, rng.randint(4, 12)) for _ in range(5)]
+    co_specs = [S.SamplingParams(temperature=1.1, seed=100 + i, greedy=False)
+                if i % 2 else None for i in range(5)]
+
+    # different co-scheduled requests, same stream
+    crowded = _serve_one(eng, prompt, spec, co_prompts=co, co_specs=co_specs)
+    np.testing.assert_array_equal(alone, crowded)
+
+    # staggered admission order (request arrives LAST) + aggressive
+    # compaction churning the lane it ends up in
+    late = _serve_one(eng, prompt, spec, co_prompts=co, co_specs=co_specs,
+                      arrivals=[9.0, 0.0, 1.0, 2.0, 0.0, 3.0],
+                      compact_threshold=0.9, capacity=3, chunk=2)
+    np.testing.assert_array_equal(alone, late)
+
+    # paged cache (gather view is bitwise the dense cache; the sampler state
+    # must ride lane recycling identically)
+    paged = _serve_one(eng, prompt, spec, co_prompts=co, co_specs=co_specs,
+                       page_size=8)
+    np.testing.assert_array_equal(alone, paged)
+
+
+def test_scheduler_sampled_matches_oneshot_engine():
+    """Scheduler-served sampled stream == ServeEngine.generate with the same
+    spec (the continuous/one-shot bit-identity contract, stochastic leg)."""
+    cfg, _, params = _mk(seed=4)
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(4)
+    prompt = rng.randint(1, 64, 8)
+    spec = S.SamplingParams(temperature=0.8, top_p=0.95, seed=11,
+                            greedy=False)
+    got = _serve_one(eng, prompt, spec)
+    ref = eng.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                       max_len=MAX_LEN, sampling=[spec])
+    n = int(ref["n_generated"][0])
+    np.testing.assert_array_equal(got, np.asarray(ref["tokens"][0, :n]))
+
+
+# ---------------------------------------------------------------------------
+# processors vs the O(V) numpy reference
+# ---------------------------------------------------------------------------
+
+def _keep_mask_jax(logits, temperature, top_k, top_p, min_p):
+    scaled = PR.temperature_scale(jnp.asarray(logits)[None, :],
+                                  jnp.asarray([temperature], jnp.float32))
+    keep = PR.top_k_pred(scaled, jnp.asarray([top_k], jnp.int32))
+    keep &= PR.top_p_pred(scaled, jnp.asarray([top_p], jnp.float32))
+    keep &= PR.min_p_pred(scaled, jnp.asarray([min_p], jnp.float32))
+    return np.asarray(keep[0])
+
+
+def test_masks_match_numpy_reference_seeded():
+    rng = np.random.RandomState(0)
+    v = 48
+    for _ in range(60):
+        logits = (rng.randn(v) * 2.5).astype(np.float32)
+        k = int(rng.randint(0, v + 2))
+        p = float(rng.uniform(0.05, 0.999))
+        mp = float(rng.uniform(0.0, 0.4))
+        t = float(rng.uniform(0.3, 2.0))
+        got = _keep_mask_jax(logits, t, k, p, mp)
+        ref = NR.ref_keep_mask(logits, temperature=t, top_k=k, top_p=p,
+                               min_p=mp)
+        assert (got == ref).all(), (k, p, mp, t, np.flatnonzero(got != ref))
+        assert got[np.argmax(logits)]         # argmax always survives
+
+
+def test_penalties_match_numpy_reference():
+    rng = np.random.RandomState(1)
+    v, t = 32, 10
+    logits = (rng.randn(v) * 2).astype(np.float32)
+    out_tokens = rng.randint(0, v, t).astype(np.int32)
+    n_out = 6
+    got = PR.apply_penalties(
+        jnp.asarray(logits)[None, :], jnp.asarray(out_tokens)[None, :],
+        jnp.asarray([n_out]), jnp.asarray([1.4], jnp.float32),
+        jnp.asarray([0.3], jnp.float32))
+    ref = NR.ref_penalised(logits, out_tokens[:n_out],
+                           repetition_penalty=1.4, presence_penalty=0.3)
+    np.testing.assert_allclose(np.asarray(got[0]), ref, rtol=1e-5, atol=1e-6)
+    # stale buffer contents beyond n_out must NOT be penalised
+    got2 = PR.apply_penalties(
+        jnp.asarray(logits)[None, :],
+        jnp.asarray(np.concatenate([out_tokens[:n_out],
+                                    np.full(4, 5, np.int32)]))[None, :],
+        jnp.asarray([n_out]), jnp.asarray([1.4], jnp.float32),
+        jnp.asarray([0.3], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(got2[0]))
+
+
+def test_ban_and_stop_sequence_predicates():
+    cfg, _, params = _mk(seed=6)
+    eng0 = ServeEngine(cfg, params, max_new_tokens=6, stop_token=-999)
+    prompts = jnp.asarray(np.random.RandomState(6).randint(1, 64, (1, 8)))
+    ref = eng0.generate({"tokens": prompts})
+    banned = int(ref["tokens"][0, 0])
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=-999,
+                      banned_tokens=[banned])
+    got = eng.generate({"tokens": prompts})
+    assert banned not in np.asarray(got["tokens"][0]).tolist()
+    # stop-sequence predicate: bigram (a, b) masks b exactly where the
+    # last token is a
+    pred = PR.stop_sequence_pred(8, jnp.asarray([3, 5]), [(3, 6), (5, 1)])
+    want = np.ones((2, 8), bool)
+    want[0, 6] = False
+    want[1, 1] = False
+    np.testing.assert_array_equal(np.asarray(pred), want)
+
+
+def test_ban_applies_before_vocab_filters():
+    """A banned argmax under top_k=1 must yield the best ALLOWED token —
+    the ban predicate empties nucleus/top-k mass BEFORE filter generation,
+    so the kept partition can never go empty (regression: the old order
+    produced an all -inf row whose argmax silently returned token 0)."""
+    rng = np.random.RandomState(9)
+    v = 16
+    logits = jnp.asarray((rng.randn(1, v) * 3).astype(np.float32))
+    top = int(jnp.argmax(logits[0]))
+    runner_up = int(jnp.argsort(-logits[0])[1])
+    state = S.lane_state([S.SamplingParams(temperature=0.8, top_k=1, seed=0,
+                                           greedy=False)], 1)
+    ban = PR.ban_pred(v, [top])
+    for _ in range(4):
+        tok, state = S.sample(logits, state, ban=ban)
+        assert int(tok[0]) == runner_up, (int(tok[0]), top, runner_up)
+
+
+def test_sampled_tokens_respect_masks():
+    """Every drawn token lies in the reference keep-set (predicates really
+    govern the draw, not just the probabilities)."""
+    rng = np.random.RandomState(2)
+    v, b = 24, 16
+    logits = jnp.asarray((rng.randn(b, v) * 2).astype(np.float32))
+    spec = [S.SamplingParams(temperature=0.7, top_k=5, top_p=0.8,
+                             seed=i, greedy=False) for i in range(b)]
+    state = S.lane_state(spec, b)
+    for _ in range(5):
+        tok, state = S.sample(logits, state)
+        for i in range(b):
+            ref = NR.ref_keep_mask(np.asarray(logits[i]), temperature=0.7,
+                                   top_k=5, top_p=0.8)
+            assert ref[int(tok[i])], (i, int(tok[i]), np.flatnonzero(ref))
+
+
+def test_fused_keep_pred_equals_individual_predicates():
+    """The decode loop's fused keep_pred (one softmax + one argsort) is
+    bit-identical to ANDing the three reference predicates."""
+    rng = np.random.RandomState(8)
+    b, v = 6, 40
+    scaled = jnp.asarray((rng.randn(b, v) * 2).astype(np.float32))
+    k = jnp.asarray(rng.randint(0, v + 2, b), jnp.int32)
+    p = jnp.asarray(rng.uniform(0.05, 1.1, b), jnp.float32)
+    mp = jnp.asarray(rng.uniform(0.0, 0.4, b), jnp.float32)
+    fused = PR.keep_pred(scaled, k, p, mp)
+    sep = (PR.top_k_pred(scaled, k) & PR.top_p_pred(scaled, p)
+           & PR.min_p_pred(scaled, mp))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(sep))
+
+
+def test_degenerate_knobs_never_empty_the_partition():
+    """top_p <= 0 and min_p > 1 must degrade to keeping the top-1 token —
+    the kept partition can never go empty and silently emit token 0."""
+    rng = np.random.RandomState(12)
+    v = 12
+    logits = jnp.asarray((rng.randn(1, v) * 2).astype(np.float32))
+    top = int(jnp.argmax(logits[0]))
+    assert top != 0                      # make token-0 fallout observable
+    for spec in (S.SamplingParams(temperature=0.8, top_p=0.0, seed=0,
+                                  greedy=False),
+                 S.SamplingParams(temperature=0.8, min_p=1.5, seed=0,
+                                  greedy=False)):
+        state = S.lane_state([spec], 1)
+        tok, state = S.sample(logits, state)
+        assert int(tok[0]) == top, (spec, int(tok[0]), top)
+
+
+def test_top_k_threshold_survives_softmax_underflow():
+    """Distinct logits that underflow to equal float32 probs must still cut
+    top-k at the true k-th largest LOGIT (the sort key is the scaled logit,
+    never the collapsed probability)."""
+    scaled = jnp.asarray([[0.0, -300.0, -200.0]], jnp.float32)
+    got = np.asarray(PR.top_k_pred(scaled, jnp.asarray([2], jnp.int32))[0])
+    np.testing.assert_array_equal(got, [True, False, True])
+
+
+def test_default_sampling_decorrelates_requests():
+    """Two identical prompts falling back to the engine default must NOT
+    share a PRNG chain (seed is decorrelated by rid), yet each stream stays
+    reproducible run-to-run."""
+    cfg, _, params = _mk(seed=7)
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=-999,
+                      default_sampling=S.SamplingParams(
+                          temperature=1.0, seed=0, greedy=False))
+    prompt = np.random.RandomState(7).randint(1, 64, 8)
+
+    def serve_two():
+        sched = ContinuousBatchingScheduler(eng, capacity=2, max_len=MAX_LEN,
+                                            chunk=4)
+        r0, r1 = sched.submit(prompt), sched.submit(prompt)
+        res = sched.run()
+        return (np.asarray(res[r0]["tokens"]), np.asarray(res[r1]["tokens"]))
+
+    a0, a1 = serve_two()
+    assert a0.tolist() != a1.tolist()          # decorrelated chains
+    b0, b1 = serve_two()
+    np.testing.assert_array_equal(a0, b0)      # still reproducible
+    np.testing.assert_array_equal(a1, b1)
+    # and the fallback bit-matches the one-shot engine's broadcast path
+    # (fold_in(default key, submission index) on both sides)
+    ref = eng.generate({"tokens": jnp.asarray(np.stack([prompt, prompt]))},
+                       max_len=MAX_LEN)
+    n0, n1 = int(ref["n_generated"][0]), int(ref["n_generated"][1])
+    np.testing.assert_array_equal(a0, np.asarray(ref["tokens"][0, :n0]))
+    np.testing.assert_array_equal(a1, np.asarray(ref["tokens"][1, :n1]))
+
+
+# ---------------------------------------------------------------------------
+# ordered top-p cumsum (fadda_scan)
+# ---------------------------------------------------------------------------
+
+def test_fadda_scan_matches_sequential_loop():
+    rng = np.random.RandomState(3)
+    x = (rng.randn(96) * 0.1).astype(np.float32)
+    got = np.asarray(R.fadda_scan(None, jnp.asarray(x)))
+    acc = np.float32(0.0)
+    for i in range(96):
+        acc = np.float32(acc + x[i])
+        assert got[i] == acc, i          # bit-identical to the scalar loop
+    # predicated: inactive elements contribute nothing
+    p = jnp.asarray(rng.rand(96) < 0.5)
+    gp = np.asarray(R.fadda_scan(p, jnp.asarray(x)))
+    assert gp[-1] == np.asarray(R.fadda(p, jnp.asarray(x)))
+
+
+def test_top_p_cutoff_bit_identical_to_scalar_accumulator():
+    """The nucleus keep-set uses the EXCLUSIVE prefix mass taken directly
+    from the shifted fadda_scan — bit-identical to a float32 scalar
+    accumulation in the same (stable descending) order, never a re-rounded
+    ``csum - p`` reconstruction."""
+    rng = np.random.RandomState(5)
+    for _ in range(25):
+        v = int(rng.randint(4, 64))
+        logits = (rng.randn(v) * 2).astype(np.float32)
+        top_p = float(rng.uniform(0.1, 0.99))
+        got = np.asarray(PR.top_p_pred(jnp.asarray(logits)[None, :],
+                                       jnp.asarray([top_p], jnp.float32))[0])
+        probs = np.asarray(jax.nn.softmax(jnp.asarray(logits)))  # f32, as jax
+        order = np.argsort(-logits, kind="stable")
+        keep = np.zeros((v,), bool)
+        acc = np.float32(0.0)
+        for idx in order:                        # the scalar fadda loop
+            keep[idx] = acc < np.float32(top_p)
+            acc = np.float32(acc + probs[idx])
+        np.testing.assert_array_equal(got, keep, err_msg=str((v, top_p)))
+
+
+def test_fadda_scan_final_equals_fadda():
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(5, 33).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(R.fadda_scan(None, x))[:, -1],
+                                  np.asarray(R.fadda(None, x)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep (optional dep, importorskip per convention)
+# ---------------------------------------------------------------------------
+
+def test_masks_match_numpy_reference_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def run(data):
+        v = data.draw(st.integers(min_value=2, max_value=40))
+        logits = np.asarray(
+            data.draw(st.lists(
+                st.floats(min_value=-6, max_value=6, allow_nan=False,
+                          width=32),
+                min_size=v, max_size=v)), np.float32)
+        k = data.draw(st.integers(min_value=0, max_value=v + 1))
+        p = data.draw(st.floats(min_value=0.05, max_value=0.999, width=32))
+        mp = data.draw(st.floats(min_value=0.0, max_value=0.5, width=32))
+        t = data.draw(st.floats(min_value=0.25, max_value=3.0, width=32))
+        got = _keep_mask_jax(logits, t, k, p, mp)
+        ref = NR.ref_keep_mask(logits, temperature=t, top_k=k, top_p=p,
+                               min_p=mp)
+        if (got != ref).any():
+            # tolerate float32-vs-float64 disagreement only at entries
+            # sitting exactly on a threshold (probability mass within eps
+            # of top_p, prob within eps of the min-p/top-k cut)
+            probs = NR.ref_probs(logits, temperature=t)
+            for idx in np.flatnonzero(got != ref):
+                order = np.argsort(-probs, kind="stable")
+                pos = int(np.flatnonzero(order == idx)[0])
+                excl = float(probs[order[:pos]].sum())
+                near_top_p = abs(excl - p) < 1e-5
+                near_min_p = abs(probs[idx] - mp * probs.max()) < 1e-6
+                x = logits / t if t > 0 else logits
+                kth = np.sort(x)[::-1][min(max(k, 1), v) - 1]
+                near_top_k = abs(x[idx] - kth) < 1e-5
+                assert near_top_p or near_min_p or near_top_k, \
+                    (idx, k, p, mp, t, logits.tolist())
+
+    run()

@@ -1,0 +1,175 @@
+"""Speculative rejection sampling: the committed stream is distributed
+EXACTLY as target-alone sampling (chi-squared-style tolerance on a toy
+vocab), and greedy spec-decode is bit-unchanged by the sampling plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sample as S
+from repro.core import predicate as P
+from repro.models import ModelConfig, get_model
+from repro.serve import speculative_decode
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=64, param_dtype="float32", compute_dtype="float32")
+
+
+def _mk(seed=0, **over):
+    cfg = ModelConfig(name="t", family="dense", **{**BASE, **over})
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# the rejection algebra preserves the target distribution (unit level)
+# ---------------------------------------------------------------------------
+
+def _committed_first_token(draft, q, p, acc, fix):
+    """Token the stream commits at window position 0: the draft token when
+    position 0 was accepted, else the fix."""
+    acc0 = np.asarray(acc)[:, 0]
+    return np.where(acc0, np.asarray(draft)[:, 0], np.asarray(fix))
+
+
+def test_rejection_first_token_marginal_matches_target():
+    """Many i.i.d. lanes, fixed q != p: the marginal of the first committed
+    token must be p (the losslessness theorem), checked with a chi-squared
+    statistic on a toy vocab."""
+    v, k, b = 6, 2, 20000
+    rng = np.random.RandomState(0)
+    q_row = rng.dirichlet(np.ones(v)).astype(np.float32)
+    p_row = rng.dirichlet(np.ones(v)).astype(np.float32)
+    q = jnp.broadcast_to(jnp.asarray(q_row), (b, k, v))
+    p = jnp.broadcast_to(jnp.asarray(p_row), (b, k + 1, v))
+
+    # draft proposals drawn from q with independent per-lane keys
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    gk = jax.vmap(lambda kk: jax.random.gumbel(kk, (k, v)))(keys)
+    draft = jnp.argmax(jnp.log(q) + gk, axis=-1).astype(jnp.int32)
+
+    round_key = jax.vmap(jax.random.PRNGKey)(jnp.arange(b) + 10_000_000)
+    tgt_greedy = jnp.zeros((b, k + 1), jnp.int32)      # unused: no greedy lane
+    acc, fix = S.speculative_accept(draft, q, p, tgt_greedy,
+                                    jnp.zeros((b,), bool), round_key)
+    tok = _committed_first_token(draft, q, p, acc, fix)
+
+    counts = np.bincount(tok, minlength=v).astype(np.float64)
+    expected = p_row.astype(np.float64) * b
+    chi2 = ((counts - expected) ** 2 / np.maximum(expected, 1e-9)).sum()
+    # chi-squared with v-1 = 5 dof: mean 5, std ~3.2; 30 is a ~7.8-sigma
+    # guard band — fails only on a real distribution bug (test is seeded)
+    assert chi2 < 30.0, (chi2, counts / b, p_row)
+    # and NOT the proposal distribution (sanity that the test can fail)
+    chi2_q = ((counts - q_row * b) ** 2 / np.maximum(q_row * b, 1e-9)).sum()
+    assert chi2_q > 100.0
+
+
+def test_rejection_identity_distributions_always_accept():
+    """q == p => the acceptance ratio is identically 1: the FFR partition
+    never faults (zero wasted speculation against a perfect draft)."""
+    v, k, b = 8, 3, 256
+    rng = np.random.RandomState(1)
+    dist = rng.dirichlet(np.ones(v)).astype(np.float32)
+    q = jnp.broadcast_to(jnp.asarray(dist), (b, k, v))
+    p = jnp.broadcast_to(jnp.asarray(dist), (b, k + 1, v))
+    draft = jnp.asarray(rng.randint(0, v, (b, k)), jnp.int32)
+    round_key = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    acc, fix = S.speculative_accept(draft, q, p, jnp.zeros((b, k + 1),
+                                                           jnp.int32),
+                                    jnp.zeros((b,), bool), round_key)
+    assert bool(jnp.all(acc))
+    # bonus draw comes from p (position K residual is p itself)
+    assert np.asarray(fix).min() >= 0 and np.asarray(fix).max() < v
+
+
+def test_residual_dist_normalises_and_falls_back():
+    p = jnp.asarray([[0.5, 0.3, 0.2]], jnp.float32)
+    q = jnp.asarray([[0.2, 0.5, 0.3]], jnp.float32)
+    r = np.asarray(S.residual_dist(p, q))
+    want = np.maximum(np.asarray(p) - np.asarray(q), 0)
+    want = want / want.sum()
+    np.testing.assert_allclose(r, want, rtol=1e-6)
+    # p == q: residual has no mass, falls back to p
+    np.testing.assert_allclose(np.asarray(S.residual_dist(p, p)),
+                               np.asarray(p), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end speculative decoding under sampling
+# ---------------------------------------------------------------------------
+
+def test_greedy_spec_decode_unchanged_by_sampling_plumbing():
+    """sampling=None and sampling=all-greedy commit identical streams (and
+    the None path is the pre-sampling code path, so both equal the old
+    engine's output — asserted against target-alone greedy elsewhere)."""
+    tcfg, _, tparams = _mk(seed=2)
+    dcfg, _, _ = _mk(seed=0, n_layers=1, d_model=32, d_ff=64,
+                     n_heads=2, n_kv_heads=1)
+    dparams = get_model(dcfg).init(jax.random.PRNGKey(3), dcfg)[0]
+    prompts = jnp.asarray(np.random.RandomState(2).randint(1, 64, (3, 8)))
+    a, astats = speculative_decode(tcfg, tparams, dcfg, dparams, prompts,
+                                   n_tokens=8, k_draft=3)
+    g, gstats = speculative_decode(tcfg, tparams, dcfg, dparams, prompts,
+                                   n_tokens=8, k_draft=3,
+                                   sampling=[S.SamplingParams(greedy=True,
+                                                              seed=i)
+                                             for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(astats["n_generated"]),
+                                  np.asarray(gstats["n_generated"]))
+
+
+def test_sampled_spec_decode_deterministic_and_perfect_draft_accepts_all():
+    """draft == target under temperature sampling: q == p per position, so
+    rejection never fires (mean accepted == k) and the stream is
+    seed-reproducible."""
+    tcfg, _, tparams = _mk(seed=4)
+    prompts = jnp.asarray(np.random.RandomState(4).randint(1, 64, (2, 6)))
+    spec = [S.SamplingParams(temperature=0.9, top_p=0.95, seed=21 + i,
+                             greedy=False) for i in range(2)]
+    a, astats = speculative_decode(tcfg, tparams, tcfg, tparams, prompts,
+                                   n_tokens=6, k_draft=2, sampling=spec)
+    b_, _ = speculative_decode(tcfg, tparams, tcfg, tparams, prompts,
+                               n_tokens=6, k_draft=2, sampling=spec)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    assert astats["mean_accepted"] == pytest.approx(2.0)
+
+
+def test_mixed_greedy_and_sampled_lanes_spec_decode():
+    """Greedy lanes keep the exact-match algebra while stochastic lanes use
+    rejection — in one batched call; the greedy lane's stream equals its
+    sampling=None stream."""
+    tcfg, _, tparams = _mk(seed=5)
+    dcfg, _, _ = _mk(seed=1, n_layers=1, d_model=32, d_ff=64,
+                     n_heads=2, n_kv_heads=1)
+    dparams = get_model(dcfg).init(jax.random.PRNGKey(6), dcfg)[0]
+    prompts = jnp.asarray(np.random.RandomState(5).randint(1, 64, (2, 7)))
+    ref, _ = speculative_decode(tcfg, tparams, dcfg, dparams, prompts,
+                                n_tokens=7, k_draft=2)
+    mix, _ = speculative_decode(
+        tcfg, tparams, dcfg, dparams, prompts, n_tokens=7, k_draft=2,
+        sampling=[S.SamplingParams(greedy=True),
+                  S.SamplingParams(temperature=1.0, seed=9, greedy=False)])
+    np.testing.assert_array_equal(np.asarray(mix[0]), np.asarray(ref[0]))
+
+
+def test_accept_prefix_is_monotone_under_rejection_bits():
+    """The acceptance predicate is still a brkb partition: nothing after the
+    first rejection is accepted."""
+    v, k, b = 4, 4, 512
+    rng = np.random.RandomState(7)
+    q = jax.nn.softmax(jnp.asarray(rng.randn(b, k, v), jnp.float32), -1)
+    p = jax.nn.softmax(jnp.asarray(rng.randn(b, k + 1, v), jnp.float32), -1)
+    draft = jnp.asarray(rng.randint(0, v, (b, k)), jnp.int32)
+    round_key = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    acc, _ = S.speculative_accept(draft, q, p, jnp.zeros((b, k + 1),
+                                                         jnp.int32),
+                                  jnp.zeros((b,), bool), round_key)
+    accn = np.asarray(acc)
+    n_acc = np.asarray(P.cntp(jnp.asarray(accn)))
+    for i in range(b):
+        np.testing.assert_array_equal(accn[i, :n_acc[i]], True)
+        np.testing.assert_array_equal(accn[i, n_acc[i]:], False)
