@@ -130,7 +130,10 @@ def flash_attention_pallas_paged(
     """q: (B, Hq, Sq, D) with Sq % bq == 0; k_pool/v_pool: (P, Hkv, ps, D);
     page_table: (B, n_pages) int32.  The KV grid axis walks LOGICAL pages;
     the BlockSpec index_map reads the prefetched page table to pick the
-    PHYSICAL page, so block (b, j) fetches ``pool[table[b, j]]``."""
+    PHYSICAL page, so block (b, j) fetches ``pool[table[b, j]]``.  The table
+    arrives with out-of-strip (possibly stale) entries already clamped under
+    the page-granular whilelt (ops._flash_paged), so the index_map never
+    chases a freed id; the in-kernel predicate masks those blocks anyway."""
     bsz, hq, sq, d = q.shape
     hkv, ps = k_pool.shape[1], k_pool.shape[2]
     n_pages = page_table.shape[1]

@@ -112,6 +112,12 @@ def _flash_paged(q, k_pool, v_pool, page_table, *, kv_lens, causal, window,
     else:
         q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
     page_table = jnp.asarray(page_table, jnp.int32)
+    # govern the table walk with the page-granular whilelt ONCE, for every
+    # impl: out-of-strip entries may be stale (freed and reallocated ids),
+    # so clamp them to page 0 before any gather / index_map chases them —
+    # their contribution is masked by the element predicate regardless
+    page_table = jnp.where(_paging.page_whilelt(kv_lens, n_pages, ps),
+                           page_table, 0)
 
     if impl == "naive":
         # quadratic oracle over the gathered dense view (tests only)

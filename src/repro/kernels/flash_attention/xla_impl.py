@@ -204,10 +204,11 @@ def flash_attention_xla_paged(q, k_pool, v_pool, page_table, kv_lens,
     physical placement (allocation order, prefix-shared pages, reuse).  The
     online-softmax math is identical to the dense path with ``bk ==
     page_size``; logical positions come from the page index, so masks are
-    unchanged.  Serving/decode only — no VJP.
+    unchanged.  Serving/decode only — no VJP.  ``page_table`` arrives with
+    out-of-strip (possibly stale) entries already clamped to page 0 under the
+    page-granular whilelt — ops._flash_paged governs the walk once for every
+    impl.
     """
-    from repro.core.paging import page_whilelt
-
     b, h, sq, d = q.shape
     hkv, ps = k_pool.shape[1], k_pool.shape[2]
     n_pg = page_table.shape[1]
@@ -215,10 +216,7 @@ def flash_attention_xla_paged(q, k_pool, v_pool, page_table, kv_lens,
     f32 = jnp.float32
     nq = sq // bq
     qs = _split_q(q.astype(f32), bq).reshape(nq, b, hkv, g, bq, d)
-    # out-of-strip table entries may be stale: clamp them to page 0 under the
-    # page-granular whilelt so the gather never chases a freed id (the element
-    # predicate below masks their contribution anyway)
-    table = jnp.where(page_whilelt(kv_lens, n_pg, ps), page_table, 0)
+    table = page_table
 
     def q_block(_, xs):
         qb, iq = xs

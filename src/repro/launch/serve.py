@@ -41,6 +41,16 @@ def main():
                          "footprint, capacity * pages-per-lane)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable prompt-prefix page sharing under --page-size")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split admission prefill into chunks of this many "
+                         "tokens interleaved with decode rounds (long "
+                         "prompts stop stalling resident lanes; dense/moe "
+                         "families)")
+    ap.add_argument("--paged-attn", choices=["native", "gather"],
+                    default="native",
+                    help="paged decode path: 'native' reads K/V through the "
+                         "page table inside flash attention; 'gather' is the "
+                         "reference oracle (dense view materialized per step)")
     ap.add_argument("--static", action="store_true",
                     help="one-shot ServeEngine.generate instead of scheduler")
     ap.add_argument("--temperature", type=float, default=None,
@@ -97,7 +107,8 @@ def main():
             .astype(np.float32))
         batch["src_lens"] = jnp.full((args.batch,), args.prompt_len, jnp.int32)
 
-    eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7)
+    eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7,
+                      paged_attn=args.paged_attn)
     if args.static or cfg.family == "encdec" or cfg.cross_attn_group:
         # modality extras are per-batch, not yet per-request: static path
         res = eng.generate(batch, sampling=[_sampling(i)
@@ -114,7 +125,8 @@ def main():
         eng, capacity=args.batch, max_len=max_len, chunk=args.chunk,
         compact_threshold=args.compact_threshold, page_size=args.page_size,
         pool_pages=args.pool_pages,
-        prefix_sharing=not args.no_prefix_sharing)
+        prefix_sharing=not args.no_prefix_sharing,
+        prefill_chunk=args.prefill_chunk)
     rid_len = {}
     for i in range(args.requests):
         plen = int(rng.randint(4, args.prompt_len + 1))
@@ -129,7 +141,9 @@ def main():
     occ = sched.stats["occupancy_trace"]
     print(f"[scheduler] rounds={sched.stats['steps']} "
           f"compactions={sched.stats['compactions']} "
-          f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}")
+          f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}"
+          + (f"  prefill chunks={sched.stats['prefill_chunks']}"
+             if args.prefill_chunk else ""))
     if args.page_size is not None:
         pocc = sched.stats["page_occupancy_trace"]
         print(f"[paged] pool={sched.pool_pages} pages "

@@ -114,6 +114,69 @@ def is_paged(cache) -> bool:
     return isinstance(cache, dict) and "page_table" in cache
 
 
+def paged_decode_ok(cfg) -> bool:
+    """True when cfg's family decode() consumes a paged cache NATIVELY:
+    flash attention reads K/V through the page table and each layer
+    scatter-stores its new token straight into the lane's tail page — no
+    dense-view materialization on the decode hot path."""
+    fn = getattr(get_model(cfg), "paged_decode_ok", None)
+    return bool(fn and fn(cfg))
+
+
+def chunked_prefill_ok(cfg) -> bool:
+    """True when cfg's family prefill() supports per-row ``pos0`` start
+    offsets with all cross-chunk state living in the KV cache — the property
+    that makes splitting one prompt's prefill into chunks bit-identical to
+    prefilling it whole (ssm/hybrid carry conv/SSM state outside the
+    positional cache; encdec recomputes cross K/V per prefill call)."""
+    return bool(getattr(get_model(cfg), "CHUNKED_PREFILL_OK", False))
+
+
+def to_paged(cfg, cache, *, page_size: int, pool_pages=None):
+    """Convert a DENSE cache to the paged layout with identity page tables
+    (lane b's logical block j lives in physical page ``b * n_pages + j``).
+
+    The inverse of ``paged_view`` up to pool padding: gathering the result
+    reproduces the dense cache bit-exactly.  Used by the one-shot engine to
+    serve families the scheduler does not manage (encdec, vlm) through the
+    native paged decode path, and by tests to build paged caches without a
+    scheduler.  Token axes are zero-padded up to a page multiple.
+    """
+    spec = get_model(cfg).paged_cache_spec(cfg)
+    if not spec:
+        raise ValueError(f"family '{cfg.family}' has no pageable KV state")
+    key0, lead0 = next(iter(spec.items()))
+    b = cache[key0].shape[len(lead0)]
+    max_len = cache[key0].shape[len(lead0) + 2]
+    n_pages = PG.pages_needed(max_len, page_size)
+    need = b * n_pages
+    pool_pages = need if pool_pages is None else pool_pages
+    if pool_pages < need:
+        raise ValueError(f"pool_pages={pool_pages} < {need} needed for the "
+                         f"identity layout ({b} lanes x {n_pages} pages)")
+    out = {k: v for k, v in cache.items() if k not in spec}
+    for key, lead in spec.items():
+        nl = len(lead)
+        v = cache[key]                               # lead+(B,Hkv,S,D)
+        pad = n_pages * page_size - v.shape[nl + 2]
+        if pad:
+            widths = [(0, 0)] * v.ndim
+            widths[nl + 2] = (0, pad)
+            v = jnp.pad(v, widths)
+        hkv, d = v.shape[nl + 1], v.shape[nl + 3]
+        v = v.reshape(v.shape[:nl] + (b, hkv, n_pages, page_size, d))
+        v = jnp.moveaxis(v, nl + 2, nl + 1)          # lead+(B,n,Hkv,ps,D)
+        v = v.reshape(v.shape[:nl] + (need, hkv, page_size, d))
+        if pool_pages > need:
+            widths = [(0, 0)] * v.ndim
+            widths[nl] = (0, pool_pages - need)
+            v = jnp.pad(v, widths)
+        out[key + "_pages"] = v
+    out["page_table"] = (jnp.arange(b, dtype=jnp.int32)[:, None] * n_pages
+                         + jnp.arange(n_pages, dtype=jnp.int32)[None, :])
+    return out
+
+
 def paged_view(cfg, cache):
     """Materialize the dense logical view of a paged cache through the page
     table (SVE gather-load).  Non-paged per-lane entries pass through."""

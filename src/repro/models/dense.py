@@ -166,11 +166,16 @@ def cache_batch_axes(cfg):
 # full prefix state lives in paged KV + pos, so prefix sharing is sound
 PAGED_PREFIX_OK = True
 
+# prefill() takes per-row pos0 start offsets with all state in the KV cache,
+# so one prompt's prefill can be split into chunks (scheduler chunked prefill)
+CHUNKED_PREFILL_OK = True
+
 
 def paged_decode_ok(cfg):
     """decode() accepts a paged cache directly (flash attention reads K/V
-    through the page table instead of a gathered dense view)."""
-    return not cfg.cross_attn_group
+    through the page table instead of a gathered dense view).  Holds for the
+    vlm variant too: self-attention K/V pages, cross K/V stays per-lane."""
+    return True
 
 
 def paged_cache_spec(cfg):
@@ -309,25 +314,33 @@ def decode(params, cfg, batch, cache):
         pre = g - 2
         n_groups = cfg.n_layers // g
         h = x
-        new_k, new_v = [], []
+        paged = "k_pages" in cache
+        if paged:
+            # native paged vlm decode: self-attention K/V lives in page pools
+            # (lead (n_groups, n_self)); cross K/V stays a per-lane constant
+            kc, vc = cache["k_pages"], cache["v_pages"]
+            table = cache["page_table"]
+        else:
+            kc, vc = cache["k"], cache["v"]
         for gi in range(n_groups):
             gp = jax.tree.map(lambda a, gi=gi: a[gi], params["groups"])
-            ks, vs = [], []
             for si in range(g - 1):
                 if si == pre:                       # cross before self slot `pre`
                     h = _cross_decode(gp["cross"], h, positions, cfg,
                                       cache["cross_k"][gi], cache["cross_v"][gi])
                 lp = jax.tree.map(lambda a, si=si: a[si], gp["self"])
+                layer_cache = ((kc[gi, si], vc[gi, si], table) if paged
+                               else (kc[gi, si], vc[gi, si]))
                 h, (kn, vn) = L.block_apply(
                     lp, h, positions, cfg, causal=False, kv_lens=pos + 1,
-                    q_offset=pos, cache=(cache["k"][gi, si], cache["v"][gi, si]),
-                    cache_pos=pos)
-                ks.append(kn)
-                vs.append(vn)
-            new_k.append(jnp.stack(ks))
-            new_v.append(jnp.stack(vs))
+                    q_offset=pos, cache=layer_cache, cache_pos=pos)
+                kc = kc.at[gi, si].set(kn)
+                vc = vc.at[gi, si].set(vn)
         cache = dict(cache)
-        cache["k"], cache["v"] = jnp.stack(new_k), jnp.stack(new_v)
+        if paged:
+            cache["k_pages"], cache["v_pages"] = kc, vc
+        else:
+            cache["k"], cache["v"] = kc, vc
     elif "k_pages" in cache:
         # native paged decode: each layer's attention scatter-stores the new
         # token into its page and gathers K/V blocks through the page table

@@ -140,6 +140,16 @@ def cache_batch_axes(cfg):
 # prefix does not imply shared decoder state
 PAGED_PREFIX_OK = False
 
+# prefill() re-encodes the source and recomputes cross K/V every call; a
+# chunked prompt would re-pay (and re-write) the encoder per chunk
+CHUNKED_PREFILL_OK = False
+
+
+def paged_decode_ok(cfg):
+    """decode() reads decoder self-attention K/V through the page table;
+    cross K/V is a per-request constant and stays per-lane dense."""
+    return True
+
 
 def paged_cache_spec(cfg):
     """Only decoder self-attention K/V grows with the target length; cross
@@ -206,11 +216,41 @@ def prefill(params, cfg, batch, cache):
     return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
 
 
+def _decode_paged(params, cfg, x, positions, cache):
+    """Native paged decode: each decoder layer's self-attention gathers K/V
+    pages through the table and scatter-stores the new token into the lane's
+    tail page; cross-attention reads the per-lane dense cross cache.  Layers
+    unrolled so the per-layer pool write aliases in place."""
+    pos = cache["pos"]
+    table = cache["page_table"]
+    cache = dict(cache)
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    h = x
+    for li in range(cfg.n_dec_layers):
+        lp = jax.tree.map(lambda a, li=li: a[li], params["dec_blocks"])
+        h, (kl, vl) = _dec_block_apply(
+            lp, h, positions, cfg, None, src_lens=cache["src_lens"],
+            kv_lens=pos + 1, q_offset=pos, cache=(kp[li], vp[li], table),
+            cache_pos=pos,
+            cross_cache=(cache["cross_k"][li], cache["cross_v"][li]),
+            causal=False)
+        kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
+        vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+    cache["k_pages"], cache["v_pages"] = kp, vp
+    return h, cache
+
+
 def decode(params, cfg, batch, cache):
     token = batch["token"]
     pos = cache["pos"]
     positions = pos[:, None]
     x = L.embed(params["embed"], token, cfg)
+
+    if "k_pages" in cache:
+        h, cache = _decode_paged(params, cfg, x, positions, cache)
+        cache["pos"] = pos + 1
+        h = L.apply_norm(params["final_norm"], h, cfg)
+        return L.unembed(params["embed"], h, cfg)[:, 0], cache
 
     def body(carry, xs):
         h, = carry

@@ -102,6 +102,16 @@ def cache_batch_axes(cfg):
 # resident pages — prefix sharing would silently drop the SSM carry
 PAGED_PREFIX_OK = False
 
+# chunked prefill would need mamba_block to resume from a cached SSM state;
+# prefill() always scans a prompt from the zero state
+CHUNKED_PREFILL_OK = False
+
+
+def paged_decode_ok(cfg):
+    """decode() reads the shared attention block's K/V through the page
+    table; conv/SSM state stays per-lane dense (it is O(1) in seq length)."""
+    return True
+
 
 def paged_cache_spec(cfg):
     """Only the shared attention block's K/V grows with sequence length; the
@@ -193,14 +203,59 @@ def prefill(params, cfg, batch, cache):
     return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
 
 
+def _decode_paged(params, cfg, x, positions, cache):
+    """Native paged decode: the shared block's attention gathers K/V pages
+    through the table and scatter-stores the new token into the lane's tail
+    page; the mamba stacks run their usual per-lane O(1) state updates.
+    Groups are unrolled so the per-group pool write aliases in place."""
+    pos = cache["pos"]
+    table = cache["page_table"]
+    shared = params["shared"]
+    cache = dict(cache)
+    h = x
+    conv, state = cache["conv"], cache["state"]
+    skp, svp = cache["shared_k_pages"], cache["shared_v_pages"]
+    n_groups = skp.shape[0]
+
+    def mamba_body(carry, xs):
+        h2, = carry
+        lp, cc, st = xs
+        h2, (cc, st) = S.mamba_block_decode(lp, h2, cfg, cc, st)
+        return (h2,), (cc, st)
+
+    for gi in range(n_groups):
+        gp = jax.tree.map(lambda a, gi=gi: a[gi], params["main"])
+        (h,), (cg, sg) = jax.lax.scan(mamba_body, (h,),
+                                      (gp, conv[gi], state[gi]))
+        conv = conv.at[gi].set(cg)
+        state = state.at[gi].set(sg)
+        h, (skl, svl) = L.block_apply(
+            shared, h, positions, cfg, causal=False, kv_lens=pos + 1,
+            q_offset=pos, cache=(skp[gi], svp[gi], table), cache_pos=pos)
+        skp = skp.at[gi].set(skl)
+        svp = svp.at[gi].set(svl)
+    cache["conv"], cache["state"] = conv, state
+    cache["shared_k_pages"], cache["shared_v_pages"] = skp, svp
+
+    if "tail" in params:
+        (h,), (tc, ts) = jax.lax.scan(
+            mamba_body, (h,), (params["tail"], cache["tail_conv"],
+                               cache["tail_state"]))
+        cache["tail_conv"], cache["tail_state"] = tc, ts
+    return h, cache
+
+
 def decode(params, cfg, batch, cache):
     token = batch["token"]
     pos = cache["pos"]
     positions = pos[:, None]
     x = L.embed(params["embed"], token, cfg)
-    h, cache = _groups_cached(params, cfg, x, positions, cache, lens=None,
-                              q_offset=pos, cache_pos=pos, causal=False,
-                              decode_step=True)
+    if "shared_k_pages" in cache:
+        h, cache = _decode_paged(params, cfg, x, positions, cache)
+    else:
+        h, cache = _groups_cached(params, cfg, x, positions, cache, lens=None,
+                                  q_offset=pos, cache_pos=pos, causal=False,
+                                  decode_step=True)
     cache["pos"] = pos + 1
     h = L.apply_norm(params["final_norm"], h, cfg)
     return L.unembed(params["embed"], h, cfg)[:, 0], cache

@@ -216,6 +216,18 @@ def cache_batch_axes(cfg):
 # sound (the view reproduces whatever was cached).
 PAGED_PREFIX_OK = False
 
+# prefill() takes per-row pos0 offsets with all cross-chunk state in the KV
+# cache; chunked prefill of ONE prompt matches whole prefill token-for-token
+# whenever expert capacity does not drop (dispatch groups see different
+# co-tokens per chunk, but slot values are per-token when nothing drops)
+CHUNKED_PREFILL_OK = True
+
+
+def paged_decode_ok(cfg):
+    """decode() reads every layer stack's K/V through the page table (the
+    dense first-k stack and the MoE stack share one page id space)."""
+    return True
+
 
 def paged_cache_spec(cfg):
     """Every KV tensor pages; one page id spans dense AND MoE layer stacks."""
@@ -286,14 +298,49 @@ def prefill(params, cfg, batch, cache):
     return L.unembed(params["embed"], h_last[:, None], cfg)[:, 0], cache
 
 
+def _decode_paged(params, cfg, x, positions, cache):
+    """Native paged decode: each layer's attention gathers K/V pages through
+    the table and scatter-stores the new token into the lane's tail page —
+    no dense-view materialization (SVE §2.3.3 on the hot path).  Layers are
+    unrolled so the per-layer ``dynamic_update_slice`` on the stacked pools
+    aliases in place (no scan-ys double buffer)."""
+    pos = cache["pos"]
+    table = cache["page_table"]
+    cache = dict(cache)
+    h = x
+    if cfg.first_k_dense:
+        kp, vp = cache["dense_k_pages"], cache["dense_v_pages"]
+        for li in range(cfg.first_k_dense):
+            lp = jax.tree.map(lambda a, li=li: a[li], params["dense_blocks"])
+            h, (kl, vl) = L.block_apply(
+                lp, h, positions, cfg, causal=False, kv_lens=pos + 1,
+                q_offset=pos, cache=(kp[li], vp[li], table), cache_pos=pos)
+            kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
+            vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+        cache["dense_k_pages"], cache["dense_v_pages"] = kp, vp
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    for li in range(cfg.n_layers - cfg.first_k_dense):
+        lp = jax.tree.map(lambda a, li=li: a[li], params["blocks"])
+        h, _, (kl, vl) = _moe_block_apply(
+            lp, h, positions, cfg, kv_lens=pos + 1, q_offset=pos,
+            cache=(kp[li], vp[li], table), cache_pos=pos, causal=False)
+        kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
+        vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+    cache["k_pages"], cache["v_pages"] = kp, vp
+    return h, cache
+
+
 def decode(params, cfg, batch, cache):
     token = batch["token"]
     pos = cache["pos"]
     positions = pos[:, None]
     x = L.embed(params["embed"], token, cfg)
-    h, cache = _run_cached(params, cfg, x, positions, kv_lens=pos + 1,
-                           q_offset=pos, cache=cache, cache_pos=pos,
-                           causal=False)
+    if "k_pages" in cache:
+        h, cache = _decode_paged(params, cfg, x, positions, cache)
+    else:
+        h, cache = _run_cached(params, cfg, x, positions, kv_lens=pos + 1,
+                               q_offset=pos, cache=cache, cache_pos=pos,
+                               causal=False)
     cache["pos"] = pos + 1
     h = L.apply_norm(params["final_norm"], h, cfg)
     return L.unembed(params["embed"], h, cfg)[:, 0], cache

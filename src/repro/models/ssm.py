@@ -197,6 +197,11 @@ def cache_batch_axes(cfg):
     return {"conv": 1, "state": 1, "pos": 0}
 
 
+# prefill() always scans a prompt from the zero SSM state; chunking would
+# need the scan to resume from the cached carry
+CHUNKED_PREFILL_OK = False
+
+
 def paged_cache_spec(cfg):
     """SSM caches are length-independent — nothing to page (the degenerate
     case of the paged layout: zero pools, every lane's state is O(1))."""

@@ -26,6 +26,7 @@ function of (seed, prompt, params) only, never of batch composition.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -33,7 +34,8 @@ import jax.numpy as jnp
 
 from repro import sample as S
 from repro.core import predicate as P
-from repro.models import get_model, is_paged, paged_view, paged_writeback
+from repro.models import (get_model, is_paged, paged_decode_ok, paged_view,
+                          paged_writeback, to_paged)
 from repro.sample.processors import ban_pred, mask_logits
 
 
@@ -49,13 +51,20 @@ class ServeEngine:
     # constrained decoding: token ids masked out of EVERY lane's vocab
     # partition (greedy lanes included) before sampling
     banned_tokens: Optional[Sequence[int]] = None
-    # paged decode: "gather" materializes the dense view through the page
-    # table before the (unchanged) model decode — bitwise identical to the
-    # dense cache by construction; "kernel" lets families that support it
-    # read K/V directly through the table inside flash attention.
-    paged_attn: str = "gather"
+    # paged decode: "native" (the default; "kernel" is a legacy alias) reads
+    # K/V directly through the page table inside flash attention and
+    # scatter-stores each new token into the lane's tail page — no dense-view
+    # materialization on the decode hot path.  "gather" is the reference
+    # oracle: materialize the dense view through the table, run the unchanged
+    # family decode, scatter the one new token back (bitwise identical to the
+    # dense cache BY CONSTRUCTION; tests pin the native path against it).
+    paged_attn: str = "native"
 
     def __post_init__(self):
+        if self.paged_attn not in ("native", "kernel", "gather"):
+            raise ValueError(
+                f"paged_attn must be 'native' ('kernel' alias) or 'gather', "
+                f"got {self.paged_attn!r}")
         self.model = get_model(self.cfg)
         # logits run over the PADDED vocab (the model already predicates the
         # pad lanes to -1e30, so leaving them "allowed" here is inert)
@@ -72,6 +81,7 @@ class ServeEngine:
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
                                      static_argnames=("n_steps", "stochastic"),
                                      donate_argnums=donate)
+        self._warned_gather_fallback = False
 
     def _sample(self, logits, sstate=None, out_buf=None, n_gen=None):
         """Sample one token per lane through ``repro.sample`` (the single
@@ -153,18 +163,28 @@ class ServeEngine:
     def _cached_decode(self, params, batch, cache):
         """One decode step against a dense OR paged cache.
 
-        Paged "gather": gather-load the dense view through the page table,
-        run the family's unchanged decode, scatter-store the new token back
-        to its page — bitwise equal to the dense engine because the view IS
-        the dense cache.  Paged "kernel": the family's decode reads K/V
-        through the table inside flash attention (no view materialization).
-        All of it traces into the jitted decode loop.
+        Paged "native" (default; "kernel" accepted as a legacy alias): the
+        family's decode reads K/V through the page table inside flash
+        attention and scatter-stores its new token straight into the lane's
+        tail page — no dense-view materialization on the hot path.  Paged
+        "gather" (the reference oracle): gather-load the dense view through
+        the table, run the family's unchanged decode, scatter-store the new
+        token back — bitwise equal to the dense engine because the view IS
+        the dense cache.  All of it traces into the jitted decode loop.
         """
         if not is_paged(cache):
             return self.model.decode(params, self.cfg, batch, cache)
-        paged_ok = getattr(self.model, "paged_decode_ok", None)
-        if self.paged_attn == "kernel" and paged_ok and paged_ok(self.cfg):
-            return self.model.decode(params, self.cfg, batch, cache)
+        if self.paged_attn != "gather":
+            if paged_decode_ok(self.cfg):
+                return self.model.decode(params, self.cfg, batch, cache)
+            if not self._warned_gather_fallback:
+                # trace-time emission: fires once per engine, not per step
+                warnings.warn(
+                    f"family '{self.cfg.family}' has no native paged decode; "
+                    "falling back to the gather bridge (dense view "
+                    "materialized through the page table every step)",
+                    RuntimeWarning, stacklevel=2)
+                self._warned_gather_fallback = True
         view = paged_view(self.cfg, cache)
         pos = view["pos"]
         logits, view = self.model.decode(params, self.cfg, batch, view)
@@ -195,14 +215,20 @@ class ServeEngine:
         return self.model.make_cache(self.cfg, b, max_len)
 
     def generate(self, batch, *, max_len: Optional[int] = None,
-                 sampling=None):
+                 sampling=None, page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None):
         """batch: {"tokens": (B, S) prompts, "lens": (B,)} (+ modality extras).
 
         ``sampling`` is None (engine default / greedy), one ``SamplingParams``
         broadcast over lanes, a per-lane sequence of them, or a pre-built
-        lane state dict.  Returns dict with tokens (B, max_new), n_generated
-        (B,), and the final active partition (all-False when every lane
-        exited).
+        lane state dict.  With ``page_size`` set the prefilled cache is
+        converted to the PAGED layout (identity page tables) before the
+        decode loop runs — the one-shot road into native paged decode for
+        families the scheduler does not manage (encdec, vlm); the prefill
+        itself stays dense, so this is a decode-path bridge, not a
+        memory-saving admission path.  Returns dict with tokens (B, max_new),
+        n_generated (B,), and the final active partition (all-False when
+        every lane exited).
         """
         tokens = batch["tokens"]
         b, s = tokens.shape
@@ -212,6 +238,9 @@ class ServeEngine:
         sstate = self.make_state(b, sampling)
 
         logits, cache = self._prefill(self.params, dict(batch, lens=lens), cache)
+        if page_size is not None:
+            cache = to_paged(self.cfg, cache, page_size=page_size,
+                             pool_pages=pool_pages)
         # all-greedy batches skip the stochastic pipeline here too (keys of
         # greedy lanes are never read, so not splitting them is inert)
         if S.is_all_greedy(sstate):

@@ -41,7 +41,7 @@ import numpy as np
 from repro import sample as S
 from repro.core import paging as PG
 from repro.core import partition as PT
-from repro.models import gather_lanes, get_model, slot_update
+from repro.models import chunked_prefill_ok, gather_lanes, get_model, slot_update
 
 from .engine import ServeEngine
 
@@ -160,6 +160,23 @@ class _PagePlan:
 
 
 @dataclasses.dataclass
+class _Partial:
+    """A request whose admission prefill is being run in CHUNKS interleaved
+    with decode rounds (chunked prefill).  It owns a reserved lane (marked
+    pending: excluded from decode, harvest and admission) and — under paging
+    — its full page reservation; the dense prefill sub-cache accumulates
+    K/V chunk by chunk until the final chunk's logits seed decode and the
+    whole state splices into the lane."""
+    req: Request
+    plan: Optional[_PagePlan]           # page reservation (None = dense cache)
+    lane: int
+    sub_cache: dict                     # 1-lane dense cache being chunk-filled
+    done: int                           # suffix tokens prefilled so far
+    pos0: int                           # prefix-shared start offset
+    budget: int
+
+
+@dataclasses.dataclass
 class Request:
     """One generation request.  ``arrival`` is in scheduler decode-step units
     (0 = available immediately); the scheduler never admits a request before
@@ -194,22 +211,47 @@ class ContinuousBatchingScheduler:
     prefix_sharing: admit a request whose prompt prefix is already resident
         by bumping page refcounts and prefilling only the suffix (families
         whose full prefix state lives in paged KV only).
+    prefill_chunk: split admission prefill into chunks of at most this many
+        tokens, interleaved with decode rounds — a long prompt no longer
+        freezes resident lanes for its whole prefill.  The chunked request
+        holds a reserved lane (and, under paging, its full page reservation)
+        while its K/V accumulates.  For dense-family models tokens are
+        identical to whole-prompt prefill unconditionally (``pos0``
+        suffix-prefill numerics depend only on absolute positions and the
+        cache extent); for MoE the identity additionally requires that
+        expert capacity never drops — per-chunk dispatch groups see
+        different co-tokens, the same batch-composition sensitivity ALL MoE
+        admission batching has (size ``capacity_factor`` accordingly).
+        Families must declare ``CHUNKED_PREFILL_OK`` (dense/moe; ssm+hybrid
+        carry scan state outside the positional cache).  None = whole-prompt
+        prefill.
     """
 
     def __init__(self, engine: ServeEngine, *, capacity: int, max_len: int,
                  chunk: int = 8, compact_threshold: float = 0.5,
                  page_size: Optional[int] = None,
                  pool_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 prefill_chunk: Optional[int] = None):
         if engine.cfg.family == "encdec":
             raise NotImplementedError(
                 "encdec caches need src_emb/src_len at allocation time; "
                 "serve encdec batches via ServeEngine.generate instead")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            if not chunked_prefill_ok(engine.cfg):
+                raise ValueError(
+                    f"family '{engine.cfg.family}' does not support chunked "
+                    "prefill (needs pos0 suffix-prefill with all cross-chunk "
+                    "state in the KV cache)")
         self.engine = engine
         self.capacity = capacity
         self.chunk = chunk
         self.compact_threshold = compact_threshold
         self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self._partials: list[_Partial] = []
 
         self.queue: collections.deque[Request] = collections.deque()
         self.results: dict[int, dict] = {}
@@ -256,11 +298,16 @@ class ContinuousBatchingScheduler:
         # the decode chunk compiles the argmax-only (legacy-cost) body.
         self.sstate = S.greedy_state(b)
         self._lane_stoch = np.zeros((b,), bool)
+        # pending = reserved by a chunk-prefilling request: occupied (never
+        # recycled, moves coherently under compaction) but excluded from
+        # decode commits and harvest until its final chunk splices in
+        self._lane_pending = np.zeros((b,), bool)
         self.stats = {"steps": 0, "decode_steps": 0, "lane_steps": 0,
                       "active_lane_steps": 0, "compactions": 0,
                       "occupancy_trace": [], "page_occupancy_trace": [],
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefill_tokens": 0, "page_waits": 0}
+                      "prefill_tokens": 0, "page_waits": 0,
+                      "prefill_chunks": 0}
 
     # ------------------------------------------------------------------
     # public API
@@ -288,8 +335,12 @@ class ContinuousBatchingScheduler:
         return float((self.lane_rid >= 0).sum()) / self.capacity
 
     def step(self):
-        """One scheduling round: compact, admit, decode a chunk, harvest."""
+        """One scheduling round: compact, advance chunked prefills, admit,
+        decode a chunk, harvest.  Chunked prefills advance by at most one
+        chunk per round, so resident lanes decode between a long prompt's
+        chunks instead of stalling for its whole prefill."""
         self._maybe_compact()
+        self._advance_partials()
         self._admit()
         occupied = self.lane_rid >= 0
         self.stats["occupancy_trace"].append(float(occupied.sum())
@@ -335,6 +386,16 @@ class ContinuousBatchingScheduler:
     def _due(self, req: Request) -> bool:
         return req.arrival <= self.now
 
+    def _budget_for(self, req: Request, plen: int) -> int:
+        """The request's decode-token budget: its own cap, clamped to the
+        engine burst budget and the lane's remaining cache extent.  THE
+        single definition — paged planning, whole-prefill admission and
+        chunked-prefill reservation must all agree or chunked==whole
+        bit-identity breaks."""
+        own = (self.engine.max_new_tokens if req.max_new_tokens is None
+               else req.max_new_tokens)
+        return min(own, self.engine.max_new_tokens, self.max_len - plen)
+
     def _plan_pages(self, req: Request) -> Optional[_PagePlan]:
         """Reserve pages for one request: longest resident prompt prefix is
         SHARED (refcount bump, no prefill), the rest freshly allocated.
@@ -342,9 +403,7 @@ class ContinuousBatchingScheduler:
         admission is gated on page availability, not lane count."""
         ps = self.page_size
         plen = len(req.tokens)
-        budget = min(self.engine.max_new_tokens if req.max_new_tokens is None
-                     else req.max_new_tokens,
-                     self.engine.max_new_tokens, self.max_len - plen)
+        budget = self._budget_for(req, plen)
         shared: list = []
         if self.prefix_sharing and not req.extras:
             shared = self.prefix_index.lookup(req.tokens, ps)
@@ -385,27 +444,42 @@ class ContinuousBatchingScheduler:
         extras keys are admitted together — the rest wait for the next round.
         Under paging each candidate must also fit the page pool
         (``_plan_pages``); prefix-hit rows prefill only their suffix.
+
+        With ``prefill_chunk`` set, a request whose (suffix) prompt exceeds
+        the chunk becomes a chunked-prefill PARTIAL instead: it claims a lane
+        (from the tail of the free list, so whole-prefill admissions keep the
+        head) and its pages, then prefills chunk-by-chunk across rounds.
         """
         free = self._free_lanes()
         batch_reqs: list[Request] = []
         plans: list[_PagePlan] = []
         rest: list[Request] = []
         extras_keys = None
+        n_claimed = 0                       # lanes claimed by new partials
         suffix_max = pos0_max = 0
         for req in self.queue:
-            if len(batch_reqs) >= len(free) or not self._due(req):
+            if len(batch_reqs) + n_claimed >= len(free) or not self._due(req):
                 rest.append(req)
                 continue
             keys = frozenset(req.extras) if req.extras else frozenset()
-            if extras_keys is None:
-                extras_keys = keys
-            if keys != extras_keys:
+            chunkable = self.prefill_chunk is not None and not req.extras
+            if extras_keys is not None and keys != extras_keys:
                 rest.append(req)
+                continue
+            if self.page_size is None and chunkable \
+                    and len(req.tokens) > self.prefill_chunk:
+                self._start_partial(req, None, free[len(free) - 1 - n_claimed])
+                n_claimed += 1
                 continue
             if self.page_size is not None:
                 plan = self._plan_pages(req)
                 if plan is None:                    # pool exhausted: wait
                     rest.append(req)
+                    continue
+                if chunkable and plan.plen - plan.pos0 > self.prefill_chunk:
+                    self._start_partial(req, plan,
+                                        free[len(free) - 1 - n_claimed])
+                    n_claimed += 1
                     continue
                 # group-fit guard: the prefill writes ONE padded suffix block
                 # per row at its pos0, and dynamic_update_slice CLAMPS the
@@ -423,9 +497,11 @@ class ContinuousBatchingScheduler:
                 suffix_max, pos0_max = s_max, p_max
                 plans.append(plan)
             batch_reqs.append(req)
+            if extras_keys is None:
+                extras_keys = keys
+        self.queue = collections.deque(rest)
         if not batch_reqs:
             return
-        self.queue = collections.deque(rest)
         lanes = free[:len(batch_reqs)]
         eng = self.engine
         n = len(batch_reqs)
@@ -492,12 +568,8 @@ class ContinuousBatchingScheduler:
         if plans:
             budgets = np.asarray([pl.budget for pl in plans], np.int32)
         else:
-            budgets = np.asarray(
-                [min(eng.max_new_tokens if r.max_new_tokens is None
-                     else r.max_new_tokens,
-                     eng.max_new_tokens,
-                     self.max_len - int(lens[i]))
-                 for i, r in enumerate(batch_reqs)], np.int32)
+            budgets = np.asarray([self._budget_for(r, int(lens[i]))
+                                  for i, r in enumerate(batch_reqs)], np.int32)
         self.tok = self.tok.at[lane_idx].set(first_tok)
         self.out_buf = self.out_buf.at[lane_idx].set(0)
         self.out_buf = self.out_buf.at[lane_idx, 0].set(first_tok)
@@ -525,6 +597,88 @@ class ContinuousBatchingScheduler:
     @staticmethod
     def _is_stochastic(spec) -> bool:
         return not (spec is None or spec.greedy or spec.temperature <= 0)
+
+    # ------------------------------------------------------------------
+    # chunked prefill (admission interleaved with decode rounds)
+    # ------------------------------------------------------------------
+
+    def _start_partial(self, req: Request, plan: Optional[_PagePlan],
+                       lane: int):
+        """Reserve a lane (and, under paging, the request's full page plan)
+        and begin prefilling its prompt in chunks.  The lane is marked
+        pending: it keeps decoding architecturally inside the jitted chunk
+        (writes land beyond-pos garbage / in the trash page) but is excluded
+        from commits, harvest and admission until the final chunk splices."""
+        eng = self.engine
+        lane = int(lane)
+        budget = (plan.budget if plan is not None
+                  else self._budget_for(req, len(req.tokens)))
+        sub_cache = eng.make_cache(1, self.max_len)
+        if plan is not None and plan.shared:
+            sub_cache = self._seed_shared_prefix(sub_cache, [plan], 1)
+        self.lane_rid[lane] = req.rid
+        self._lane_pending[lane] = True
+        self._partials.append(_Partial(
+            req=req, plan=plan, lane=lane, sub_cache=sub_cache, done=0,
+            pos0=plan.pos0 if plan is not None else 0, budget=budget))
+
+    def _advance_partials(self):
+        """Run at most ONE prefill chunk per pending request, splicing those
+        that finish.  Chunk widths bucket to powers of two capped at the
+        row's remaining extent, so the `dynamic_update_slice` at pos0+done
+        never clamps (a lone row's suffix always fits its cache tail)."""
+        still = []
+        for part in self._partials:
+            toks = part.req.tokens
+            start = part.pos0 + part.done
+            n = min(self.prefill_chunk, len(toks) - start)
+            width = min(_next_pow2(n), self.max_len - start)
+            buf = np.zeros((1, width), np.int32)
+            buf[0, :n] = toks[start:start + n]
+            batch = {"tokens": jnp.asarray(buf),
+                     "lens": jnp.asarray([n], jnp.int32),
+                     "pos0": jnp.asarray([start], jnp.int32)}
+            logits, part.sub_cache = self.engine._prefill(
+                self.engine.params, batch, part.sub_cache)
+            self.stats["prefill_tokens"] += n
+            self.stats["prefill_chunks"] += 1
+            part.done += n
+            if start + n < len(toks):
+                still.append(part)
+                continue
+            self._splice_partial(part, logits)
+        self._partials = still
+
+    def _splice_partial(self, part: _Partial, logits):
+        """Final chunk done: sample the first token from its logits, copy
+        pages / splice the accumulated sub-cache into the reserved lane, and
+        activate it — the single-request mirror of ``_admit``'s tail."""
+        eng = self.engine
+        req = part.req
+        spec = self._effective_spec(req)
+        sub_state = S.lane_state([spec], 1)
+        if self._is_stochastic(spec):
+            first_tok, sub_state = eng._sample(logits, sub_state)
+        else:
+            first_tok = eng._sample(logits)
+        lane = part.lane
+        lanes = np.asarray([lane])
+        if self.page_size is not None:
+            self._copy_pages(part.sub_cache, [part.plan], lanes)
+            self._register_prefix(req, part.plan)
+        lane_idx = jnp.asarray(lanes, jnp.int32)
+        self.cache = slot_update(eng.cfg, self.cache, lane_idx, part.sub_cache)
+        self.sstate = S.slot_update(self.sstate, lane_idx, sub_state)
+        budget = int(part.budget)
+        self.tok = self.tok.at[lane].set(first_tok[0])
+        self.out_buf = self.out_buf.at[lane].set(0)
+        self.out_buf = self.out_buf.at[lane, 0].set(first_tok[0])
+        self.n_gen = self.n_gen.at[lane].set(1)
+        self.budget = self.budget.at[lane].set(budget)
+        self.p = self.p.at[lane].set(
+            (first_tok[0] != eng.stop_token) & (budget > 1))
+        self._lane_pending[lane] = False
+        self._lane_stoch[lane] = self._is_stochastic(spec)
 
     # ------------------------------------------------------------------
     # paged admission plumbing
@@ -606,8 +760,10 @@ class ContinuousBatchingScheduler:
             parent = ids[j]
 
     def _harvest(self):
-        """Collect lanes whose request left the active partition."""
-        finished = np.flatnonzero((self.lane_rid >= 0) & ~np.asarray(self.p))
+        """Collect lanes whose request left the active partition (pending
+        chunked-prefill lanes are reserved, not finished)."""
+        finished = np.flatnonzero((self.lane_rid >= 0) & ~np.asarray(self.p)
+                                  & ~self._lane_pending)
         if finished.size == 0:
             return
         out = np.asarray(self.out_buf[finished])
@@ -664,6 +820,11 @@ class ContinuousBatchingScheduler:
         self.budget = jnp.take(self.budget, perm_idx, axis=0)
         self.lane_rid = self.lane_rid[perm]
         self._lane_stoch = self._lane_stoch[perm]
+        self._lane_pending = self._lane_pending[perm]
+        if self._partials:
+            new_of = {int(old): new for new, old in enumerate(perm)}
+            for part in self._partials:
+                part.lane = new_of[part.lane]
         if self.page_size is not None:
             self.lane_pages = {new: self.lane_pages[int(old)]
                                for new, old in enumerate(perm)

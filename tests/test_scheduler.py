@@ -110,6 +110,73 @@ def test_due_request_not_blocked_by_future_head():
     assert results[future]["finished_at"] > 1000.0
 
 
+def _serve_all(eng, prompts, budgets, arrivals, **kw):
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=MAX_LEN,
+                                        chunk=4, compact_threshold=0.5, **kw)
+    rids = [sched.submit(p, max_new_tokens=b, arrival=a)
+            for p, b, a in zip(prompts, budgets, arrivals)]
+    results = sched.run()
+    return {r: (results[r]["tokens"].tolist(), results[r]["n_generated"])
+            for r in rids}, sched
+
+
+def test_chunked_prefill_bit_identical_to_whole_prefill():
+    """Acceptance criterion: splitting admission prefill into chunks
+    interleaved with decode rounds changes NOTHING about the served tokens —
+    ``pos0`` suffix-prefill numerics depend only on absolute positions and
+    the cache extent, so chunk boundaries are invisible.  Covers the dense
+    and the paged scheduler, ragged budgets and staggered arrivals."""
+    cfg, _, params = _mk(seed=3)
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7)
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 64, rng.randint(4, 16)) for _ in range(10)]
+    budgets = [int(rng.randint(2, 9)) for _ in prompts]
+    arrivals = [float(i) * 0.7 for i in range(len(prompts))]
+
+    whole, _ = _serve_all(eng, prompts, budgets, arrivals)
+    for chunk in (3, 5):
+        got, sched = _serve_all(eng, prompts, budgets, arrivals,
+                                prefill_chunk=chunk)
+        assert sched.stats["prefill_chunks"] > 0     # chunking actually ran
+        assert got == whole
+        pg, sched_p = _serve_all(eng, prompts, budgets, arrivals,
+                                 page_size=8, prefill_chunk=chunk)
+        assert sched_p.stats["prefill_chunks"] > 0
+        assert pg == whole
+        assert sched_p.allocator.free_pages == sched_p.pool_pages
+
+
+def test_chunked_prefill_moe_family():
+    """MoE chunked prefill (capacity sized so nothing drops) serves the same
+    tokens as whole prefill."""
+    cfg = ModelConfig(name="t", family="moe", first_k_dense=1, n_experts=4,
+                      top_k=2, capacity_factor=4.0, **BASE)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7)
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(1, 64, rng.randint(4, 14)) for _ in range(6)]
+    budgets = [6] * len(prompts)
+    arrivals = [0.0] * len(prompts)
+    whole, _ = _serve_all(eng, prompts, budgets, arrivals)
+    got, sched = _serve_all(eng, prompts, budgets, arrivals, prefill_chunk=4)
+    assert sched.stats["prefill_chunks"] > 0
+    assert got == whole
+
+
+def test_chunked_prefill_refused_for_stateful_prefill_families():
+    """Families whose prefill carries state outside the positional cache
+    (ssm/hybrid scan carry) must refuse chunked prefill loudly."""
+    cfg = ModelConfig(name="t", family="ssm", ssm_state=16, ssm_headdim=16,
+                      ssm_chunk=16, **BASE)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_new_tokens=4)
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ContinuousBatchingScheduler(eng, capacity=2, max_len=16,
+                                    prefill_chunk=4)
+
+
 def test_submit_rejects_oversized_prompt():
     cfg, _, params = _mk(seed=5)
     eng = ServeEngine(cfg, params, max_new_tokens=4, stop_token=-1)
