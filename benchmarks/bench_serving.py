@@ -12,8 +12,16 @@ page-gated admission behavior under real memory pressure.  Emits
 ``BENCH_serving.json`` so the perf trajectory of the serve path is recorded
 per PR.
 
+Scheduler legs run the FUSED step program with the async overlap harvest
+(one dispatch + one blocking sync per round); each continuous record carries
+``continuous_static_ratio`` (continuous / static tokens-per-sec) plus
+per-request TTFT/TPOT p50/p99, and ``--min-continuous-ratio`` gates the
+largest capacity's ratio in CI — per-round host dispatch overhead creeping
+back into the serve loop shows up as that ratio collapsing.
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--fast] \
-        [--seed 0] [--trace-len 8] [--min-paged-ratio 0.5]
+        [--seed 0] [--trace-len 8] [--min-paged-ratio 0.5] \
+        [--min-continuous-ratio 0.2]
 
 The arrival trace is Poisson in DECODE-STEP time (the scheduler's clock):
 request inter-arrival gaps are exponential with the given rate, so bursts and
@@ -68,16 +76,20 @@ def poisson_trace(rng, n_requests, rate, prompt_lo, prompt_hi,
 
 def bench_capacity(eng, trace, *, capacity, max_len, chunk,
                    compact_threshold, page_size=None, pool_pages=None,
-                   sampling=None, prefill_chunk=None):
+                   sampling=None, prefill_chunk=None, fused=True,
+                   overlap=True):
     """One scheduler run; ``sampling`` is a per-request SamplingParams
     factory rid -> params (None = greedy).  Steps the scheduler manually so
     per-DECODE-STEP latency percentiles can be reported alongside
     throughput (p99 is the number continuous batching is supposed to hold
-    down while admission/compaction churn the lane vector)."""
+    down while admission/compaction churn the lane vector).  Default is the
+    fused step program with the async overlap harvest — one dispatch and one
+    blocking sync per round."""
     sched = ContinuousBatchingScheduler(
         eng, capacity=capacity, max_len=max_len, chunk=chunk,
         compact_threshold=compact_threshold, page_size=page_size,
-        pool_pages=pool_pages, prefill_chunk=prefill_chunk)
+        pool_pages=pool_pages, prefill_chunk=prefill_chunk,
+        fused=fused, overlap=overlap)
     for rid, (arrival, prompt, max_new) in enumerate(trace):
         sched.submit(prompt, arrival=arrival, max_new_tokens=max_new,
                      sampling=sampling(rid) if sampling else None)
@@ -91,12 +103,20 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
         ran = sched.stats["decode_steps"] - ds0
         if ran:                      # amortize the round over its decode steps
             step_lat += [dt / ran] * ran
+    sched.run()                      # overlap: harvest the final stash
     wall = time.perf_counter() - t0
     results = sched.results
     toks = sum(r["n_generated"] for r in results.values())
     occ = sched.stats["occupancy_trace"]
     lane_eff = (sched.stats["active_lane_steps"]
                 / max(sched.stats["lane_steps"], 1))
+    # wall-clock TTFT (submit -> first token committed to a dispatch) and
+    # TPOT (first token -> harvest, per subsequent token) per request
+    ttft = [sched.req_times[r]["first_token"] - sched.req_times[r]["submitted"]
+            for r in results]
+    tpot = [(sched.req_times[r]["finished"]
+             - sched.req_times[r]["first_token"])
+            / max(results[r]["n_generated"] - 1, 1) for r in results]
     rec = {
         "capacity": capacity,
         "requests": len(results),
@@ -107,10 +127,16 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
         "lane_efficiency": lane_eff,
         "compactions": sched.stats["compactions"],
         "rounds": sched.stats["steps"],
+        "dispatches": sched.stats["dispatches"],
+        "host_syncs": sched.stats["host_syncs"],
         "decode_step_p50_ms": (float(np.percentile(step_lat, 50)) * 1e3
                                if step_lat else 0.0),
         "decode_step_p99_ms": (float(np.percentile(step_lat, 99)) * 1e3
                                if step_lat else 0.0),
+        "ttft_p50_ms": float(np.percentile(ttft, 50)) * 1e3 if ttft else 0.0,
+        "ttft_p99_ms": float(np.percentile(ttft, 99)) * 1e3 if ttft else 0.0,
+        "tpot_p50_ms": float(np.percentile(tpot, 50)) * 1e3 if tpot else 0.0,
+        "tpot_p99_ms": float(np.percentile(tpot, 99)) * 1e3 if tpot else 0.0,
     }
     if page_size is not None:
         pocc = sched.stats["page_occupancy_trace"]
@@ -180,6 +206,12 @@ def main(argv=None):
                          "leg reaches this fraction of the continuous "
                          "(dense-cache) throughput — the CI regression "
                          "guard against a full-view copy on the hot path")
+    ap.add_argument("--min-continuous-ratio", type=float, default=None,
+                    help="exit non-zero unless the LARGEST capacity's "
+                         "continuous/static throughput ratio reaches this "
+                         "floor — the CI regression guard against per-round "
+                         "host dispatch overhead creeping back into the "
+                         "serve loop (fused step + async harvest)")
     ap.add_argument("--sampling", action="store_true",
                     help="add a stochastic leg (temperature=0.8, top_p=0.9, "
                          "per-request seed = rid): exercises the per-lane "
@@ -227,6 +259,7 @@ def main(argv=None):
         bench_static(eng, trace, capacity=cap, max_len=max_len)  # warmup
         s = bench_static(eng, trace, capacity=cap, max_len=max_len)
         record["static"].append(s)
+        r["continuous_static_ratio"] = r["tokens_per_s"] / s["tokens_per_s"]
         # paged legs: the pool is an HONEST fraction of the dense KV
         # footprint (dense pages = capacity * pages-per-lane; the +1 trash
         # page is reported, not hidden).  The floor is one lane's worst case
@@ -265,7 +298,10 @@ def main(argv=None):
               f"(occ {r['mean_occupancy']:.2f}, "
               f"compactions {r['compactions']}, "
               f"p50/p99 {r['decode_step_p50_ms']:.1f}/"
-              f"{r['decode_step_p99_ms']:.1f} ms)   "
+              f"{r['decode_step_p99_ms']:.1f} ms, "
+              f"ttft p50 {r['ttft_p50_ms']:.0f} ms, "
+              f"syncs {r['host_syncs']}/{r['rounds']}r, "
+              f"c/s {r['continuous_static_ratio']:.2f})   "
               f"static {s['tokens_per_s']:8.1f} tok/s   "
               f"paged@{p['pool_pages']}/{dense_pages}pg "
               f"{p['tokens_per_s']:8.1f} tok/s "
@@ -301,6 +337,18 @@ def main(argv=None):
             raise SystemExit(1)
         print(f"paged/continuous ratio >= {args.min_paged_ratio} "
               f"at mem_frac={args.paged_mem_frac}: ok")
+
+    if args.min_continuous_ratio is not None:
+        top = record["continuous"][-1]
+        if top["continuous_static_ratio"] < args.min_continuous_ratio:
+            print(f"FAIL capacity={top['capacity']}: continuous/static "
+                  f"ratio {top['continuous_static_ratio']:.2f} < "
+                  f"{args.min_continuous_ratio}")
+            raise SystemExit(1)
+        print(f"continuous/static ratio "
+              f"{top['continuous_static_ratio']:.2f} >= "
+              f"{args.min_continuous_ratio} "
+              f"at capacity {top['capacity']}: ok")
 
 
 if __name__ == "__main__":

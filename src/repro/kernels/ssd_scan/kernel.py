@@ -25,6 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _ssd_kernel(a_head_ref,                       # (H,) ANY: A per head
                 x_ref, dt_ref, b_ref, c_ref,      # blocked inputs
+                h0_ref,                           # (1, 1, P, N) initial state
                 y_ref, hout_ref,                  # blocked outputs
                 h_scr,                            # (P, N) VMEM state
                 *, q: int, n_chunks: int):
@@ -33,7 +34,7 @@ def _ssd_kernel(a_head_ref,                       # (H,) ANY: A per head
 
     @pl.when(ic == 0)
     def _init():
-        h_scr[...] = jnp.zeros_like(h_scr[...])
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
 
     x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
     dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
@@ -76,13 +77,18 @@ def _ssd_kernel(a_head_ref,                       # (H,) ANY: A per head
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
-    """x: (Bz, S, H, P); dt: (Bz, S, H); A: (H,); B, C: (Bz, S, N).
+def ssd_scan_pallas(x, dt, A, B, C, h0=None, *, chunk: int = 128,
+                    interpret: bool = True):
+    """x: (Bz, S, H, P); dt: (Bz, S, H); A: (H,); B, C: (Bz, S, N);
+    h0: (Bz, H, P, N) f32 initial state or None (zeros) — chunked-prefill
+    resume seeds the VMEM state scratch at chunk 0 instead of zeroing it.
     S % chunk == 0 (ops.py pads + predicates dt).  Returns (y, h_final)."""
     bz, s, h, p = x.shape
     n = B.shape[-1]
     assert s % chunk == 0, (s, chunk)
     nc = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((bz, h, p, n), jnp.float32)
 
     kernel = functools.partial(_ssd_kernel, q=chunk, n_chunks=nc)
     grid = (bz, h, nc)
@@ -95,6 +101,7 @@ def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True)
             pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),
             pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),
             pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh, c: (b, hh, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
@@ -106,5 +113,5 @@ def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True)
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
-    )(A, x, dt, B, C)
+    )(A, x, dt, B, C, h0)
     return y, hout

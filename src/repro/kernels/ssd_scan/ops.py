@@ -10,15 +10,20 @@ from .kernel import ssd_scan_pallas
 from .ref import ssd_chunked_ref, ssd_ref  # noqa: F401  (oracle re-export)
 
 
-def ssd_scan(x, dt, A, B, C, D=None, *, seq_lens=None, chunk: int = 128,
-             impl: str = "kernel", interpret: bool = True):
+def ssd_scan(x, dt, A, B, C, D=None, *, seq_lens=None, h0=None,
+             chunk: int = 128, impl: str = "kernel", interpret: bool = True):
     """Chunk-size-agnostic SSD scan.
 
     x: (Bz, S, H, P); dt: (Bz, S, H) (positive; e.g. softplus upstream);
     A: (H,) negative; B, C: (Bz, S, N); D: (H,) skip or None;
     seq_lens: (Bz,) ragged valid lengths — implemented by *predicating dt to
     zero* past the end (SVE zeroing predication; state then carries unchanged
-    and padded rows contribute nothing).
+    and padded rows contribute nothing);
+    h0: (Bz, H, P, N) initial state or None (zeros) — chunked-prefill resume:
+    scanning a suffix from the carried state equals scanning the whole
+    sequence bit-for-bit when the resume offset is a multiple of ``chunk``
+    (the chunk_step sequence is then identical; padded tail steps are exact
+    identities because dt=0 makes decay exp(0)=1 and the update exactly 0).
 
     Returns (y, h_final): y (Bz, S, H, P), h_final (Bz, H, P, N) f32.
     """
@@ -36,9 +41,12 @@ def ssd_scan(x, dt, A, B, C, D=None, *, seq_lens=None, chunk: int = 128,
         C = jnp.pad(C, pad + [(0, 0)])
 
     if impl == "xla":
-        y, hT = ssd_chunked_ref(x, dt, A, B, C, None, chunk=chunk)
+        y, hT = ssd_chunked_ref(x, dt, A, B, C, None, h0=h0, chunk=chunk)
     else:
-        y, hT = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+        if h0 is None:
+            h0 = jnp.zeros((bz, h, p, B.shape[-1]), jnp.float32)
+        y, hT = ssd_scan_pallas(x, dt, A, B, C, h0.astype(jnp.float32),
+                                chunk=chunk, interpret=interpret)
 
     y = y[:, :s]
     if D is not None:

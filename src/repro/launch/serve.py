@@ -51,6 +51,15 @@ def main():
                     help="paged decode path: 'native' reads K/V through the "
                          "page table inside flash attention; 'gather' is the "
                          "reference oracle (dense view materialized per step)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="run the legacy multi-dispatch host loop instead of "
+                         "the fused one-dispatch-per-round step program")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async host loop: dispatch round N+1 before reading "
+                         "round N (one blocking sync per round)")
+    ap.add_argument("--src-len", type=int, default=None,
+                    help="encdec: padded encoder memory length the scheduler "
+                         "allocates caches for (default: --prompt-len)")
     ap.add_argument("--static", action="store_true",
                     help="one-shot ServeEngine.generate instead of scheduler")
     ap.add_argument("--temperature", type=float, default=None,
@@ -109,8 +118,8 @@ def main():
 
     eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7,
                       paged_attn=args.paged_attn)
-    if args.static or cfg.family == "encdec" or cfg.cross_attn_group:
-        # modality extras are per-batch, not yet per-request: static path
+    if args.static or cfg.cross_attn_group:
+        # vlm cross_emb extras are per-batch, not yet per-request: static path
         res = eng.generate(batch, sampling=[_sampling(i)
                                             for i in range(args.batch)])
         for i in range(args.batch):
@@ -121,17 +130,25 @@ def main():
 
     # ---- continuous batching: stream requests through the lane vector ----
     max_len = args.prompt_len + args.max_new
+    src_len = ((args.src_len or args.prompt_len)
+               if cfg.family == "encdec" else None)
     sched = ContinuousBatchingScheduler(
         eng, capacity=args.batch, max_len=max_len, chunk=args.chunk,
         compact_threshold=args.compact_threshold, page_size=args.page_size,
         pool_pages=args.pool_pages,
         prefix_sharing=not args.no_prefix_sharing,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk,
+        fused=not args.no_fused, overlap=args.overlap, src_len=src_len)
     rid_len = {}
     for i in range(args.requests):
         plen = int(rng.randint(4, args.prompt_len + 1))
+        extras = None
+        if cfg.family == "encdec":
+            sl = int(rng.randint(2, src_len + 1))
+            extras = {"src_emb": rng.randn(sl, cfg.d_model)
+                      .astype(np.float32)}
         rid = sched.submit(rng.randint(1, cfg.vocab_size, plen),
-                           sampling=_sampling(i))
+                           sampling=_sampling(i), extras=extras)
         rid_len[rid] = plen
     results = sched.run()
     for rid in sorted(results):
@@ -140,6 +157,8 @@ def main():
               f"{r['tokens'].tolist()}")
     occ = sched.stats["occupancy_trace"]
     print(f"[scheduler] rounds={sched.stats['steps']} "
+          f"dispatches={sched.stats['dispatches']} "
+          f"host syncs={sched.stats['host_syncs']} "
           f"compactions={sched.stats['compactions']} "
           f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}"
           + (f"  prefill chunks={sched.stats['prefill_chunks']}"

@@ -69,6 +69,20 @@ def gather_lanes(cfg, cache, lanes):
             for k, v in cache.items()}
 
 
+def merge_lanes(cfg, cache, lanes, sub_cache):
+    """Write a decode burst's narrowed ``sub_cache`` back into ``cache``:
+    lane-axis arrays splice at ``lanes`` (slot_update), while arrays WITHOUT
+    a lane axis — the shared page pools — are taken from ``sub_cache``
+    wholesale, because the narrowed burst scatter-stored its new tokens into
+    them through the (narrowed) page table.  jit-safe."""
+    axes = _lane_axes(cfg, cache)
+    out = slot_update(cfg, cache, lanes, sub_cache)
+    for k, v in sub_cache.items():
+        if k in out and k not in axes:
+            out[k] = v
+    return out
+
+
 def slot_update(cfg, cache, lanes, sub_cache):
     """Write ``sub_cache`` (a cache whose lane count equals ``len(lanes)``)
     into ``cache`` at lane indices ``lanes`` via in-place ``.at[].set``
@@ -125,11 +139,33 @@ def paged_decode_ok(cfg) -> bool:
 
 def chunked_prefill_ok(cfg) -> bool:
     """True when cfg's family prefill() supports per-row ``pos0`` start
-    offsets with all cross-chunk state living in the KV cache — the property
+    offsets with all cross-chunk state carried in the cache — the property
     that makes splitting one prompt's prefill into chunks bit-identical to
-    prefilling it whole (ssm/hybrid carry conv/SSM state outside the
-    positional cache; encdec recomputes cross K/V per prefill call)."""
+    prefilling it whole.  All five families now qualify: dense/moe keep
+    everything in the KV cache, ssm/hybrid resume the conv taps + SSM state,
+    encdec caches per-layer cross K/V on the first chunk."""
     return bool(getattr(get_model(cfg), "CHUNKED_PREFILL_OK", False))
+
+
+def lane_independent_decode(cfg) -> bool:
+    """True when cfg's family decode() treats request lanes independently —
+    no cross-lane coupling anywhere in the step — so running a decode burst
+    over any lane PREFIX produces bit-identical per-lane results.  This is
+    what lets the fused serve step narrow its burst to the occupied pow2
+    lane bucket (SVE predicate-narrowing applied to the batch axis).  MoE
+    does not qualify: expert capacity is shared across the batch, so
+    dropping (dead) lanes changes which tokens overflow an expert buffer."""
+    return bool(getattr(get_model(cfg), "LANE_INDEPENDENT_DECODE", False))
+
+
+def chunked_prefill_granularity(cfg) -> int:
+    """Alignment (in tokens) chunk boundaries must respect for chunked
+    prefill to stay bit-identical to whole-prompt prefill.  1 for attention
+    families (position-exact at any split); ssm/hybrid require boundaries on
+    multiples of ``ssm_chunk`` so the resumed SSD scan replays the same
+    chunk_step sequence as the unchunked scan."""
+    fn = getattr(get_model(cfg), "chunked_prefill_granularity", None)
+    return int(fn(cfg)) if fn else 1
 
 
 def to_paged(cfg, cache, *, page_size: int, pool_pages=None):

@@ -169,6 +169,8 @@ PAGED_PREFIX_OK = True
 # prefill() takes per-row pos0 start offsets with all state in the KV cache,
 # so one prompt's prefill can be split into chunks (scheduler chunked prefill)
 CHUNKED_PREFILL_OK = True
+# decode has no cross-lane coupling: bursts may narrow to a lane prefix
+LANE_INDEPENDENT_DECODE = True
 
 
 def paged_decode_ok(cfg):

@@ -30,6 +30,49 @@ def _dec_block_axes(cfg):
             "ln2": L.norm_axes(cfg), "mlp": L.mlp_axes(cfg)}
 
 
+def _cross_kv(p, memory, cfg):
+    """Precompute cross-attention K/V from encoder memory, mirroring
+    ``L.attention``'s kv_x path op-for-op (bias, head split, qk_norm) so that
+    attending through the cache is bitwise identical to attending through
+    ``kv_x=memory`` — required for chunked prefill to resume exactly."""
+    cd = L.cdt(cfg)
+    hd = cfg.resolved_head_dim
+    ck = memory.astype(cd) @ p["wk"].astype(cd)
+    cv = memory.astype(cd) @ p["wv"].astype(cd)
+    if cfg.use_bias:
+        ck = ck + p["bk"].astype(cd)
+        cv = cv + p["bv"].astype(cd)
+    ck = L.shard_act(cfg, L._split_heads(ck, cfg.n_kv_heads, hd),
+                     ("batch", "act_kv_heads", None, None))
+    cv = L.shard_act(cfg, L._split_heads(cv, cfg.n_kv_heads, hd),
+                     ("batch", "act_kv_heads", None, None))
+    if cfg.qk_norm:
+        ck = L._rms_headdim(ck)
+    return ck, cv
+
+
+def _cross_from_cache(p, hx, cfg, ck, cv, src_lens):
+    """Cross-attention against cached K/V, mirroring ``L.attention``'s kv_x
+    path on the query/output side (bias, qk_norm, shard annotations)."""
+    cd = L.cdt(cfg)
+    hd = cfg.resolved_head_dim
+    q = hx.astype(cd) @ p["wq"].astype(cd)
+    if cfg.use_bias:
+        q = q + p["bq"].astype(cd)
+    q = L.shard_act(cfg, L._split_heads(q, cfg.n_heads, hd),
+                    ("batch", "act_heads", None, None))
+    if cfg.qk_norm:
+        q = L._rms_headdim(q)
+    out = flash_attention(q, ck.astype(cd), cv.astype(cd),
+                          kv_lens=src_lens, causal=False, impl=cfg.attn_impl)
+    out = L.shard_act(cfg, out, ("batch", "act_heads", None, None))
+    out = L._merge_heads(out).astype(cd) @ p["wo"].astype(cd)
+    if cfg.use_bias:
+        out = out + p["bo"].astype(cd)
+    out = L.shard_act(cfg, out, ("batch", None, None))
+    return out.astype(hx.dtype)
+
+
 def _dec_block_apply(p, x, positions, cfg, memory, *, src_lens=None,
                      kv_lens=None, q_offset=None, cache=None, cache_pos=None,
                      cross_cache=None, causal=True):
@@ -40,15 +83,10 @@ def _dec_block_apply(p, x, positions, cfg, memory, *, src_lens=None,
         q_offset=q_offset, cache=cache, cache_pos=cache_pos)
     h2 = x + attn_out
     hx = L.apply_norm(p["lnx"], h2, cfg)
-    if cross_cache is not None:                  # decode: precomputed cross K/V
+    if cross_cache is not None:        # decode / resumed chunk: cached cross K/V
         ck, cv = cross_cache
-        hd = cfg.resolved_head_dim
-        q = L._split_heads(hx.astype(L.cdt(cfg)) @ p["cross_attn"]["wq"].astype(L.cdt(cfg)),
-                           cfg.n_heads, hd)
-        out = flash_attention(q, ck.astype(L.cdt(cfg)), cv.astype(L.cdt(cfg)),
-                              kv_lens=src_lens, causal=False, impl=cfg.attn_impl)
-        cross_out = (L._merge_heads(out).astype(L.cdt(cfg))
-                     @ p["cross_attn"]["wo"].astype(L.cdt(cfg))).astype(x.dtype)
+        cross_out = _cross_from_cache(p["cross_attn"], hx, cfg, ck, cv,
+                                      src_lens)
     else:
         cross_out, _ = L.attention(
             p["cross_attn"], hx, positions, cfg, kv_x=memory, causal=False,
@@ -140,9 +178,13 @@ def cache_batch_axes(cfg):
 # prefix does not imply shared decoder state
 PAGED_PREFIX_OK = False
 
-# prefill() re-encodes the source and recomputes cross K/V every call; a
-# chunked prompt would re-pay (and re-write) the encoder per chunk
-CHUNKED_PREFILL_OK = False
+# the first chunk runs the encoder and caches per-layer cross K/V; resumed
+# chunks (no src_emb in the batch) attend the cached K/V — bitwise identical
+# to the kv_x path because the cache stores post-bias/qk_norm heads at the
+# compute dtype (lossless roundtrip)
+CHUNKED_PREFILL_OK = True
+# decode has no cross-lane coupling: bursts may narrow to a lane prefix
+LANE_INDEPENDENT_DECODE = True
 
 
 def paged_decode_ok(cfg):
@@ -175,41 +217,62 @@ def make_paged_cache(cfg, batch_size: int, max_len: int, src_len: int = 1, *,
 
 
 def prefill(params, cfg, batch, cache):
-    """Encode source + run decoder prompt, filling self and cross caches."""
-    src_lens = batch.get("src_lens")
-    memory = encode(params, cfg, batch["src_emb"], src_lens)
+    """Encode source + run decoder prompt, filling self and cross caches.
+
+    Chunked-prefill resume: when ``batch`` has no ``src_emb``, the encoder is
+    NOT re-run — cross-attention reads the cached per-layer cross K/V written
+    by the first chunk (bitwise identical to attending the memory directly,
+    see ``_cross_kv``), and ``pos0`` offsets the self-attention writes."""
     tokens = batch["tokens"]
     b, s = tokens.shape
-    if src_lens is None:
-        src_lens = jnp.full((b,), memory.shape[1], jnp.int32)
     lens = batch.get("lens")
     lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    zero = jnp.zeros((b,), jnp.int32)
+    pos0 = batch.get("pos0")
+    pos0 = jnp.zeros((b,), jnp.int32) if pos0 is None else jnp.asarray(pos0, jnp.int32)
+    positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
     x = L.embed(params["embed"], tokens, cfg)
-    hd = cfg.resolved_head_dim
-    cd = L.cdt(cfg)
-
-    def body(carry, xs):
-        h, = carry
-        lp, kc, vc = xs
-        h, (kc, vc) = _dec_block_apply(
-            lp, h, positions, cfg, memory, src_lens=src_lens, kv_lens=lens,
-            q_offset=zero, cache=(kc, vc), cache_pos=zero, causal=True)
-        # cross K/V for decode (computed once per layer)
-        ck = L._split_heads(memory.astype(cd) @ lp["cross_attn"]["wk"].astype(cd),
-                            cfg.n_kv_heads, hd)
-        cv = L._split_heads(memory.astype(cd) @ lp["cross_attn"]["wv"].astype(cd),
-                            cfg.n_kv_heads, hd)
-        return (h,), (kc, vc, ck, cv)
-
-    (h,), (k_new, v_new, ck, cv) = jax.lax.scan(
-        body, (x,), (params["dec_blocks"], cache["k"], cache["v"]))
     cache = dict(cache)
+
+    if "src_emb" in batch:                     # first chunk: run the encoder
+        src_lens = batch.get("src_lens")
+        memory = encode(params, cfg, batch["src_emb"], src_lens)
+        if src_lens is None:
+            src_lens = jnp.full((b,), memory.shape[1], jnp.int32)
+
+        def body(carry, xs):
+            h, = carry
+            lp, kc, vc = xs
+            h, (kc, vc) = _dec_block_apply(
+                lp, h, positions, cfg, memory, src_lens=src_lens,
+                kv_lens=pos0 + lens, q_offset=pos0, cache=(kc, vc),
+                cache_pos=pos0, causal=True)
+            # cross K/V for decode + resumed chunks (computed once per layer)
+            ck, cv = _cross_kv(lp["cross_attn"], memory, cfg)
+            return (h,), (kc, vc, ck, cv)
+
+        (h,), (k_new, v_new, ck, cv) = jax.lax.scan(
+            body, (x,), (params["dec_blocks"], cache["k"], cache["v"]))
+        cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        cache["src_lens"] = src_lens
+    else:                                      # resumed chunk: cached cross K/V
+        src_lens = cache["src_lens"]
+
+        def body(carry, xs):
+            h, = carry
+            lp, kc, vc, ck, cv = xs
+            h, (kc, vc) = _dec_block_apply(
+                lp, h, positions, cfg, None, src_lens=src_lens,
+                kv_lens=pos0 + lens, q_offset=pos0, cache=(kc, vc),
+                cache_pos=pos0, cross_cache=(ck, cv), causal=True)
+            return (h,), (kc, vc)
+
+        (h,), (k_new, v_new) = jax.lax.scan(
+            body, (x,), (params["dec_blocks"], cache["k"], cache["v"],
+                         cache["cross_k"], cache["cross_v"]))
+
     cache["k"], cache["v"] = k_new, v_new
-    cache["cross_k"], cache["cross_v"] = (ck.astype(cache["cross_k"].dtype),
-                                          cv.astype(cache["cross_v"].dtype))
-    cache["src_lens"], cache["pos"] = src_lens, lens
+    cache["pos"] = pos0 + lens
     h = L.apply_norm(params["final_norm"], h, cfg)
     idx = jnp.clip(lens - 1, 0, s - 1)
     h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]

@@ -102,9 +102,18 @@ def cache_batch_axes(cfg):
 # resident pages — prefix sharing would silently drop the SSM carry
 PAGED_PREFIX_OK = False
 
-# chunked prefill would need mamba_block to resume from a cached SSM state;
-# prefill() always scans a prompt from the zero state
-CHUNKED_PREFILL_OK = False
+# prefill() resumes the mamba stacks from the cached conv taps + SSM state
+# (zero for a fresh cache — bitwise identical to no carry) and the shared
+# attention block writes each chunk's K/V at its pos0 offset, so chunked
+# prefill is exact at ssm_chunk-aligned boundaries.
+CHUNKED_PREFILL_OK = True
+# decode has no cross-lane coupling: bursts may narrow to a lane prefix
+LANE_INDEPENDENT_DECODE = True
+
+
+def chunked_prefill_granularity(cfg) -> int:
+    """Chunk boundaries must align with the SSD scan chunk (see ssm.py)."""
+    return int(cfg.ssm_chunk)
 
 
 def paged_decode_ok(cfg):
@@ -135,8 +144,10 @@ def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
 
 
 def _groups_cached(params, cfg, x, positions, cache, *, lens, q_offset,
-                   cache_pos, causal, decode_step):
+                   cache_pos, causal, decode_step, kv_lens=None):
     shared = params["shared"]
+    if kv_lens is None:
+        kv_lens = lens if not decode_step else cache_pos + 1
 
     def group_body(carry, xs):
         h, = carry
@@ -148,14 +159,14 @@ def _groups_cached(params, cfg, x, positions, cache, *, lens, q_offset,
             if decode_step:
                 h2, (cc, st) = S.mamba_block_decode(lp, h2, cfg, cc, st)
             else:
-                h2, (cc, st) = S.mamba_block(lp, h2, cfg, seq_lens=lens)
+                h2, (cc, st) = S.mamba_block(lp, h2, cfg, seq_lens=lens,
+                                             conv_init=cc, state_init=st)
             return (h2,), (cc, st)
 
         (h,), (conv_g, state_g) = jax.lax.scan(
             mamba_body, (h,), (gp, conv_g, state_g))
         h, (sk, sv) = L.block_apply(
-            shared, h, positions, cfg, causal=causal,
-            kv_lens=lens if not decode_step else cache_pos + 1,
+            shared, h, positions, cfg, causal=causal, kv_lens=kv_lens,
             q_offset=q_offset, cache=(sk, sv), cache_pos=cache_pos)
         return (h,), (conv_g, state_g, sk, sv)
 
@@ -175,7 +186,8 @@ def _groups_cached(params, cfg, x, positions, cache, *, lens, q_offset,
             if decode_step:
                 h2, (cc, st) = S.mamba_block_decode(lp, h2, cfg, cc, st)
             else:
-                h2, (cc, st) = S.mamba_block(lp, h2, cfg, seq_lens=lens)
+                h2, (cc, st) = S.mamba_block(lp, h2, cfg, seq_lens=lens,
+                                             conv_init=cc, state_init=st)
             return (h2,), (cc, st)
         (h,), (tc, ts) = jax.lax.scan(
             tail_body, (h,), (params["tail"], cache["tail_conv"],
@@ -189,14 +201,15 @@ def prefill(params, cfg, batch, cache):
     b, s = tokens.shape
     lens = batch.get("lens")
     lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    zero = jnp.zeros((b,), jnp.int32)
+    pos0 = batch.get("pos0")                    # chunked-prefill resume offset
+    pos0 = jnp.zeros((b,), jnp.int32) if pos0 is None else jnp.asarray(pos0, jnp.int32)
+    positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
     x = L.embed(params["embed"], tokens, cfg)
     # conv caches are written by mamba_block's tail output; adapt shapes
     h, cache = _groups_cached(params, cfg, x, positions, cache, lens=lens,
-                              q_offset=zero, cache_pos=zero, causal=True,
-                              decode_step=False)
-    cache["pos"] = lens
+                              q_offset=pos0, cache_pos=pos0, causal=True,
+                              decode_step=False, kv_lens=pos0 + lens)
+    cache["pos"] = pos0 + lens
     h = L.apply_norm(params["final_norm"], h, cfg)
     idx = jnp.clip(lens - 1, 0, s - 1)
     h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]

@@ -221,6 +221,9 @@ PAGED_PREFIX_OK = False
 # whenever expert capacity does not drop (dispatch groups see different
 # co-tokens per chunk, but slot values are per-token when nothing drops)
 CHUNKED_PREFILL_OK = True
+# expert capacity is shared across the batch: dropping (dead) lanes changes
+# which tokens overflow an expert buffer, so bursts must run full-width
+LANE_INDEPENDENT_DECODE = False
 
 
 def paged_decode_ok(cfg):

@@ -62,14 +62,21 @@ def _split_proj(cfg, proj):
     return z, xbc, dt
 
 
-def _causal_conv(xbc, w, b):
-    """Depthwise causal conv: xbc (B, S, C), w (W, C) -> (B, S, C)."""
+def _causal_conv(xbc, w, b, tail=None):
+    """Depthwise causal conv: xbc (B, S, C), w (W, C) -> (B, S, C).
+
+    ``tail`` is the previous (W-1) PRE-conv taps (chunked-prefill resume);
+    None means a fresh sequence (zero left-pad — bitwise identical to a zero
+    tail, so one code path serves both)."""
     width = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    if tail is None:
+        pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
     out = jnp.zeros_like(xbc)
     for i in range(width):                       # width is 4: unrolled taps
         out = out + pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
-    return out + b[None, None, :]
+    return out + b[None, None, :], pad
 
 
 def _gated_out_norm(p, y, z, cfg):
@@ -80,18 +87,28 @@ def _gated_out_norm(p, y, z, cfg):
             * p["scale"].astype(jnp.float32)).astype(y.dtype)
 
 
-def mamba_block(p, x, cfg, *, seq_lens=None):
-    """Full-sequence block.  Returns (out, (conv_tail, ssm_state))."""
+def mamba_block(p, x, cfg, *, seq_lens=None, conv_init=None, state_init=None):
+    """Full-sequence block.  Returns (out, (conv_tail, ssm_state)).
+
+    ``conv_init`` (B, W-1, C) / ``state_init`` (B, H, P, N) resume a chunked
+    prefill from the carried conv taps and SSM state; None (or all-zero
+    inits, e.g. a fresh cache) is a fresh sequence — the two are bitwise
+    identical, so serving can pass the cache unconditionally.  The conv tail
+    returned (and cached) holds PRE-conv taps, matching what
+    ``mamba_block_decode`` prepends to the next token's projection.
+    """
     b, s, d = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
     pdim = cfg.ssm_headdim
     cd = L.cdt(cfg)
+    width = cfg.ssm_conv_width
 
     hin = L.apply_norm(p["norm"], x, cfg)
     proj = hin.astype(cd) @ p["in_proj"].astype(cd)
     z, xbc, dt = _split_proj(cfg, proj)
-    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(cd),
-                                   p["conv_b"].astype(cd)))
+    conv_out, pre_taps = _causal_conv(xbc, p["conv_w"].astype(cd),
+                                      p["conv_b"].astype(cd), tail=conv_init)
+    xbc = jax.nn.silu(conv_out)
     x_in = xbc[..., :di].reshape(b, s, h, pdim)
     x_in = L.shard_act(cfg, x_in, ("batch", None, "act_ssm_heads", None))
     bmat = xbc[..., di:di + n]
@@ -101,21 +118,21 @@ def mamba_block(p, x, cfg, *, seq_lens=None):
     A = -jnp.exp(p["A_log"])
 
     y, hT = ssd_scan(x_in, dt, A, bmat, cmat, D=p["D"], seq_lens=seq_lens,
-                     chunk=cfg.ssm_chunk, impl=cfg.ssd_impl)
+                     h0=state_init, chunk=cfg.ssm_chunk, impl=cfg.ssd_impl)
     y = L.shard_act(cfg, y, ("batch", None, "act_ssm_heads", None))
     y = y.reshape(b, s, di)
     y = _gated_out_norm(p["out_norm"], y, z, cfg)
     out = x + (y.astype(cd) @ p["out_proj"].astype(cd)).astype(x.dtype)
 
-    # conv tail for serving: last (W-1) steps of xBC at each row's length
-    width = cfg.ssm_conv_width
+    # conv tail for serving: last (W-1) PRE-conv taps at each row's length
+    # (pre_taps = [init | pre-conv xBC], so valid row length l ends at
+    # pre_taps index (W-1)+l and the W-1 taps before it start at index l)
     if seq_lens is None:
-        tail = xbc[:, s - (width - 1):, :]
+        tail = pre_taps[:, s:, :]
     else:
-        padded = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
         tail = jax.vmap(
             lambda xb, l: jax.lax.dynamic_slice(
-                xb, (l, 0), (width - 1, xb.shape[-1])))(padded,
+                xb, (l, 0), (width - 1, xb.shape[-1])))(pre_taps,
                                                         jnp.asarray(seq_lens))
     return out, (tail, hT)
 
@@ -197,9 +214,20 @@ def cache_batch_axes(cfg):
     return {"conv": 1, "state": 1, "pos": 0}
 
 
-# prefill() always scans a prompt from the zero SSM state; chunking would
-# need the scan to resume from the cached carry
-CHUNKED_PREFILL_OK = False
+# prefill() resumes the scan from the cached conv taps + SSM state (a fresh
+# cache is all-zero, which is bitwise identical to no carry), so chunked
+# prefill is exact — provided chunk boundaries land on multiples of
+# ssm_chunk so the chunk_step sequence matches the unchunked scan.
+CHUNKED_PREFILL_OK = True
+# decode has no cross-lane coupling: bursts may narrow to a lane prefix
+LANE_INDEPENDENT_DECODE = True
+
+
+def chunked_prefill_granularity(cfg) -> int:
+    """Chunk boundaries must be multiples of the SSD scan chunk for the
+    resumed scan to be bit-identical to the whole-prompt scan (identical
+    chunk_step sequence; the dt=0 padded tail steps are exact identities)."""
+    return int(cfg.ssm_chunk)
 
 
 def paged_cache_spec(cfg):
@@ -220,17 +248,25 @@ def prefill(params, cfg, batch, cache):
     b, s = tokens.shape
     lens = batch.get("lens")
     lens = jnp.full((b,), s, jnp.int32) if lens is None else jnp.asarray(lens, jnp.int32)
+    pos0 = batch.get("pos0")
+    pos0 = jnp.zeros((b,), jnp.int32) if pos0 is None else jnp.asarray(pos0, jnp.int32)
     x = L.embed(params["embed"], tokens, cfg)
 
-    def body(h, lp):
-        h, (tail, hT) = mamba_block(lp, h, cfg, seq_lens=lens)
+    # Resume from the cached carry unconditionally: a fresh cache is all-zero
+    # conv taps / state, bitwise identical to the no-carry scan, so one trace
+    # serves both whole-prompt and chunked (resumed) prefill.
+    def body(h, xs):
+        lp, cc, st = xs
+        h, (tail, hT) = mamba_block(lp, h, cfg, seq_lens=lens,
+                                    conv_init=cc, state_init=st)
         return h, (tail, hT)
 
-    h, (tails, states) = jax.lax.scan(body, x, params["blocks"])
+    h, (tails, states) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["state"]))
     cache = dict(cache)
     cache["conv"] = tails.astype(cache["conv"].dtype)
     cache["state"] = states
-    cache["pos"] = lens
+    cache["pos"] = pos0 + lens
     h = L.apply_norm(params["final_norm"], h, cfg)
     idx = jnp.clip(lens - 1, 0, s - 1)
     h_last = jnp.take_along_axis(h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]

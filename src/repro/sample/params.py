@@ -18,6 +18,7 @@ scheduler bit-identity tests extend to stochastic decoding.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Union
 
 import jax
@@ -68,11 +69,20 @@ class SamplingParams:
 GREEDY = SamplingParams()
 
 
-def _spec_key(spec: SamplingParams) -> np.ndarray:
-    k = jax.random.PRNGKey(int(spec.seed))
-    if spec.fold is not None:
-        k = jax.random.fold_in(k, int(spec.fold))
+@functools.lru_cache(maxsize=4096)
+def _seed_key(seed: int, fold: Optional[int]) -> np.ndarray:
+    # PRNGKey/fold_in are tiny jitted computations: memoize per (seed, fold)
+    # so repeat admissions of a request (or the same spec) cost zero device
+    # dispatches on the serve loop's host path
+    k = jax.random.PRNGKey(seed)
+    if fold is not None:
+        k = jax.random.fold_in(k, fold)
     return np.asarray(k)
+
+
+def _spec_key(spec: SamplingParams) -> np.ndarray:
+    return _seed_key(int(spec.seed),
+                     None if spec.fold is None else int(spec.fold))
 
 
 def lane_state(specs: Union[None, SamplingParams,
@@ -94,6 +104,8 @@ def lane_state(specs: Union[None, SamplingParams,
                  else dataclasses.replace(specs, fold=i) for i in range(b)]
     if len(specs) > b:
         raise ValueError(f"{len(specs)} sampling specs for {b} lanes")
+    if all(s is None for s in specs):
+        return greedy_state(b)
     rows = [s if s is not None else GREEDY for s in specs]
     keys = np.stack([_spec_key(s) for s in rows] +
                     [np.zeros((2,), np.uint32)] * (b - len(rows)))
@@ -102,19 +114,31 @@ def lane_state(specs: Union[None, SamplingParams,
 
 
 def _stack(rows: Sequence[SamplingParams], keys: np.ndarray) -> dict:
-    state = {name: jnp.asarray(np.asarray([getattr(r, name) for r in rows]),
-                               dtype)
+    # host-side (numpy) leaves on purpose: lane states are assembled on the
+    # scheduler's planning path every admission round, and eager jnp
+    # conversion here would cost one device dispatch PER FIELD per round —
+    # the jit boundary the state is passed into transfers them in one go
+    state = {name: np.asarray([getattr(r, name) for r in rows],
+                              np.dtype(dtype))
              for name, dtype in _FIELDS}
     # temperature <= 0 is greedy by definition: fold it into the flag so the
     # sampler's per-lane select is a single predicate
     state["greedy"] = state["greedy"] | (state["temperature"] <= 0.0)
-    state["key"] = jnp.asarray(keys, jnp.uint32)
+    state["key"] = np.asarray(keys, np.uint32)
     return state
 
 
+@functools.lru_cache(maxsize=256)
+def _greedy_state_cached(b: int) -> tuple:
+    st = _stack([GREEDY] * b, np.zeros((b, 2), np.uint32))
+    return tuple(st.items())
+
+
 def greedy_state(b: int) -> dict:
-    """All-greedy lane state (zero keys: greedy lanes never read them)."""
-    return _stack([GREEDY] * b, np.zeros((b, 2), np.uint32))
+    """All-greedy lane state (zero keys: greedy lanes never read them).
+    Memoized per lane count — all-greedy admission (the common case) reuses
+    one host-side state instead of restacking it every round."""
+    return dict(_greedy_state_cached(b))
 
 
 def is_all_greedy(state: dict) -> bool:
@@ -137,7 +161,8 @@ def slot_update(state: dict, lanes, sub: dict) -> dict:
     """Splice ``sub`` (lane count == len(lanes)) into ``state`` at ``lanes``
     via in-place ``.at[].set`` scatters — the admission path.  jit-safe."""
     lanes = jnp.asarray(lanes, jnp.int32)
-    return {k: v.at[lanes].set(sub[k].astype(v.dtype))
+    # states assembled on the host path carry numpy leaves; .at needs jax
+    return {k: jnp.asarray(v).at[lanes].set(sub[k].astype(v.dtype))
             for k, v in state.items()}
 
 

@@ -33,9 +33,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import sample as S
+from repro.core import paging as PG
 from repro.core import predicate as P
-from repro.models import (get_model, is_paged, paged_decode_ok, paged_view,
-                          paged_writeback, to_paged)
+from repro.models import (gather_lanes, get_model, is_paged, merge_lanes,
+                          paged_decode_ok, paged_view, paged_writeback,
+                          slot_update, to_paged)
 from repro.sample.processors import ban_pred, mask_logits
 
 
@@ -79,8 +81,25 @@ class ServeEngine:
         # would only warn), so gate it
         donate = (1, 2, 3, 4, 5, 7) if jax.default_backend() != "cpu" else ()
         self._decode_chunk = jax.jit(self._decode_chunk_impl,
-                                     static_argnames=("n_steps", "stochastic"),
+                                     static_argnames=("n_steps", "stochastic",
+                                                      "width"),
                                      donate_argnums=donate)
+        # serve-mode variants for the scheduler's async host loop: out_buf /
+        # p / n_gen must NOT be donated (the overlap harvest still holds the
+        # previous round's handles to them), so only the cache, the sampler
+        # state and (for the fused program) the per-round inputs go in place
+        serve_donate = (1, 7) if jax.default_backend() != "cpu" else ()
+        self._decode_chunk_serve = jax.jit(
+            self._decode_chunk_impl,
+            static_argnames=("n_steps", "stochastic", "width"),
+            donate_argnums=serve_donate)
+        fused_donate = ((1, 6, 7, 8, 9)
+                        if jax.default_backend() != "cpu" else ())
+        self._fused_step = jax.jit(
+            self._fused_step_impl,
+            static_argnames=("n_steps", "stochastic", "admit_stoch",
+                            "part_final", "part_stoch", "max_len", "width"),
+            donate_argnums=fused_donate)
         self._warned_gather_fallback = False
 
     def _sample(self, logits, sstate=None, out_buf=None, n_gen=None):
@@ -106,7 +125,8 @@ class ServeEngine:
 
     def _decode_chunk_impl(self, params, cache, out_buf, tok, p, n_gen,
                            lane_budget, sstate, *, n_steps: int,
-                           stochastic: bool = True):
+                           stochastic: bool = True,
+                           width: Optional[int] = None):
         """The decode hot loop as ONE XLA while: §2.3.4 dynamic exits.
 
         Every iteration decodes all lanes, but only the active partition
@@ -131,6 +151,48 @@ class ServeEngine:
         live for, and every such step runs a stochastic=True chunk.
         Returns (cache, out_buf, tok, p, n_gen, sstate, steps_run).
         """
+        return self._burst(params, cache, out_buf, tok, p, n_gen,
+                           lane_budget, sstate, n_steps=n_steps,
+                           stochastic=stochastic, width=width)
+
+    def _burst(self, params, cache, out_buf, tok, p, n_gen, lane_budget,
+               sstate, *, n_steps: int, stochastic: bool,
+               width: Optional[int]):
+        """Run the decode burst, optionally NARROWED to the first ``width``
+        lanes (a static pow2 bucket the scheduler derives from its host-side
+        occupancy view: compaction keeps live lanes at the low indices, so
+        the burst executes at the smallest bucket covering them — SVE
+        predicate-narrowing applied to the batch axis).  Lanes at or above
+        ``width`` are guaranteed inactive (p False) for the whole burst and
+        pass through untouched, so per-lane results are bit-identical to the
+        full-width burst — the scheduler only narrows families whose decode
+        is lane-independent (``lane_independent_decode``).  jit-safe."""
+        if width is None or width >= out_buf.shape[0]:
+            return self._decode_loop(params, cache, out_buf, tok, p, n_gen,
+                                     lane_budget, sstate, n_steps=n_steps,
+                                     stochastic=stochastic)
+        w = jnp.arange(width, dtype=jnp.int32)
+        sub_cache = gather_lanes(self.cfg, cache, w)
+        sub_state = S.gather_lanes(sstate, w)
+        (sub_cache, sub_out, sub_tok, sub_p, sub_ngen, sub_state,
+         steps) = self._decode_loop(
+            params, sub_cache, out_buf[:width], tok[:width], p[:width],
+            n_gen[:width], lane_budget[:width], sub_state,
+            n_steps=n_steps, stochastic=stochastic)
+        # merge_lanes (not slot_update): a narrowed PAGED burst scatter-
+        # stored its tokens into the shared pools riding sub_cache
+        cache = merge_lanes(self.cfg, cache, w, sub_cache)
+        sstate = S.slot_update(sstate, w, sub_state)
+        out_buf = out_buf.at[:width].set(sub_out)
+        tok = tok.at[:width].set(sub_tok)
+        p = p.at[:width].set(sub_p)
+        n_gen = n_gen.at[:width].set(sub_ngen)
+        return cache, out_buf, tok, p, n_gen, sstate, steps
+
+    def _decode_loop(self, params, cache, out_buf, tok, p, n_gen,
+                     lane_budget, sstate, *, n_steps: int, stochastic: bool):
+        """The while-loop body shared by ``_decode_chunk`` and the fused
+        serve step (identical trace, so the two compile the same loop)."""
         stop = self.stop_token
         b, max_out = out_buf.shape
         rows = jnp.arange(b)
@@ -191,25 +253,166 @@ class ServeEngine:
         return logits, paged_writeback(self.cfg, cache, view, pos)
 
     # ------------------------------------------------------------------
+    # fused serve step: prefill chunk(s) + admission + decode burst in ONE
+    # dispatch (the scalar-loop-tail elimination applied to the host loop)
+    # ------------------------------------------------------------------
+
+    def _seed_pages(self, cache, sub_cache, seed_tab, seed_len, max_len: int):
+        """Gather resident shared-prefix pages of the live paged ``cache``
+        into a dense prefill ``sub_cache`` (positions [0, seed_len) per row),
+        so suffix rows attend over the donor's K/V.  jit-safe."""
+        spec = self.model.paged_cache_spec(self.cfg)
+        m = seed_tab.shape[0]
+        mask = jnp.arange(max_len, dtype=jnp.int32)[None, :] < seed_len[:, None]
+        sub_cache = dict(sub_cache)
+        for key, lead in spec.items():
+            view = PG.gather_pages(cache[key + "_pages"], seed_tab,
+                                   n_lead=len(lead))
+            mm = mask.reshape((1,) * len(lead) + (m, 1, max_len, 1))
+            sub_cache[key] = jnp.where(mm, view.astype(sub_cache[key].dtype),
+                                       sub_cache[key])
+        return sub_cache
+
+    def _install_pages(self, cache, sub_cache, rows, cols, dsts, tab_rows,
+                       lanes):
+        """Scatter freshly prefilled K/V blocks ``(rows, cols)`` of the dense
+        ``sub_cache`` into physical pages ``dsts`` of the live paged
+        ``cache`` and install the page-table rows at ``lanes``.  Padding
+        entries aim at the trash page / out-of-range lanes, which JAX
+        scatters drop.  jit-safe."""
+        spec = self.model.paged_cache_spec(self.cfg)
+        cache = dict(cache)
+        n_pages = cache["page_table"].shape[1]
+        for key, lead in spec.items():
+            dn = sub_cache[key]                     # lead+(m,Hkv,S,Dh)
+            nl = len(lead)
+            shp = dn.shape
+            ps = shp[-2] // n_pages
+            dnp = dn.reshape(shp[:nl + 2] + (n_pages, ps, shp[-1]))
+            dnp = jnp.moveaxis(dnp, nl, 0)          # (m,)+lead+(Hkv,n,ps,D)
+            dnp = jnp.moveaxis(dnp, nl + 2, 1)      # (m,n_pages)+lead+...
+            blocks = dnp[rows, cols]                # (K,)+lead+(Hkv,ps,D)
+            cache[key + "_pages"] = PG.scatter_block(
+                cache[key + "_pages"], dsts, blocks, n_lead=nl)
+        cache["page_table"] = cache["page_table"].at[lanes].set(tab_rows)
+        return cache
+
+    def _splice_admission(self, cache, out_buf, tok, p, n_gen, budget, sstate,
+                          lanes, first_tok, sub_cache, sub_state, budgets,
+                          info):
+        """Replay the scheduler's admission tail inside the fused trace:
+        page installs, cache/sampler slot_update, and the per-lane decode
+        seeds.  ``lanes`` may carry out-of-range entries for padded rows —
+        every ``.at[]`` scatter drops them, which is how dummy-row trimming
+        happens without a host round-trip."""
+        if "copy_dsts" in info:
+            cache = self._install_pages(cache, sub_cache, info["copy_rows"],
+                                        info["copy_cols"], info["copy_dsts"],
+                                        info["tab_rows"], lanes)
+        cache = slot_update(self.cfg, cache, lanes, sub_cache)
+        sstate = S.slot_update(sstate, lanes, sub_state)
+        tok = tok.at[lanes].set(first_tok)
+        out_buf = out_buf.at[lanes].set(0)
+        out_buf = out_buf.at[lanes, 0].set(first_tok)
+        n_gen = n_gen.at[lanes].set(1)
+        budget = budget.at[lanes].set(budgets)
+        alive = (first_tok != self.stop_token) & (budgets > 1)
+        p = p.at[lanes].set(alive)
+        return cache, out_buf, tok, p, n_gen, budget, sstate
+
+    def _fused_step_impl(self, params, cache, out_buf, tok, p, n_gen, budget,
+                         sstate, admit, parts, *, n_steps: int,
+                         stochastic: bool, admit_stoch: bool,
+                         part_final: tuple, part_stoch: tuple, max_len: int,
+                         width: Optional[int] = None):
+        """ONE dispatch for a whole scheduling round: the round's chunked-
+        prefill chunk(s), the admission sub-batch (zero-init -> prefix seed
+        -> prefill -> first-token sample -> page install -> lane splice), and
+        an ``n_steps`` decode burst — the same ops the legacy host loop
+        issued as separate dispatches, in the same order, now fused so the
+        host touches the device once per round.
+
+        ``admit`` is None or a dict of device arrays assembled host-side
+        (batch / lanes / budgets / sampler rows / page-copy plan); ``parts``
+        is a tuple of per-partial dicts (batch + accumulating sub-cache,
+        plus splice data when the chunk is final).  ``part_final`` /
+        ``part_stoch`` are static per-partial flags.  Returns
+        (cache, out_buf, tok, p, n_gen, budget, sstate, steps_run,
+        new_caches-of-non-final-partials).
+        """
+        new_part_caches = []
+        for i, part in enumerate(parts):
+            sub_in = part["cache"]
+            if "seed_tab" in part:
+                # first chunk of a prefix-shared partial: the donor's page
+                # install has executed by this point in the trace
+                sub_in = self._seed_pages(cache, sub_in, part["seed_tab"],
+                                          part["seed_len"], max_len)
+            logits, sub = self.model.prefill(params, self.cfg, part["batch"],
+                                             sub_in)
+            if not part_final[i]:
+                new_part_caches.append(sub)
+                continue
+            if part_stoch[i]:
+                first, sub_state = self._sample(logits, part["sub_state"])
+            else:
+                first = self._sample(logits)
+                sub_state = part["sub_state"]
+            (cache, out_buf, tok, p, n_gen, budget,
+             sstate) = self._splice_admission(
+                cache, out_buf, tok, p, n_gen, budget, sstate, part["lane"],
+                first, sub, sub_state, part["budget"], part)
+        if admit is not None:
+            batch = admit["batch"]
+            m = batch["tokens"].shape[0]
+            sub_cache = self.make_cache(m, max_len, batch)
+            if "seed_tab" in admit:
+                sub_cache = self._seed_pages(cache, sub_cache,
+                                             admit["seed_tab"],
+                                             admit["seed_len"], max_len)
+            logits, sub_cache = self.model.prefill(params, self.cfg, batch,
+                                                   sub_cache)
+            if admit_stoch:
+                first, sub_state = self._sample(logits, admit["sub_state"])
+            else:
+                first = self._sample(logits)
+                sub_state = admit["sub_state"]
+            (cache, out_buf, tok, p, n_gen, budget,
+             sstate) = self._splice_admission(
+                cache, out_buf, tok, p, n_gen, budget, sstate,
+                admit["lanes"], first, sub_cache, sub_state,
+                admit["budgets"], admit)
+        cache, out_buf, tok, p, n_gen, sstate, steps = self._burst(
+            params, cache, out_buf, tok, p, n_gen, budget, sstate,
+            n_steps=n_steps, stochastic=stochastic, width=width)
+        return (cache, out_buf, tok, p, n_gen, budget, sstate, steps,
+                tuple(new_part_caches))
+
+    # ------------------------------------------------------------------
     # one-shot batch API
     # ------------------------------------------------------------------
 
     def make_paged_cache(self, b: int, max_len: int, *, page_size: int,
-                         pool_pages: int, batch: Optional[dict] = None):
+                         pool_pages: int, batch: Optional[dict] = None,
+                         src_len: Optional[int] = None):
         """Allocate a paged cache: shared page pools + per-lane page table."""
         if self.cfg.family == "encdec":
+            sl = src_len if src_len is not None else batch["src_emb"].shape[1]
             return self.model.make_paged_cache(
-                self.cfg, b, max_len, src_len=batch["src_emb"].shape[1],
+                self.cfg, b, max_len, src_len=sl,
                 page_size=page_size, pool_pages=pool_pages)
         return self.model.make_paged_cache(self.cfg, b, max_len,
                                            page_size=page_size,
                                            pool_pages=pool_pages)
 
-    def make_cache(self, b: int, max_len: int, batch: Optional[dict] = None):
-        """Allocate a cache for ``b`` request lanes (family-dispatched)."""
+    def make_cache(self, b: int, max_len: int, batch: Optional[dict] = None,
+                   src_len: Optional[int] = None):
+        """Allocate a cache for ``b`` request lanes (family-dispatched).
+        encdec sizes its cross-attention memory from ``batch["src_emb"]`` or
+        an explicit ``src_len`` (the scheduler's batch-free allocations)."""
         if self.cfg.family == "encdec":
-            return self.model.make_cache(self.cfg, b, max_len,
-                                         src_len=batch["src_emb"].shape[1])
+            sl = src_len if src_len is not None else batch["src_emb"].shape[1]
+            return self.model.make_cache(self.cfg, b, max_len, src_len=sl)
         if self.cfg.family == "ssm":
             return self.model.make_cache(self.cfg, b)
         return self.model.make_cache(self.cfg, b, max_len)

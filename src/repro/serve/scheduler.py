@@ -27,12 +27,24 @@ prefill).  Compacting lanes never moves a page: only the table rows permute.
 
 Everything that moves request state is an index gather/scatter; nothing is
 recompiled when traffic gets ragged — the vector-length-agnostic contract.
+
+The default serve path is the FUSED step program (``fused=True``): one round's
+prefill chunk(s), admission tail and decode burst trace into a SINGLE XLA
+dispatch (``ServeEngine._fused_step``), so the host's per-round work is pure
+bookkeeping — the scalar loop tail the paper's VLA model eliminates at
+instruction level, eliminated at dispatch level.  With ``overlap=True`` the
+host loop goes ASYNC on top: round N+1 is dispatched before round N's results
+are read back, and the one blocking sync per round harvests the PREVIOUS
+round from prefetched handles — admission plans against a one-round-stale
+lane view, which only under-reports free lanes (token streams are
+batch-composition independent, so results are unchanged).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import jax.numpy as jnp
@@ -40,8 +52,9 @@ import numpy as np
 
 from repro import sample as S
 from repro.core import paging as PG
-from repro.core import partition as PT
-from repro.models import chunked_prefill_ok, gather_lanes, get_model, slot_update
+from repro.models import (chunked_prefill_granularity, chunked_prefill_ok,
+                          gather_lanes, get_model, lane_independent_decode,
+                          slot_update)
 
 from .engine import ServeEngine
 
@@ -174,6 +187,37 @@ class _Partial:
     done: int                           # suffix tokens prefilled so far
     pos0: int                           # prefix-shared start offset
     budget: int
+    # prefix-seed arrays (seed_tab, seed_len), consumed by the FIRST chunk:
+    # seeding must read the live cache AFTER the donor's page install has
+    # executed — at _start_partial time that install may still be riding the
+    # current round's fused dispatch
+    seed: Optional[tuple] = None
+
+
+@dataclasses.dataclass
+class _AdmitPlan:
+    """Host-side plan for one round's admission sub-batch: everything the
+    device tail needs, produced without touching the device (shared by the
+    legacy executor and the fused-step assembly)."""
+    reqs: list
+    plans: list                         # _PagePlan per req (paged) or []
+    lanes: np.ndarray                   # (n,) target lanes
+    n: int
+    n_pad: int                          # pow2-bucketed row count
+    toks: np.ndarray                    # (n_pad, plen_pad)
+    lens: np.ndarray                    # (n_pad,)
+    pos0_pad: np.ndarray                # (n_pad,)
+    budgets: np.ndarray                 # (n,)
+    specs: list                         # effective SamplingParams per req
+
+
+@dataclasses.dataclass
+class _PartStep:
+    """One chunk of one chunked-prefill partial, planned for this round."""
+    part: _Partial
+    batch: dict                         # numpy arrays (tokens/lens/pos0/+extras)
+    final: bool
+    seed: Optional[tuple] = None        # first-chunk prefix seed (tab, len)
 
 
 @dataclasses.dataclass
@@ -222,9 +266,24 @@ class ContinuousBatchingScheduler:
         expert capacity never drops — per-chunk dispatch groups see
         different co-tokens, the same batch-composition sensitivity ALL MoE
         admission batching has (size ``capacity_factor`` accordingly).
-        Families must declare ``CHUNKED_PREFILL_OK`` (dense/moe; ssm+hybrid
-        carry scan state outside the positional cache).  None = whole-prompt
-        prefill.
+        Families declare ``CHUNKED_PREFILL_OK`` (all five now do) and a
+        ``chunked_prefill_granularity`` the chunk must be a multiple of
+        (ssm/hybrid: ``ssm_chunk``, so the resumed SSD scan replays the
+        same chunk_step sequence as the unchunked scan).  None =
+        whole-prompt prefill.
+    fused: run each round's prefill chunk(s) + admission + decode burst as
+        ONE jitted dispatch (``ServeEngine._fused_step``) instead of
+        separate prefill / decode dispatches.  Bit-identical to the unfused
+        loop (same ops, same order; padded admission rows splice through
+        index scatters whose out-of-range lanes drop).
+    overlap: async host loop — dispatch round N+1 before reading round N's
+        results, then harvest round N from prefetched host copies: ONE
+        blocking sync per round.  Admission sees a one-round-stale lane
+        view (under-reports free lanes only); ``finished_at`` timestamps
+        shift by the harvest delay.  Requires ``fused``.
+    src_len: encoder memory length for encdec serving (every request's
+        ``src_emb`` extra is zero-padded to this length at submit; required
+        for the encdec family, ignored otherwise).
     """
 
     def __init__(self, engine: ServeEngine, *, capacity: int, max_len: int,
@@ -232,11 +291,16 @@ class ContinuousBatchingScheduler:
                  page_size: Optional[int] = None,
                  pool_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 prefill_chunk: Optional[int] = None):
-        if engine.cfg.family == "encdec":
-            raise NotImplementedError(
-                "encdec caches need src_emb/src_len at allocation time; "
-                "serve encdec batches via ServeEngine.generate instead")
+                 prefill_chunk: Optional[int] = None,
+                 fused: bool = True, overlap: bool = False,
+                 src_len: Optional[int] = None):
+        if engine.cfg.family == "encdec" and src_len is None:
+            raise ValueError(
+                "encdec serving needs src_len= (the padded encoder memory "
+                "length caches are allocated for)")
+        if overlap and not fused:
+            raise ValueError("overlap=True requires fused=True (the async "
+                             "harvest hangs off the fused dispatch handles)")
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
@@ -245,7 +309,17 @@ class ContinuousBatchingScheduler:
                     f"family '{engine.cfg.family}' does not support chunked "
                     "prefill (needs pos0 suffix-prefill with all cross-chunk "
                     "state in the KV cache)")
+            gran = chunked_prefill_granularity(engine.cfg)
+            if prefill_chunk % gran:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a multiple of "
+                    f"family '{engine.cfg.family}' chunked-prefill "
+                    f"granularity {gran} (chunk boundaries off the SSD scan "
+                    "grid would replay a different chunk_step sequence)")
         self.engine = engine
+        self.fused = fused
+        self.overlap = overlap
+        self.src_len = src_len
         self.capacity = capacity
         self.chunk = chunk
         self.compact_threshold = compact_threshold
@@ -272,7 +346,7 @@ class ContinuousBatchingScheduler:
             self.trash_page = self.pool_pages
             self.cache = engine.make_paged_cache(
                 b, max_len, page_size=page_size,
-                pool_pages=self.pool_pages + 1)
+                pool_pages=self.pool_pages + 1, src_len=src_len)
             self.cache["page_table"] = jnp.full_like(
                 self.cache["page_table"], self.trash_page)
             self.allocator = PageAllocator(self.pool_pages)
@@ -281,7 +355,7 @@ class ContinuousBatchingScheduler:
                 get_model(engine.cfg), "PAGED_PREFIX_OK", False)
             self.lane_pages: dict[int, list] = {}     # lane -> held page ids
         else:
-            self.cache = engine.make_cache(b, max_len)
+            self.cache = engine.make_cache(b, max_len, src_len=src_len)
             self.prefix_sharing = False
         self.max_len = max_len
         max_out = engine.max_new_tokens
@@ -298,6 +372,10 @@ class ContinuousBatchingScheduler:
         # the decode chunk compiles the argmax-only (legacy-cost) body.
         self.sstate = S.greedy_state(b)
         self._lane_stoch = np.zeros((b,), bool)
+        # families whose decode has no cross-lane coupling let the fused
+        # burst narrow to the occupied pow2 lane bucket (SVE predicate
+        # narrowing on the batch axis); MoE's shared expert capacity forbids it
+        self._lane_independent = lane_independent_decode(engine.cfg)
         # pending = reserved by a chunk-prefilling request: occupied (never
         # recycled, moves coherently under compaction) but excluded from
         # decode commits and harvest until its final chunk splices in
@@ -307,7 +385,23 @@ class ContinuousBatchingScheduler:
                       "occupancy_trace": [], "page_occupancy_trace": [],
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "prefill_tokens": 0, "page_waits": 0,
-                      "prefill_chunks": 0}
+                      "prefill_chunks": 0, "dispatches": 0, "host_syncs": 0}
+        # async-overlap state: the in-flight round's result handles (with
+        # host copies prefetched) plus the lane view they were dispatched
+        # under; harvested one round late at the single blocking sync
+        self._stash: Optional[dict] = None
+        # host mirror of the device n_gen at the last harvest point — what
+        # the legacy loop read back as gen_before (stale rows of free lanes
+        # included), kept so active_lane_steps accounting never needs an
+        # extra device sync
+        self._host_ngen = np.zeros((b,), np.int64)
+        # lanes whose admission/final-chunk splice rides THIS round's
+        # dispatch (their n_gen becomes 1 in-flight)
+        self._round_admitted: list[int] = []
+        # wall-clock request timestamps: submitted -> first_token (measured
+        # at the dispatch that commits the first token) -> finished (at
+        # harvest); the serving benchmark derives TTFT/TPOT from these
+        self.req_times: dict[int, dict] = {}
 
     # ------------------------------------------------------------------
     # public API
@@ -325,11 +419,32 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"prompt length {len(tokens)} exceeds lane capacity "
                 f"max_len={self.max_len}")
+        if self.engine.cfg.family == "encdec":
+            extras = self._pad_encdec_extras(extras)
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, tokens, max_new_tokens, arrival,
                                   extras, sampling))
+        self.req_times[rid] = {"submitted": time.perf_counter()}
         return rid
+
+    def _pad_encdec_extras(self, extras: Optional[dict]) -> dict:
+        """Zero-pad a request's encoder memory to the scheduler-wide
+        ``src_len`` so every admission sub-batch stacks homogeneously; the
+        true length rides along as ``src_lens`` (the attention predicate)."""
+        if not extras or "src_emb" not in extras:
+            raise ValueError("encdec requests need extras={'src_emb': "
+                             "(S_src, d_model) encoder input embeddings}")
+        emb = np.asarray(extras["src_emb"])
+        if emb.ndim != 2:
+            raise ValueError(f"src_emb must be 2-D, got shape {emb.shape}")
+        if emb.shape[0] > self.src_len:
+            raise ValueError(f"src_emb length {emb.shape[0]} exceeds "
+                             f"src_len={self.src_len}")
+        sl = int(extras.get("src_lens", emb.shape[0]))
+        pad = np.zeros((self.src_len, emb.shape[1]), emb.dtype)
+        pad[:emb.shape[0]] = emb
+        return dict(extras, src_emb=pad, src_lens=np.int32(sl))
 
     def occupancy(self) -> float:
         return float((self.lane_rid >= 0).sum()) / self.capacity
@@ -338,7 +453,13 @@ class ContinuousBatchingScheduler:
         """One scheduling round: compact, advance chunked prefills, admit,
         decode a chunk, harvest.  Chunked prefills advance by at most one
         chunk per round, so resident lanes decode between a long prompt's
-        chunks instead of stalling for its whole prefill."""
+        chunks instead of stalling for its whole prefill.  ``fused=True``
+        (the default) issues the round's device work as ONE dispatch;
+        ``overlap=True`` additionally harvests one round late from
+        prefetched handles (a single blocking sync per round)."""
+        self._round_admitted = []
+        if self.fused:
+            return self._step_fused()
         self._maybe_compact()
         self._advance_partials()
         self._admit()
@@ -351,6 +472,7 @@ class ContinuousBatchingScheduler:
         if occupied.any():
             eng = self.engine
             gen_before = int(self.n_gen.sum())
+            self.stats["dispatches"] += 1
             (self.cache, self.out_buf, self.tok, self.p,
              self.n_gen, self.sstate, steps) = eng._decode_chunk(
                 eng.params, self.cache, self.out_buf, self.tok, self.p,
@@ -363,17 +485,175 @@ class ContinuousBatchingScheduler:
             self.stats["decode_steps"] += steps
             self.stats["lane_steps"] += steps * self.capacity
             self.stats["active_lane_steps"] += int(self.n_gen.sum()) - gen_before
+            self.stats["host_syncs"] += 3       # gen_before, steps, gen_after
             # the clock is in decode-step units: advance by what actually ran
             self.now += steps
         else:
-            self.now += self.chunk              # idle tick: wait for arrivals
+            self._idle_tick()
         self.stats["steps"] += 1
         self._harvest()
+
+    def _step_fused(self):
+        """One round through the fused step program: all host work is
+        planning/bookkeeping, all device work is one dispatch.  Non-overlap
+        mode syncs on this round's results (same observable order as the
+        legacy loop); overlap mode stashes the handles and harvests the
+        PREVIOUS round instead."""
+        eng = self.engine
+        self._maybe_compact()
+        part_steps = self._plan_partial_steps()
+        plan = self._plan_admission()
+        occupied = self.lane_rid >= 0
+        self.stats["occupancy_trace"].append(float(occupied.sum())
+                                             / self.capacity)
+        if self.page_size is not None:
+            self.stats["page_occupancy_trace"].append(
+                self.allocator.live_pages / self.pool_pages)
+        self.stats["steps"] += 1
+        if plan is None and not part_steps and not occupied.any():
+            self._flush_stash()                 # can only be a no-op stash
+            self._idle_tick()
+            return
+        self.stats["dispatches"] += 1
+        if plan is None and not part_steps:
+            width = self._burst_width()
+            (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
+             self.sstate, steps_h) = eng._decode_chunk_serve(
+                eng.params, self.cache, self.out_buf, self.tok, self.p,
+                self.n_gen, self.budget, self.sstate,
+                n_steps=self.chunk,
+                stochastic=bool(self._lane_stoch.any()), width=width)
+        else:
+            admit = self._assemble_admit(plan)
+            parts, part_final, part_stoch = self._assemble_parts(part_steps)
+            admit_stoch = bool(plan is not None and any(
+                self._is_stochastic(s) for s in plan.specs))
+            # _lane_stoch / width read AFTER the admit/part assembly committed
+            # this round's splices — a just-admitted stochastic lane must get
+            # a stochastic decode burst, and a lane spliced in this round must
+            # be inside the burst bucket (same ordering as the unfused loop)
+            stoch = bool(self._lane_stoch.any())
+            width = self._burst_width()
+            (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
+             self.budget, self.sstate, steps_h,
+             parts_out) = eng._fused_step(
+                eng.params, self.cache, self.out_buf, self.tok, self.p,
+                self.n_gen, self.budget, self.sstate, admit, parts,
+                n_steps=self.chunk, stochastic=stoch,
+                admit_stoch=admit_stoch, part_final=part_final,
+                part_stoch=part_stoch, max_len=self.max_len, width=width)
+            nonfinal = [s.part for s in part_steps if not s.final]
+            for part, new_cache in zip(nonfinal, parts_out):
+                part.sub_cache = new_cache
+        if self.overlap:
+            self._push_stash(steps_h, width)
+        else:
+            steps = int(steps_h)
+            self.stats["host_syncs"] += 2       # steps + n_gen readback
+            self.stats["decode_steps"] += steps
+            self.stats["lane_steps"] += steps * (width or self.capacity)
+            ngen = np.asarray(self.n_gen)
+            base = self._host_ngen.copy()
+            base[self._round_admitted] = 1
+            self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
+            self._host_ngen = ngen.astype(np.int64)
+            self.now += steps
+            self._harvest()
+
+    def _burst_width(self):
+        """Pow2 lane bucket the fused decode burst may narrow to, or None for
+        full width.  Compaction packs live lanes low and whole-prefill
+        admissions fill low free lanes first, so the highest occupied
+        non-pending lane bounds every lane the burst can commit to; in
+        overlap mode the host view lags one harvest and is a SUPERSET of the
+        live lanes (conservative).  Only lane-independent families qualify —
+        dropping (dead) lanes under MoE changes expert-capacity overflow."""
+        if not self._lane_independent:
+            return None
+        cand = np.flatnonzero((self.lane_rid >= 0) & ~self._lane_pending)
+        if cand.size == 0:
+            return None
+        w = _next_pow2(int(cand[-1]) + 1)
+        return w if w < self.capacity else None
+
+    def _idle_tick(self):
+        """No lane occupied and nothing admissible: fast-forward the
+        decode-step clock straight to the next arrival instead of spinning
+        chunk-sized idle rounds (the scalar idle tail of the host loop)."""
+        nxt = min((r.arrival for r in self.queue), default=None)
+        if nxt is not None and nxt > self.now:
+            self.now = float(nxt)
+        else:
+            self.now += self.chunk
+
+    # ------------------------------------------------------------------
+    # async overlap: one-round-delayed harvest from prefetched handles
+    # ------------------------------------------------------------------
+
+    def _push_stash(self, steps_h, width=None):
+        """Prefetch this round's result handles to the host, harvest the
+        PREVIOUS round, then snapshot the post-harvest lane view the new
+        stash must be interpreted under (lanes freed just now must not be
+        double-harvested next round)."""
+        for a in (self.p, self.out_buf, self.n_gen, steps_h):
+            a.copy_to_host_async()
+        prev = self._stash
+        self._stash = {"p": self.p, "out": self.out_buf, "ngen": self.n_gen,
+                       "steps": steps_h, "width": width,
+                       "admitted": list(self._round_admitted)}
+        if prev is not None:
+            self._harvest_stash(prev)
+        self._stash["lane_rid"] = self.lane_rid.copy()
+        self._stash["pending"] = self._lane_pending.copy()
+
+    def _flush_stash(self):
+        if self._stash is not None:
+            st, self._stash = self._stash, None
+            self._harvest_stash(st)
+
+    def _harvest_stash(self, st):
+        """The round's SINGLE blocking sync: materialize the prefetched
+        handles, account the decode burst, and harvest finished lanes under
+        the lane view the stash was created with."""
+        self.stats["host_syncs"] += 1
+        p = np.asarray(st["p"])
+        out = np.asarray(st["out"])
+        ngen = np.asarray(st["ngen"])
+        steps = int(st["steps"])
+        self.stats["decode_steps"] += steps
+        self.stats["lane_steps"] += steps * (st.get("width") or self.capacity)
+        base = self._host_ngen.copy()
+        base[st["admitted"]] = 1
+        self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
+        self._host_ngen = ngen.astype(np.int64)
+        self.now += steps
+        finished = np.flatnonzero((st["lane_rid"] >= 0) & ~p & ~st["pending"])
+        if finished.size == 0:
+            return
+        t = time.perf_counter()
+        for lane in finished:
+            lane = int(lane)
+            rid = int(st["lane_rid"][lane])
+            n = int(ngen[lane])
+            self.results[rid] = {"tokens": out[lane, :n].copy(),
+                                 "n_generated": n,
+                                 "finished_at": self.now}
+            self.req_times[rid]["finished"] = t
+            self.lane_rid[lane] = -1
+            self._lane_stoch[lane] = False
+            if self.page_size is not None:
+                for pid in self.lane_pages.pop(lane):
+                    if self.allocator.release(pid):
+                        self.prefix_index.drop(pid)
+        if self.page_size is not None:
+            self.cache["page_table"] = self.cache["page_table"].at[
+                jnp.asarray(finished, jnp.int32)].set(self.trash_page)
 
     def run(self) -> dict[int, dict]:
         """Drain the queue and all live lanes; returns {rid: result}."""
         while self.queue or (self.lane_rid >= 0).any():
             self.step()
+        self._flush_stash()
         return self.results
 
     # ------------------------------------------------------------------
@@ -434,9 +714,9 @@ class ContinuousBatchingScheduler:
             self.stats["prefix_hits"] -= 1
             self.stats["prefix_hit_tokens"] -= plan.pos0
 
-    def _admit(self):
-        """Prefill due queued requests as one sub-batch and splice them into
-        free lanes (slot_update = the in-place `.at[]` scatter).
+    def _plan_admission(self) -> Optional[_AdmitPlan]:
+        """Scan the queue and plan this round's admission sub-batch — pure
+        host work (no device touch beyond allocator/prefix bookkeeping).
 
         The whole queue is scanned (a not-yet-due request must not block due
         ones behind it); FIFO order is preserved among the due.  One prefill
@@ -462,7 +742,11 @@ class ContinuousBatchingScheduler:
                 rest.append(req)
                 continue
             keys = frozenset(req.extras) if req.extras else frozenset()
-            chunkable = self.prefill_chunk is not None and not req.extras
+            # extras ride chunked prefill only when they are per-request
+            # constants the FIRST chunk consumes whole (encdec's encoder
+            # memory); token-aligned extras would need per-chunk slicing
+            chunkable = self.prefill_chunk is not None and (
+                not req.extras or self.engine.cfg.family == "encdec")
             if extras_keys is not None and keys != extras_keys:
                 rest.append(req)
                 continue
@@ -501,10 +785,9 @@ class ContinuousBatchingScheduler:
                 extras_keys = keys
         self.queue = collections.deque(rest)
         if not batch_reqs:
-            return
-        lanes = free[:len(batch_reqs)]
-        eng = self.engine
+            return None
         n = len(batch_reqs)
+        lanes = free[:n]
         pos0 = np.array([pl.pos0 for pl in plans] or [0] * n, np.int32)
         # bucket the prefill shape (rows to a power of two, columns to a
         # power of two capped at max_len) so a ragged trace compiles a
@@ -524,27 +807,60 @@ class ContinuousBatchingScheduler:
             lens[i] = len(suffix)
             pos0_pad[i] = pos0[i]
         self.stats["prefill_tokens"] += int(lens[:n].sum())
-        batch = {"tokens": jnp.asarray(toks), "lens": jnp.asarray(lens)}
-        if self.page_size is not None:
-            batch["pos0"] = jnp.asarray(pos0_pad)
-        if batch_reqs[0].extras:
-            for k in batch_reqs[0].extras:
-                batch[k] = jnp.stack([jnp.asarray(r.extras[k])
-                                      for r in batch_reqs]
-                                     + [jnp.zeros_like(jnp.asarray(
-                                         batch_reqs[0].extras[k]))] *
-                                     (n_pad - n))
+        specs = [self._effective_spec(r) for r in batch_reqs]
+        if plans:
+            budgets = np.asarray([pl.budget for pl in plans], np.int32)
+        else:
+            budgets = np.asarray([self._budget_for(r, int(lens[i]))
+                                  for i, r in enumerate(batch_reqs)], np.int32)
+        t = time.perf_counter()
+        for r in batch_reqs:
+            self.req_times[r.rid]["first_token"] = t
+        return _AdmitPlan(reqs=batch_reqs, plans=plans, lanes=lanes, n=n,
+                          n_pad=n_pad, toks=toks, lens=lens,
+                          pos0_pad=pos0_pad, budgets=budgets, specs=specs)
 
+    def _admit_batch(self, plan: _AdmitPlan) -> dict:
+        """Device-ready prefill batch for an admission plan (dummy rows of
+        ``src_lens`` pad to 1, not 0 — an all-masked attention row would
+        produce NaNs; everything else zero-pads)."""
+        # numpy leaves on purpose: the batch crosses a jit boundary right
+        # after assembly, so eager jnp conversion here would pay one device
+        # dispatch per field per admission round on the serve loop's host path
+        batch = {"tokens": plan.toks, "lens": plan.lens}
+        if self.page_size is not None:
+            batch["pos0"] = plan.pos0_pad
+        r0 = plan.reqs[0]
+        if r0.extras:
+            for k in r0.extras:
+                proto = np.asarray(r0.extras[k])
+                pad = (np.ones_like(proto) if k == "src_lens"
+                       else np.zeros_like(proto))
+                batch[k] = np.stack([np.asarray(r.extras[k])
+                                     for r in plan.reqs]
+                                    + [pad] * (plan.n_pad - plan.n))
+        return batch
+
+    def _admit(self):
+        """Unfused admission executor: prefill the planned sub-batch as its
+        own dispatch and splice it into the recycled lanes (slot_update =
+        the in-place `.at[]` scatter)."""
+        plan = self._plan_admission()
+        if plan is None:
+            return
+        eng = self.engine
+        n, n_pad, lanes = plan.n, plan.n_pad, plan.lanes
+        batch = self._admit_batch(plan)
         sub_cache = eng.make_cache(n_pad, self.max_len, batch)
         if self.page_size is not None:
-            sub_cache = self._seed_shared_prefix(sub_cache, plans, n_pad)
+            sub_cache = self._seed_shared_prefix(sub_cache, plan.plans, n_pad)
+        self.stats["dispatches"] += 1
         logits, sub_cache = eng._prefill(eng.params, batch, sub_cache)
         # per-request sampler rows: built from each request's OWN spec/seed
         # (dummy pad rows are greedy with a zero key), first token sampled
         # through the same repro.sample entry point the decode loop uses
-        specs = [self._effective_spec(r) for r in batch_reqs]
-        sub_state = S.lane_state(specs, n_pad)
-        if any(self._is_stochastic(s) for s in specs):
+        sub_state = S.lane_state(plan.specs, n_pad)
+        if any(self._is_stochastic(s) for s in plan.specs):
             first_tok, sub_state = eng._sample(logits, sub_state)
         else:
             # all-greedy admission skips the stochastic pipeline (greedy
@@ -552,8 +868,8 @@ class ContinuousBatchingScheduler:
             first_tok = eng._sample(logits)
         first_tok = first_tok[:n]
         if self.page_size is not None:
-            self._copy_pages(sub_cache, plans, lanes)
-            for req, pl in zip(batch_reqs, plans):
+            self._copy_pages(sub_cache, plan.plans, lanes)
+            for req, pl in zip(plan.reqs, plan.plans):
                 self._register_prefix(req, pl)
         if n_pad > n:                               # drop the dummy rows
             sub_cache = gather_lanes(eng.cfg, sub_cache,
@@ -565,11 +881,7 @@ class ContinuousBatchingScheduler:
         self.sstate = S.slot_update(
             self.sstate, lane_idx,
             S.gather_lanes(sub_state, jnp.arange(n, dtype=jnp.int32)))
-        if plans:
-            budgets = np.asarray([pl.budget for pl in plans], np.int32)
-        else:
-            budgets = np.asarray([self._budget_for(r, int(lens[i]))
-                                  for i, r in enumerate(batch_reqs)], np.int32)
+        budgets = plan.budgets
         self.tok = self.tok.at[lane_idx].set(first_tok)
         self.out_buf = self.out_buf.at[lane_idx].set(0)
         self.out_buf = self.out_buf.at[lane_idx, 0].set(first_tok)
@@ -577,9 +889,54 @@ class ContinuousBatchingScheduler:
         self.budget = self.budget.at[lane_idx].set(jnp.asarray(budgets))
         alive = (first_tok != eng.stop_token) & (jnp.asarray(budgets) > 1)
         self.p = self.p.at[lane_idx].set(alive)
-        for i, r in enumerate(batch_reqs):
+        for i, r in enumerate(plan.reqs):
             self.lane_rid[lanes[i]] = r.rid
-            self._lane_stoch[lanes[i]] = self._is_stochastic(specs[i])
+            self._lane_stoch[lanes[i]] = self._is_stochastic(plan.specs[i])
+            self._round_admitted.append(int(lanes[i]))
+
+    def _assemble_admit(self, plan: Optional[_AdmitPlan]) -> Optional[dict]:
+        """Turn an admission plan into the fused step's ``admit`` input:
+        device arrays only, padded rows aimed at out-of-range lanes (index
+        scatters drop them) and padded page copies at the trash page.  Also
+        commits the host-side lane bookkeeping the splice implies."""
+        if plan is None:
+            return None
+        lanes = np.full((plan.n_pad,), self.capacity, np.int32)
+        lanes[:plan.n] = plan.lanes
+        budgets = np.zeros((plan.n_pad,), np.int32)
+        budgets[:plan.n] = plan.budgets
+        admit = {"batch": self._admit_batch(plan),
+                 "lanes": lanes,
+                 "budgets": budgets,
+                 "sub_state": S.lane_state(plan.specs, plan.n_pad)}
+        if self.page_size is not None:
+            seed = self._seed_arrays(plan.plans, plan.n_pad)
+            if seed is not None:
+                admit["seed_tab"], admit["seed_len"] = seed
+            rows, cols, dsts, tab_rows = self._page_copy_plan(plan.plans)
+            kpad = _next_pow2(len(rows))
+            rows_a = np.zeros((kpad,), np.int32)
+            rows_a[:len(rows)] = rows
+            cols_a = np.zeros((kpad,), np.int32)
+            cols_a[:len(cols)] = cols
+            dsts_a = np.full((kpad,), self.trash_page, np.int32)
+            dsts_a[:len(dsts)] = dsts
+            tab_full = np.zeros((plan.n_pad, self.n_pages), np.int32)
+            tab_full[:plan.n] = tab_rows
+            admit["copy_rows"] = rows_a
+            admit["copy_cols"] = cols_a
+            admit["copy_dsts"] = dsts_a
+            admit["tab_rows"] = tab_full
+            for i, pl in enumerate(plan.plans):
+                self.lane_pages[int(plan.lanes[i])] = pl.shared + pl.new
+            for req, pl in zip(plan.reqs, plan.plans):
+                self._register_prefix(req, pl)
+        for i, r in enumerate(plan.reqs):
+            self.lane_rid[plan.lanes[i]] = r.rid
+            self._lane_stoch[plan.lanes[i]] = self._is_stochastic(
+                plan.specs[i])
+            self._round_admitted.append(int(plan.lanes[i]))
+        return admit
 
     def _effective_spec(self, req: Request):
         """The request's own SamplingParams, or the engine-wide default —
@@ -613,21 +970,30 @@ class ContinuousBatchingScheduler:
         lane = int(lane)
         budget = (plan.budget if plan is not None
                   else self._budget_for(req, len(req.tokens)))
-        sub_cache = eng.make_cache(1, self.max_len)
-        if plan is not None and plan.shared:
-            sub_cache = self._seed_shared_prefix(sub_cache, [plan], 1)
+        sub_cache = eng.make_cache(1, self.max_len, src_len=self.src_len)
+        seed = (self._seed_arrays([plan], 1)
+                if plan is not None and plan.shared else None)
         self.lane_rid[lane] = req.rid
         self._lane_pending[lane] = True
         self._partials.append(_Partial(
             req=req, plan=plan, lane=lane, sub_cache=sub_cache, done=0,
-            pos0=plan.pos0 if plan is not None else 0, budget=budget))
+            pos0=plan.pos0 if plan is not None else 0, budget=budget,
+            seed=seed))
 
-    def _advance_partials(self):
-        """Run at most ONE prefill chunk per pending request, splicing those
-        that finish.  Chunk widths bucket to powers of two capped at the
-        row's remaining extent, so the `dynamic_update_slice` at pos0+done
-        never clamps (a lone row's suffix always fits its cache tail)."""
-        still = []
+    def _plan_partial_steps(self) -> list[_PartStep]:
+        """Plan at most ONE prefill chunk per pending request — pure host
+        work shared by the unfused executor and the fused assembly.  Chunk
+        widths bucket to powers of two capped at the row's remaining extent,
+        so the `dynamic_update_slice` at pos0+done never clamps (a lone
+        row's suffix always fits its cache tail).  Final chunks commit their
+        host-side bookkeeping here (prefix registration, pending clear) so
+        this round's admission planning already sees the spliced state —
+        the same ordering the unfused loop had."""
+        if not self._partials:
+            return []
+        steps: list[_PartStep] = []
+        still: list[_Partial] = []
+        t = None
         for part in self._partials:
             toks = part.req.tokens
             start = part.pos0 + part.done
@@ -635,19 +1001,85 @@ class ContinuousBatchingScheduler:
             width = min(_next_pow2(n), self.max_len - start)
             buf = np.zeros((1, width), np.int32)
             buf[0, :n] = toks[start:start + n]
-            batch = {"tokens": jnp.asarray(buf),
-                     "lens": jnp.asarray([n], jnp.int32),
-                     "pos0": jnp.asarray([start], jnp.int32)}
-            logits, part.sub_cache = self.engine._prefill(
-                self.engine.params, batch, part.sub_cache)
+            batch = {"tokens": buf,
+                     "lens": np.asarray([n], np.int32),
+                     "pos0": np.asarray([start], np.int32)}
+            seed = None
+            if part.done == 0:
+                seed, part.seed = part.seed, None
+                if part.req.extras:
+                    # per-request constant extras (encdec encoder memory)
+                    # ride the FIRST chunk only: the encoder runs once and
+                    # its cross K/V persists in the accumulating sub-cache
+                    for k, v in part.req.extras.items():
+                        batch[k] = np.asarray(v)[None]
             self.stats["prefill_tokens"] += n
             self.stats["prefill_chunks"] += 1
             part.done += n
-            if start + n < len(toks):
+            final = start + n >= len(toks)
+            steps.append(_PartStep(part=part, batch=batch, final=final,
+                                   seed=seed))
+            if not final:
                 still.append(part)
                 continue
-            self._splice_partial(part, logits)
+            spec = self._effective_spec(part.req)
+            if part.plan is not None:
+                self.lane_pages[part.lane] = (part.plan.shared
+                                              + part.plan.new)
+                self._register_prefix(part.req, part.plan)
+            self._lane_pending[part.lane] = False
+            self._lane_stoch[part.lane] = self._is_stochastic(spec)
+            self._round_admitted.append(part.lane)
+            t = time.perf_counter() if t is None else t
+            self.req_times[part.req.rid]["first_token"] = t
         self._partials = still
+        return steps
+
+    def _advance_partials(self):
+        """Unfused executor: run each planned chunk as its own prefill
+        dispatch, splicing those that finish."""
+        for s in self._plan_partial_steps():
+            batch = {k: jnp.asarray(v) for k, v in s.batch.items()}
+            if s.seed is not None:
+                s.part.sub_cache = self.engine._seed_pages(
+                    self.cache, s.part.sub_cache, s.seed[0], s.seed[1],
+                    self.max_len)
+            self.stats["dispatches"] += 1
+            logits, s.part.sub_cache = self.engine._prefill(
+                self.engine.params, batch, s.part.sub_cache)
+            if s.final:
+                self._splice_partial(s.part, logits)
+
+    def _assemble_parts(self, steps: list[_PartStep]):
+        """Turn planned partial chunks into the fused step's ``parts`` input
+        (device arrays + static final/stochastic flags).  Final chunks carry
+        their splice data: target lane, budget, sampler row and — under
+        paging — their page-copy plan."""
+        parts, finals, stochs = [], [], []
+        for s in steps:
+            # numpy leaves (see _admit_batch): one device transfer at the
+            # fused jit boundary instead of one eager dispatch per field
+            d = {"batch": dict(s.batch), "cache": s.part.sub_cache}
+            if s.seed is not None:
+                d["seed_tab"], d["seed_len"] = s.seed
+            stoch = False
+            if s.final:
+                spec = self._effective_spec(s.part.req)
+                stoch = self._is_stochastic(spec)
+                d["sub_state"] = S.lane_state([spec], 1)
+                d["lane"] = np.asarray([s.part.lane], np.int32)
+                d["budget"] = np.asarray([s.part.budget], np.int32)
+                if self.page_size is not None:
+                    rows, cols, dsts, tab = self._page_copy_plan(
+                        [s.part.plan])
+                    d["copy_rows"] = np.asarray(rows, dtype=np.int32)
+                    d["copy_cols"] = np.asarray(cols, dtype=np.int32)
+                    d["copy_dsts"] = np.asarray(dsts, dtype=np.int32)
+                    d["tab_rows"] = np.asarray(tab)
+            parts.append(d)
+            finals.append(s.final)
+            stochs.append(stoch)
+        return tuple(parts), tuple(finals), tuple(stochs)
 
     def _splice_partial(self, part: _Partial, logits):
         """Final chunk done: sample the first token from its logits, copy
@@ -687,33 +1119,34 @@ class ContinuousBatchingScheduler:
     def _paged_spec(self):
         return get_model(self.engine.cfg).paged_cache_spec(self.engine.cfg)
 
-    def _seed_shared_prefix(self, sub_cache, plans, n_pad):
-        """Gather resident shared-prefix pages into the prefill sub-cache so
-        suffix rows attend over the donor's K/V (positions [0, pos0))."""
+    def _seed_arrays(self, plans, n_pad):
+        """Seed table + per-row shared length for prefix-seeded admission
+        (None when no plan shares anything)."""
         if not any(pl.shared for pl in plans):
-            return sub_cache
+            return None
         ps = self.page_size
         seed_tab = np.zeros((n_pad, self.n_pages), np.int32)
         shared_len = np.zeros((n_pad,), np.int32)
         for i, pl in enumerate(plans):
             seed_tab[i, :len(pl.shared)] = pl.shared
             shared_len[i] = len(pl.shared) * ps
-        seed_tab = jnp.asarray(seed_tab)
-        mask = jnp.asarray(
-            np.arange(self.max_len)[None, :] < shared_len[:, None])
-        sub_cache = dict(sub_cache)
-        for key, lead in self._paged_spec().items():
-            view = PG.gather_pages(self.cache[key + "_pages"], seed_tab,
-                                   n_lead=len(lead))
-            m = mask.reshape((1,) * len(lead) + (n_pad, 1, self.max_len, 1))
-            sub_cache[key] = jnp.where(m, view.astype(sub_cache[key].dtype),
-                                       sub_cache[key])
-        return sub_cache
+        return seed_tab, shared_len
 
-    def _copy_pages(self, sub_cache, plans, lanes):
-        """Scatter-store freshly prefilled K/V blocks into their allocated
-        pages, install the page-table rows, and index the new full prompt
-        pages for future prefix hits."""
+    def _seed_shared_prefix(self, sub_cache, plans, n_pad):
+        """Gather resident shared-prefix pages into the prefill sub-cache so
+        suffix rows attend over the donor's K/V (positions [0, pos0))."""
+        seed = self._seed_arrays(plans, n_pad)
+        if seed is None:
+            return sub_cache
+        return self.engine._seed_pages(self.cache, sub_cache, seed[0],
+                                       seed[1], self.max_len)
+
+    def _page_copy_plan(self, plans):
+        """Block-copy plan for freshly prefilled rows: (row, logical col,
+        physical dst) triples plus the page-table rows to install (tail-
+        padded with the lane's LAST private page so clamped out-of-budget
+        writes from retired lanes can never touch a page another request
+        owns)."""
         ps = self.page_size
         rows, cols, dsts = [], [], []
         tab_rows = np.zeros((len(plans), self.n_pages), np.int32)
@@ -726,24 +1159,18 @@ class ContinuousBatchingScheduler:
                 dsts.append(pl.new[j - n_sh])
             ids = pl.shared + pl.new
             tab_rows[i, :len(ids)] = ids
-            # pad the tail with the lane's LAST private page so clamped
-            # out-of-budget writes from retired lanes can never touch a page
-            # another request owns
             tab_rows[i, len(ids):] = pl.new[-1]
-        rows_a, cols_a = jnp.asarray(rows), jnp.asarray(cols)
-        dsts_a = jnp.asarray(dsts)
-        for key, lead in self._paged_spec().items():
-            dn = sub_cache[key]                     # lead+(n_pad,Hkv,S,Dh)
-            nl = len(lead)
-            shp = dn.shape
-            dnp = dn.reshape(shp[:nl + 2] + (self.n_pages, ps, shp[-1]))
-            dnp = jnp.moveaxis(dnp, nl, 0)          # (n_pad,)+lead+(Hkv,n,ps,D)
-            dnp = jnp.moveaxis(dnp, nl + 2, 1)      # (n_pad,n_pages)+lead+...
-            blocks = dnp[rows_a, cols_a]            # (K,)+lead+(Hkv,ps,D)
-            self.cache[key + "_pages"] = PG.scatter_block(
-                self.cache[key + "_pages"], dsts_a, blocks, n_lead=nl)
-        self.cache["page_table"] = self.cache["page_table"].at[
-            jnp.asarray(lanes, jnp.int32)].set(jnp.asarray(tab_rows))
+        return rows, cols, dsts, tab_rows
+
+    def _copy_pages(self, sub_cache, plans, lanes):
+        """Scatter-store freshly prefilled K/V blocks into their allocated
+        pages and install the page-table rows (unfused executor)."""
+        rows, cols, dsts, tab_rows = self._page_copy_plan(plans)
+        self.cache = self.engine._install_pages(
+            self.cache, sub_cache, jnp.asarray(rows, dtype=jnp.int32),
+            jnp.asarray(cols, dtype=jnp.int32),
+            jnp.asarray(dsts, dtype=jnp.int32), jnp.asarray(tab_rows),
+            jnp.asarray(lanes, jnp.int32))
         for i, pl in enumerate(plans):
             self.lane_pages[int(lanes[i])] = pl.shared + pl.new
 
@@ -762,18 +1189,21 @@ class ContinuousBatchingScheduler:
     def _harvest(self):
         """Collect lanes whose request left the active partition (pending
         chunked-prefill lanes are reserved, not finished)."""
+        self.stats["host_syncs"] += 1
         finished = np.flatnonzero((self.lane_rid >= 0) & ~np.asarray(self.p)
                                   & ~self._lane_pending)
         if finished.size == 0:
             return
         out = np.asarray(self.out_buf[finished])
         n_gen = np.asarray(self.n_gen[finished])
+        t = time.perf_counter()
         for j, lane in enumerate(finished):
             rid = int(self.lane_rid[lane])
             n = int(n_gen[j])
             self.results[rid] = {"tokens": out[j, :n].copy(),
                                  "n_generated": n,
                                  "finished_at": self.now}
+            self.req_times[rid]["finished"] = t
             self.lane_rid[lane] = -1
             self._lane_stoch[lane] = False
             if self.page_size is not None:
@@ -805,7 +1235,10 @@ class ContinuousBatchingScheduler:
         n_live = int(occupied.sum())
         if occupied[:n_live].all():
             return
-        perm = np.asarray(PT.compact_perm(jnp.asarray(occupied)))
+        # the SVE compact permutation (partition.compact_perm) computed
+        # host-side — a stable argsort of the inactive flag — so deciding to
+        # compact never blocks on the device
+        perm = np.argsort(~occupied, kind="stable")
         perm_idx = jnp.asarray(perm, jnp.int32)
         # on a paged cache this moves page-table ROWS only — the pools (the
         # actual KV bytes) never move, so compaction cost is O(n_pages), not
@@ -821,12 +1254,26 @@ class ContinuousBatchingScheduler:
         self.lane_rid = self.lane_rid[perm]
         self._lane_stoch = self._lane_stoch[perm]
         self._lane_pending = self._lane_pending[perm]
-        if self._partials:
-            new_of = {int(old): new for new, old in enumerate(perm)}
-            for part in self._partials:
-                part.lane = new_of[part.lane]
+        self._host_ngen = self._host_ngen[perm]
+        new_of = {int(old): new for new, old in enumerate(perm)}
+        for part in self._partials:
+            part.lane = new_of[part.lane]
         if self.page_size is not None:
             self.lane_pages = {new: self.lane_pages[int(old)]
                                for new, old in enumerate(perm)
                                if int(old) in self.lane_pages}
+        if self._stash is not None:
+            # the in-flight round's handles describe the OLD lane order:
+            # permute them (queued device gathers) and re-prefetch, and move
+            # the snapshot views the same way, so the delayed harvest reads
+            # a coherent picture
+            st = self._stash
+            st["p"] = jnp.take(st["p"], perm_idx, axis=0)
+            st["out"] = jnp.take(st["out"], perm_idx, axis=0)
+            st["ngen"] = jnp.take(st["ngen"], perm_idx, axis=0)
+            for a in (st["p"], st["out"], st["ngen"]):
+                a.copy_to_host_async()
+            st["lane_rid"] = st["lane_rid"][perm]
+            st["pending"] = st["pending"][perm]
+            st["admitted"] = [new_of[l] for l in st["admitted"]]
         self.stats["compactions"] += 1

@@ -164,17 +164,26 @@ def test_chunked_prefill_moe_family():
     assert got == whole
 
 
-def test_chunked_prefill_refused_for_stateful_prefill_families():
-    """Families whose prefill carries state outside the positional cache
-    (ssm/hybrid scan carry) must refuse chunked prefill loudly."""
+def test_chunked_prefill_granularity_enforced_for_ssm():
+    """ssm/hybrid resume the SSD scan across chunks, so chunk boundaries
+    must sit on the ``ssm_chunk`` grid: misaligned sizes are refused loudly,
+    aligned ones serve bit-identically to whole-prompt prefill."""
     cfg = ModelConfig(name="t", family="ssm", ssm_state=16, ssm_headdim=16,
-                      ssm_chunk=16, **BASE)
+                      ssm_chunk=4, **BASE)
     model = get_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, max_new_tokens=4)
-    with pytest.raises(ValueError, match="chunked prefill"):
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7)
+    with pytest.raises(ValueError, match="multiple of"):
         ContinuousBatchingScheduler(eng, capacity=2, max_len=16,
-                                    prefill_chunk=4)
+                                    prefill_chunk=6)
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(1, 64, rng.randint(4, 16)) for _ in range(6)]
+    budgets = [int(rng.randint(2, 7)) for _ in prompts]
+    arrivals = [float(i) * 0.7 for i in range(len(prompts))]
+    whole, _ = _serve_all(eng, prompts, budgets, arrivals)
+    got, sched = _serve_all(eng, prompts, budgets, arrivals, prefill_chunk=4)
+    assert sched.stats["prefill_chunks"] > 0
+    assert got == whole
 
 
 def test_submit_rejects_oversized_prompt():
