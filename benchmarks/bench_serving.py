@@ -19,6 +19,13 @@ per-request TTFT/TPOT p50/p99, and ``--min-continuous-ratio`` gates the
 largest capacity's ratio in CI — per-round host dispatch overhead creeping
 back into the serve loop shows up as that ratio collapsing.
 
+``--tp-mesh DxM`` adds a tensor-parallel leg: the same trace served through
+a mesh-backed engine (lanes sharded over "data", KV-head pools and MLP over
+"model").  On the forced host-device CPU mesh this is a STRUCTURE check,
+not a speed number: the leg hard-fails unless its dispatch count and token
+count match the 1-device continuous leg exactly (mesh sharding must not
+reintroduce per-token host syncs into the serve loop).
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--fast] \
         [--seed 0] [--trace-len 8] [--min-paged-ratio 0.5] \
         [--min-continuous-ratio 0.2]
@@ -43,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paging import pages_needed
+from repro.dist import collectives as C
+from repro.launch.mesh import force_host_devices, make_mesh, parse_mesh
 from repro.models import ModelConfig, get_model
 from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
 
@@ -212,6 +221,15 @@ def main(argv=None):
                          "floor — the CI regression guard against per-round "
                          "host dispatch overhead creeping back into the "
                          "serve loop (fused step + async harvest)")
+    ap.add_argument("--tp-mesh", default=None, metavar="DxM",
+                    help="add a tensor-parallel leg: serve the same trace "
+                         "through a ServeEngine on a (data, model) mesh of "
+                         "this shape (forces DxM host CPU devices when the "
+                         "process has fewer).  The leg is gated HARD on "
+                         "matching the 1-device continuous leg's dispatch "
+                         "count — sharding must not add host syncs")
+    ap.add_argument("--psum", choices=C.PSUM_MODES, default="fast",
+                    help="psum flavor for shard_map-level collectives")
     ap.add_argument("--sampling", action="store_true",
                     help="add a stochastic leg (temperature=0.8, top_p=0.9, "
                          "per-request seed = rid): exercises the per-lane "
@@ -222,6 +240,14 @@ def main(argv=None):
     n_requests = args.trace_len or (8 if args.fast else 24)
     capacities = [2, 4] if args.fast else [2, 4, 8]
     max_new, max_len = 8, 24
+
+    C.set_psum_mode(args.psum)
+    mesh = None
+    if args.tp_mesh is not None:
+        d, m = parse_mesh(args.tp_mesh)
+        # must run before the first device op below initializes the backend
+        force_host_devices(d * m)
+        mesh = make_mesh((d, m), ("data", "model"))
 
     cfg = ModelConfig(name="bench-serve", family="dense", **CFG)
     model = get_model(cfg)
@@ -238,8 +264,9 @@ def main(argv=None):
               "max_new_tokens": max_new, "cfg": CFG,
               "paged_attn": eng.paged_attn,
               "paged_mem_frac": args.paged_mem_frac,
+              "psum_mode": args.psum,
               "continuous": [], "static": [], "paged": [], "paged_half": [],
-              "sampled": []}
+              "sampled": [], "tp": []}
 
     def _sampled_params(rid: int):
         # fixed per-request seed (the rid) => the stochastic leg is exactly
@@ -321,6 +348,40 @@ def main(argv=None):
                   f"{q['tokens_per_s']:8.1f} tok/s "
                   f"(p50/p99 {q['decode_step_p50_ms']:.1f}/"
                   f"{q['decode_step_p99_ms']:.1f} ms)")
+
+    if mesh is not None:
+        # tensor-parallel leg at the LARGEST capacity: same trace through a
+        # mesh-backed engine (lanes over "data", KV heads/MLP over "model").
+        # On a forced host-device CPU mesh this measures dispatch structure,
+        # not speed — the HARD gate is that the sharded serve loop issues
+        # exactly as many dispatches as the 1-device fused leg (sharding must
+        # not reintroduce per-token host syncs), and tokens match byte-ness
+        # aside, count-for-count.
+        cap = capacities[-1]
+        eng_tp = ServeEngine(cfg, params, max_new_tokens=max_new,
+                             stop_token=7, mesh=mesh)
+        bench_capacity(eng_tp, trace, capacity=cap, max_len=max_len, chunk=4,
+                       compact_threshold=0.5, prefill_chunk=args.prefill_chunk)
+        t = bench_capacity(eng_tp, trace, capacity=cap, max_len=max_len,
+                           chunk=4, compact_threshold=0.5,
+                           prefill_chunk=args.prefill_chunk)
+        t["mesh"] = args.tp_mesh
+        t["psum_mode"] = args.psum
+        base = next(r for r in record["continuous"] if r["capacity"] == cap)
+        t["tp_continuous_ratio"] = t["tokens_per_s"] / base["tokens_per_s"]
+        record["tp"].append(t)
+        print(f"capacity={cap:2d}  tp@{args.tp_mesh} "
+              f"{t['tokens_per_s']:8.1f} tok/s "
+              f"(ratio {t['tp_continuous_ratio']:.2f}, "
+              f"dispatches {t['dispatches']} vs {base['dispatches']}, "
+              f"syncs {t['host_syncs']}/{t['rounds']}r)")
+        if (t["dispatches"] != base["dispatches"]
+                or t["tokens"] != base["tokens"]):
+            print(f"FAIL tp leg: dispatches {t['dispatches']} / tokens "
+                  f"{t['tokens']} != continuous leg's "
+                  f"{base['dispatches']} / {base['tokens']}")
+            raise SystemExit(1)
+        print(f"tp dispatch count matches continuous at capacity {cap}: ok")
 
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)

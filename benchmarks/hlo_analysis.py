@@ -86,7 +86,9 @@ class Cost:
     flops: float = 0.0
     bytes: float = 0.0               # rough HBM proxy: op results
     transcendentals: float = 0.0
-    collectives: dict = field(default_factory=dict)
+    collectives: dict = field(default_factory=dict)       # kind -> bytes
+    collective_counts: dict = field(default_factory=dict)  # kind -> op count
+    collective_max: dict = field(default_factory=dict)     # kind -> max bytes/op
 
     def add(self, other: "Cost", mult: float = 1.0):
         self.flops += other.flops * mult
@@ -94,6 +96,12 @@ class Cost:
         self.transcendentals += other.transcendentals * mult
         for k, v in other.collectives.items():
             self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (self.collective_counts.get(k, 0.0)
+                                         + v * mult)
+        for k, v in other.collective_max.items():
+            # a single op's transfer size is trip-count invariant
+            self.collective_max[k] = max(self.collective_max.get(k, 0.0), v)
 
 
 @dataclass
@@ -228,8 +236,10 @@ class HloModule:
 
         base = oc[:-6] if oc.endswith("-start") else oc
         if base in _COLLECTIVES and not oc.endswith("-done"):
-            c.collectives[base] = (c.collectives.get(base, 0.0)
-                                   + _type_bytes(op.type_str))
+            b = float(_type_bytes(op.type_str))
+            c.collectives[base] = c.collectives.get(base, 0.0) + b
+            c.collective_counts[base] = c.collective_counts.get(base, 0.0) + 1
+            c.collective_max[base] = max(c.collective_max.get(base, 0.0), b)
             if not in_fusion:
                 c.bytes += self._traffic(op, ops)
             return c
@@ -279,6 +289,9 @@ def analyze(hlo_text: str) -> dict:
         "bytes": c.bytes,
         "transcendentals": c.transcendentals,
         "collective_bytes": dict(c.collectives, total=coll_total),
+        "collective_counts": dict(c.collective_counts,
+                                  total=sum(c.collective_counts.values())),
+        "collective_max_bytes": dict(c.collective_max),
     }
 
 

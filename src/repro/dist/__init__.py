@@ -4,6 +4,6 @@ whatever mesh is present (``sharding``), and horizontal reductions become
 deterministic cross-device collectives (``collectives``).
 """
 
-from . import collectives, sharding  # noqa: F401
+from . import collectives, serve, sharding  # noqa: F401
 
-__all__ = ["sharding", "collectives"]
+__all__ = ["sharding", "collectives", "serve"]

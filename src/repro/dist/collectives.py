@@ -13,6 +13,37 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+#: reduction orderings selectable at launch: "fast" is the backend's native
+#: all-reduce (scheduling-dependent association), "ordered"/"pairwise" are
+#: the fadda/faddv orderings below.
+PSUM_MODES = ("fast", "ordered", "pairwise")
+
+_PSUM_MODE = "fast"
+
+
+def set_psum_mode(mode: str) -> None:
+    """Select the ordering ``psum`` dispatches to (process-wide choice point;
+    wire from ``launch/serve.py --psum``).  Call before tracing."""
+    if mode not in PSUM_MODES:
+        raise ValueError(f"psum mode {mode!r} not in {PSUM_MODES}")
+    global _PSUM_MODE
+    _PSUM_MODE = mode
+
+
+def psum_mode() -> str:
+    return _PSUM_MODE
+
+
+def psum(x, axis_name: str, mode: str | None = None):
+    """The serve-path reduction choice point: one name model code can call,
+    resolving to the native all-reduce or a deterministic ordering."""
+    mode = _PSUM_MODE if mode is None else mode
+    if mode == "ordered":
+        return ordered_psum(x, axis_name)
+    if mode == "pairwise":
+        return pairwise_psum(x, axis_name)
+    return jax.lax.psum(x, axis_name)
+
 
 def ordered_psum(x, axis_name: str):
     """Strictly-ordered sum over the mesh axis: bit-identical to a sequential

@@ -1,0 +1,104 @@
+"""Serve-state placement: resolve the scheduler's device state onto a mesh.
+
+The serving analogue of the paper's one-VL-agnostic-binary promise: ONE
+serve program whose state placement — KV page pools over the ``model``
+axis's KV-head shards, request lanes over the ``data`` axis — resolves
+through the same logical-axis rule table (``dist.sharding.spec_for``) on
+whatever mesh exists.  Model code stays mesh-free; the engine commits its
+inputs here and GSPMD propagates the layout through the fused step.
+
+Layout contract (all via ``SERVE_RULES`` — no FSDP weight split while
+serving, the data axis carries lanes only):
+
+  * page pools ``<key>_pages`` — ``lead + (P, Hkv, page_size, D)``: KV
+    heads take "model" ("kv_heads" rule).  A pool whose head count does
+    not divide the axis REPLICATES (the divisibility fallback); the page
+    and page-size dims are never sharded — pages are gathered by table,
+    splitting them would turn every gather into a collective.
+  * per-lane dense KV — ``lead + (B, Hkv, S, D)``: lanes over "data", KV
+    heads over "model" with the ``kv_seq`` flash-decode fallback for GQA
+    head counts (left-to-right resolution in ``spec_for``).
+  * page tables / conv taps / SSM states / sampler lanes / out_buf /
+    per-lane scalars: lanes over "data" only.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from . import sharding as SH
+
+#: per-lane KV arrays end in (B, Hkv, S, D): rank past the lane axis
+_KV_TAIL_RANK = 4
+
+
+def cache_axes(cfg, cache) -> dict:
+    """Logical-axes tuples for every key of a serve cache (dense or paged).
+
+    Derives the lane axis from the family's ``cache_batch_axes`` contract
+    and the KV-vs-state split from key names — the serve-side mirror of
+    ``models`` layouts, kept here so model code never sees a mesh.
+    """
+    from repro.models import get_model  # lazy: models imports repro.dist
+
+    lane_ax = get_model(cfg).cache_batch_axes(cfg)
+    out = {}
+    for key, leaf in cache.items():
+        nd = len(leaf.shape)
+        if key == "page_table":
+            out[key] = ("batch",) + (None,) * (nd - 1)
+        elif key.endswith("_pages"):
+            ax = [None] * nd
+            ax[nd - 3] = "kv_heads"
+            out[key] = tuple(ax)
+        elif key in lane_ax:
+            la = lane_ax[key]
+            ax = [None] * nd
+            ax[la] = "batch"
+            if (nd - la == _KV_TAIL_RANK and "conv" not in key
+                    and "state" not in key):
+                ax[la + 1] = "act_kv_heads"
+                ax[la + 2] = "kv_seq"
+            out[key] = tuple(ax)
+        else:
+            out[key] = (None,) * nd
+    return out
+
+
+def cache_shardings(cfg, cache, mesh, rules: Optional[dict] = None) -> dict:
+    rules = SH.SERVE_RULES if rules is None else rules
+    return SH.tree_shardings(cache, cache_axes(cfg, cache), mesh, rules)
+
+
+def lane_shardings(tree, mesh, rules: Optional[dict] = None):
+    """Shardings for any pytree of lane-leading arrays (out_buf, tok,
+    sampler state, ...): "batch" on dim 0, rest replicated."""
+    rules = SH.SERVE_RULES if rules is None else rules
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, SH.spec_for(
+            leaf.shape, ("batch",) + (None,) * (len(leaf.shape) - 1),
+            mesh, rules)),
+        tree)
+
+
+def shard_params(model, cfg, params, mesh, rules: Optional[dict] = None):
+    """Commit params to their TP placement per the family's logical-axes
+    tree (heads/mlp/experts/vocab over "model"; under SERVE_RULES nothing
+    rides the data axis)."""
+    rules = SH.SERVE_RULES if rules is None else rules
+    return jax.device_put(
+        params, SH.tree_shardings(params, model.axes(cfg), mesh, rules))
+
+
+def constrain_cache(cfg, cache) -> dict:
+    """Sharding-constrain a cache built INSIDE a jitted trace (the fused
+    step's admission sub-caches): without the hint GSPMD may materialise
+    the fresh zeros replicated and reshard on the first write.  Identity
+    when no ambient mesh rules are active."""
+    if not SH.rules_active():
+        return cache
+    axes = cache_axes(cfg, cache)
+    return {k: SH.constrain(v, axes[k]) for k, v in cache.items()}

@@ -33,15 +33,54 @@ DEFAULT_RULES = {
     "act_seq": ("model",),          # Megatron-SP residual split
     "act_heads": ("model",),
     "act_kv_heads": ("model",),
+    "act_experts": ("model",),      # MoE dispatch/combine expert dim
+    "act_mlp": ("model",),          # MLP intermediate stays sharded between
+                                    # up-proj and down-proj (Megatron TP pair)
+    "act_vocab": ("model",),        # logits leave the unembed dot vocab-
+                                    # sharded; sampling gathers the (tiny)
+                                    # logit row, never the head weight
     "kv_seq": ("model",),           # flash-decode fallback target
     "embed": ("data",),             # FSDP-ish weight split
     "heads": ("model",),
     "kv_heads": ("model",),
     "mlp": ("model",),
+    # contraction-feeding weight dims (attention wo, MLP w_down) and the
+    # out-proj input: Megatron row-parallel in training — a partial dot per
+    # shard, psum after.  Serving overrides these (see SERVE_RULES).
+    "heads_in": ("model",),
+    "mlp_in": ("model",),
+    "act_attn_in": ("model",),
+    "act_mlp_in": ("model",),
+    "act_experts_in": ("model",),   # MoE dispatch-gather output
+    "act_experts_out": ("model",),  # MoE expert outputs entering combine
     "vocab": ("model",),
     "experts": ("model",),
     "layers": (),                   # scanned axis: never sharded
 }
+
+# Serving variant: decode reads every weight every step, so an FSDP-style
+# "embed" split over the data axis would all-gather the full parameter set
+# per layer per token — during serving the data axis carries request LANES
+# only.  act_seq likewise stays whole (decode sequence length is 1; prefill
+# chunks are short and batch-sharded already).
+#
+# heads_in / mlp_in / act_attn_in / act_mlp_in replicate: served tokens must
+# be BYTE-identical to the 1-device engine, and a Megatron row-parallel dot
+# (split contraction + psum) reassociates the f32 sum — ulp-level logit
+# noise that top-p's sort order then amplifies into a different sampled
+# token.  Serving therefore keeps only COLUMN-parallel weights sharded
+# (qkv / mlp-up / unembed: contraction dim whole, bitwise per element),
+# replicates the row-parallel weights, and all-gathers the small
+# activations (merged attn heads, MLP intermediate) right before their
+# dots — every contraction runs whole, so logits are bitwise-identical to
+# the unsharded engine BY CONSTRUCTION, and the per-step collectives are a
+# few KB of activations instead of per-layer reductions.  act_mlp itself
+# stays SHARDED so the up/gate dot outputs land sharded (otherwise GSPMD
+# would all-gather the up-proj weights to produce a replicated output);
+# only the act_mlp_in constraint on the down-proj input gathers.
+SERVE_RULES = dict(DEFAULT_RULES, embed=(), act_seq=(),
+                   heads_in=(), mlp_in=(), act_attn_in=(), act_mlp_in=(),
+                   act_experts_in=(), act_experts_out=())
 
 
 def _candidates(name: str, mesh, rules) -> list[tuple[str, ...]]:
@@ -146,6 +185,11 @@ def use_mesh_rules(mesh, rules: Optional[dict] = None):
         yield
     finally:
         _ACTIVE = prev
+
+
+def rules_active() -> bool:
+    """True inside a ``use_mesh_rules`` context (``constrain`` is live)."""
+    return _ACTIVE is not None
 
 
 def constrain(x, axes):

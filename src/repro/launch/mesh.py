@@ -12,20 +12,57 @@ The same logical-axis rule table resolves model configs onto either mesh
 from __future__ import annotations
 
 import math
+import os
+import warnings
 
 import jax
 
 
+def force_host_devices(n: int) -> None:
+    """Force ``n`` host-platform XLA devices (the multi-device-CPU testing
+    pattern).  MUST run before jax initializes its backend — call it first
+    thing in main(), before any jax array/device touch.  No-op when n <= 1
+    or the flag is already set (e.g. by the CI job's environment)."""
+    if n <= 1 or "--xla_force_host_platform_device_count" in os.environ.get(
+            "XLA_FLAGS", ""):
+        return
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --xla_force_host_platform_device_count={n}")
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """Parse a ``--mesh DxM`` spec ("4x2" -> (4, 2)): data axis x model axis."""
+    try:
+        d, m = spec.lower().split("x")
+        d, m = int(d), int(m)
+    except ValueError:
+        raise ValueError(f"mesh spec {spec!r} is not DxM (e.g. '4x2')")
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh spec {spec!r} must have positive axes")
+    return d, m
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    """The full-scale mesh — or, on a dev box with fewer devices, the largest
+    mesh the available devices support (axes halved largest-first, with a
+    warning), so ``launch/serve.py --mesh`` runs anywhere the tests do."""
+    shape = [2, 16, 16] if multi_pod else [16, 16]
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    need = math.prod(shape)
     devs = jax.devices()
-    if len(devs) < need:
-        raise RuntimeError(
-            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
-    return jax.make_mesh(shape, axes, devices=devs[:need])
+    if len(devs) < math.prod(shape):
+        want = math.prod(shape)
+        while math.prod(shape) > len(devs):
+            i = max(range(len(shape)), key=lambda j: shape[j])
+            if shape[i] == 1:
+                break
+            shape[i] //= 2
+        warnings.warn(
+            f"{want}-device production mesh degraded to {tuple(shape)} over "
+            f"{axes} ({len(devs)} devices available; force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={want})",
+            RuntimeWarning, stacklevel=2)
+    need = math.prod(shape)
+    return jax.make_mesh(tuple(shape), axes, devices=devs[:need])
 
 
 def make_mesh(shape, axes):

@@ -14,9 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import all_arch_names, get_config
+from repro.dist import collectives as C
 from repro.models import get_model
 from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
 
+from .mesh import force_host_devices, make_mesh, parse_mesh
 from .train import REDUCE
 
 
@@ -75,7 +77,26 @@ def main():
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base sampling seed; request i uses seed+i, so "
                          "every stream is reproducible per request")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="mesh-sharded serving: data x model axes (e.g. 4x2 "
+                         "= lanes over 4 ways, KV heads/MLP/experts over 2). "
+                         "On a host-only box the device count is forced via "
+                         "XLA_FLAGS; served tokens are byte-identical to the "
+                         "unsharded loop")
+    ap.add_argument("--psum", choices=list(C.PSUM_MODES), default="fast",
+                    help="cross-device reduction ordering for shard_map-"
+                         "level code: native all-reduce, or the "
+                         "deterministic ordered (fadda) / pairwise (faddv) "
+                         "collectives")
     args = ap.parse_args()
+
+    C.set_psum_mode(args.psum)
+    mesh = None
+    if args.mesh is not None:
+        d, m = parse_mesh(args.mesh)
+        # must precede ANY backend touch (jax initializes devices lazily)
+        force_host_devices(d * m)
+        mesh = make_mesh((d, m), ("data", "model"))
 
     def _sampling(i: int):
         """Per-request SamplingParams (None = greedy) for request index i."""
@@ -117,7 +138,7 @@ def main():
         batch["src_lens"] = jnp.full((args.batch,), args.prompt_len, jnp.int32)
 
     eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7,
-                      paged_attn=args.paged_attn)
+                      paged_attn=args.paged_attn, mesh=mesh)
     if args.static or cfg.cross_attn_group:
         # vlm cross_emb extras are per-batch, not yet per-request: static path
         res = eng.generate(batch, sampling=[_sampling(i)

@@ -31,6 +31,17 @@ def shard_act(cfg, x, axes):
     return SH.constrain(x, axes)
 
 
+def shard_pool(cfg, pool):
+    """KV page-pool sharding constraint: heads over the model axis, the page
+    and page-size dims whole (pools are addressed by table gathers — a split
+    page dim would turn every gather into a collective).  Same opt-in as
+    shard_act; a head count that doesn't divide the axis replicates."""
+    if cfg.act_shard == "none":
+        return pool
+    nd = pool.ndim
+    return SH.constrain(pool, (None,) * (nd - 3) + ("kv_heads", None, None))
+
+
 def shard_residual(cfg, x):
     """Megatron-SP: residual stream (B, S, d) sharded over the model axis on
     the seq dim between blocks (only under act_shard='tp_sp').  The remat-
@@ -178,7 +189,8 @@ def mlp_init(key, cfg, d_ff: Optional[int] = None):
 
 
 def mlp_axes(cfg, d_ff: Optional[int] = None):
-    ax = {"w_down": ("mlp", "embed")}
+    # w_down's ff dim feeds the down-proj contraction ("mlp_in", see wo)
+    ax = {"w_down": ("mlp_in", "embed")}
     if cfg.activation in ("swiglu", "geglu"):
         ax["w_gate"] = ("embed", "mlp")
         ax["w_up"] = ("embed", "mlp")
@@ -204,6 +216,12 @@ def mlp(p, x, cfg):
                                    act_axes), approximate=True) * up
     else:
         up = jax.nn.gelu(up, approximate=True)
+    # the down-proj input (see act_attn_in): training keeps it sharded and
+    # psums the partial dots; serving gathers the (small) intermediate here
+    # so the contraction runs whole — bitwise-identical logits, and the
+    # collective is a few KB of activations, not the up-proj weights
+    up = shard_act(cfg, up,
+                   ("batch",) + (None,) * (x.ndim - 2) + ("act_mlp_in",))
     out = up @ p["w_down"].astype(cdt(cfg))
     if cfg.use_bias:
         out = out + p["b_down"].astype(cdt(cfg))
@@ -234,8 +252,12 @@ def attn_init(key, cfg):
 
 
 def attn_axes(cfg):
+    # wo's first dim feeds the out-proj CONTRACTION: it gets its own logical
+    # name so serving can replicate it (a contraction split psums partial
+    # dots, which reassociates the f32 sum — bitwise-identical serving
+    # gathers the merged heads and runs the full dot instead)
     ax = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
-          "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+          "wv": ("embed", "kv_heads"), "wo": ("heads_in", "embed")}
     if cfg.use_bias:
         ax.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",),
                    "bo": ("embed",)})
@@ -307,10 +329,10 @@ def attention(p, x, positions, cfg, *,
             page_col = jnp.clip(cache_pos // ps, 0, page_table.shape[1] - 1)
             page_ids = jnp.take_along_axis(page_table, page_col[:, None],
                                            axis=1)[:, 0]
-            k_pool = PG.scatter_page(k_pool, page_ids, cache_pos % ps,
-                                     k[:, :, 0, :])
-            v_pool = PG.scatter_page(v_pool, page_ids, cache_pos % ps,
-                                     v[:, :, 0, :])
+            k_pool = shard_pool(cfg, PG.scatter_page(
+                k_pool, page_ids, cache_pos % ps, k[:, :, 0, :]))
+            v_pool = shard_pool(cfg, PG.scatter_page(
+                v_pool, page_ids, cache_pos % ps, v[:, :, 0, :]))
             k, v = k_pool.astype(cdt(cfg)), v_pool.astype(cdt(cfg))
             new_cache = (k_pool, v_pool)
         else:
@@ -323,7 +345,13 @@ def attention(p, x, positions, cfg, *,
         q, k, v, kv_lens=kv_lens, causal=causal, window=window,
         q_offset=q_offset, impl=cfg.attn_impl, page_table=page_table)
     out = shard_act(cfg, out, ("batch", "act_heads", None, None))
-    out = _merge_heads(out).astype(cdt(cfg)) @ p["wo"].astype(cdt(cfg))
+    # the out-proj input: under training rules act_attn_in rides "model"
+    # (Megatron row-parallel, psum after the dot); under SERVE_RULES it
+    # replicates, gathering the merged heads BEFORE the dot so the
+    # contraction runs whole and logits stay bitwise-identical to 1-device
+    merged = shard_act(cfg, _merge_heads(out).astype(cdt(cfg)),
+                       ("batch", None, "act_attn_in"))
+    out = merged @ p["wo"].astype(cdt(cfg))
     if cfg.use_bias:
         out = out + p["bo"].astype(cdt(cfg))
     out = shard_act(cfg, out, ("batch", None, None))

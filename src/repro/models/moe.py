@@ -44,7 +44,7 @@ def _moe_ffn_axes(cfg):
         "router": ("embed", None),
         "w_gate": ("experts", "embed", "mlp"),
         "w_up": ("experts", "embed", "mlp"),
-        "w_down": ("experts", "mlp", "embed"),
+        "w_down": ("experts", "mlp_in", "embed"),
     }
     if cfg.n_shared_experts:
         ax["shared"] = L.mlp_axes(cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
@@ -113,15 +113,26 @@ def moe_ffn(p, x, cfg):
     disp = jax.vmap(lambda i, w: build_dispatch(i, w, e, cap, impl="xla"))(
         ids.astype(jnp.int32), gates)
 
-    # gather tokens into expert buffers: (G, E, C, d)
+    # gather tokens into expert buffers: (G, E, C, d).  Serving pins the
+    # gather OPERAND whole: reshaping (B,S,d) into groups folds the
+    # data-sharded batch into the token axis, and the +1 drop-row makes it
+    # unevenly sharded — GSPMD's partitioned gather over such a padded axis
+    # does not reproduce the unsharded values bit-for-bit, so at serve time
+    # both dispatch and combine gathers must run on whole buffers.
     xp = jnp.concatenate([xt, jnp.zeros((g, 1, d), xt.dtype)], axis=1)
+    xp = L.shard_act(cfg, xp, ("batch", "act_experts_in", None))
     table = disp["token_table"].reshape(g, e * cap)
     xe = jnp.take_along_axis(xp, table[..., None].astype(jnp.int32), axis=1)
     xe = xe.reshape(g, e, cap, d).astype(cd)
 
-    # expert computation (all-to-all boundary under EP)
+    # expert computation (all-to-all boundary under EP).  The dispatch
+    # gather's OUTPUT carries its own logical name: serving pins it
+    # replicated so the take_along_axis above never partitions (GSPMD's
+    # partitioned gather over these oddly-padded buffer axes does not
+    # reproduce the unsharded values bit-for-bit); the expert einsums below
+    # still shard over e via their weights, so expert FLOPs stay split.
     ea = ("batch", "act_experts", None, None)
-    xe = L.shard_act(cfg, xe, ea)
+    xe = L.shard_act(cfg, xe, ("batch", "act_experts_in", None, None))
     up = L.shard_act(cfg, jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(cd)), ea)
     gate = L.shard_act(cfg, jnp.einsum("gecd,edf->gecf", xe,
                                        p["w_gate"].astype(cd)), ea)
@@ -129,9 +140,13 @@ def moe_ffn(p, x, cfg):
     ye = L.shard_act(cfg, jnp.einsum("gecf,efd->gecd", hidden,
                                      p["w_down"].astype(cd)), ea)
 
-    # combine back to token order
+    # combine back to token order.  Same contract as the dispatch side:
+    # serving gathers the expert outputs whole before the combine's
+    # take_along_axis (the intended per-layer collective — a few KB of
+    # activations); training keeps the expert dim sharded (EP combine)
     ye_flat = jnp.concatenate([ye.reshape(g, e * cap, d),
                                jnp.zeros((g, 1, d), ye.dtype)], axis=1)
+    ye_flat = L.shard_act(cfg, ye_flat, ("batch", "act_experts_out", None))
     slot = disp["slot_of"].reshape(g, tg * k)
     contrib = jnp.take_along_axis(ye_flat, slot[..., None].astype(jnp.int32), axis=1)
     contrib = contrib.reshape(g, tg, k, d)

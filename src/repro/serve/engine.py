@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from repro import sample as S
 from repro.core import paging as PG
 from repro.core import predicate as P
+from repro.dist import serve as DS
+from repro.dist import sharding as SH
 from repro.models import (gather_lanes, get_model, is_paged, merge_lanes,
                           paged_decode_ok, paged_view, paged_writeback,
                           slot_update, to_paged)
@@ -61,12 +63,24 @@ class ServeEngine:
     # family decode, scatter the one new token back (bitwise identical to the
     # dense cache BY CONSTRUCTION; tests pin the native path against it).
     paged_attn: str = "native"
+    # mesh-sharded serving: a jax Mesh with "model" (TP) and/or "data" (lane)
+    # axes.  Params commit to their TP placement, every jitted entry point
+    # traces under SERVE_RULES so the model's activation constraints resolve,
+    # and the scheduler commits its serve state through ``dist.serve`` —
+    # model code itself never sees the mesh (the VL-agnostic contract).
+    mesh: Optional[object] = None
 
     def __post_init__(self):
         if self.paged_attn not in ("native", "kernel", "gather"):
             raise ValueError(
                 f"paged_attn must be 'native' ('kernel' alias) or 'gather', "
                 f"got {self.paged_attn!r}")
+        if self.mesh is not None and getattr(self.cfg, "act_shard",
+                                             "none") == "none":
+            # activation constraints are what steer GSPMD away from
+            # all-gathering pools/heads; enable them unless the caller
+            # pinned a specific mode
+            self.cfg = dataclasses.replace(self.cfg, act_shard="tp")
         self.model = get_model(self.cfg)
         # logits run over the PADDED vocab (the model already predicates the
         # pad lanes to -1e30, so leaving them "allowed" here is inert)
@@ -100,11 +114,37 @@ class ServeEngine:
             static_argnames=("n_steps", "stochastic", "admit_stoch",
                             "part_final", "part_stoch", "max_len", "width"),
             donate_argnums=fused_donate)
+        if self.mesh is not None:
+            # commit params to their TP placement and trace every entry
+            # point under the ambient serve rules so the model's logical-
+            # axis constraints resolve against THIS mesh
+            self.params = DS.shard_params(self.model, self.cfg, self.params,
+                                          self.mesh)
+            for name in ("_prefill", "_decode_chunk", "_decode_chunk_serve",
+                         "_fused_step"):
+                setattr(self, name, self._with_mesh(getattr(self, name)))
         self._warned_gather_fallback = False
+
+    def _with_mesh(self, fn):
+        def run(*args, **kwargs):
+            with SH.use_mesh_rules(self.mesh, SH.SERVE_RULES):
+                return fn(*args, **kwargs)
+
+        def lower(*args, **kwargs):
+            # introspection path (HLO collective audits): same ambient rules
+            with SH.use_mesh_rules(self.mesh, SH.SERVE_RULES):
+                return fn.lower(*args, **kwargs)
+        run.lower = lower
+        return run
 
     def _sample(self, logits, sstate=None, out_buf=None, n_gen=None):
         """Sample one token per lane through ``repro.sample`` (the single
         sampler entry point).  With no state: bit-exact greedy argmax."""
+        # gather the (tiny) logit row off the vocab-sharded unembed output:
+        # the sampler's ordered scans (sort, FADDA cumsum, Gumbel) must run
+        # on a whole vocab row or their FP association order — and thus the
+        # sampled token — would differ from the 1-device engine
+        logits = SH.constrain(logits, ("batch",) + (None,) * (logits.ndim - 1))
         if sstate is None:
             return S.greedy_tokens(logits if self._ban is None else
                                    mask_logits(logits, self._ban[None, :]))
@@ -365,7 +405,10 @@ class ServeEngine:
         if admit is not None:
             batch = admit["batch"]
             m = batch["tokens"].shape[0]
-            sub_cache = self.make_cache(m, max_len, batch)
+            # fresh zeros inside the trace: pin their serve placement so
+            # GSPMD doesn't materialise them replicated (identity unsharded)
+            sub_cache = DS.constrain_cache(self.cfg,
+                                           self.make_cache(m, max_len, batch))
             if "seed_tab" in admit:
                 sub_cache = self._seed_pages(cache, sub_cache,
                                              admit["seed_tab"],

@@ -47,10 +47,12 @@ import dataclasses
 import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import sample as S
+from repro.dist import serve as DS
 from repro.core import paging as PG
 from repro.models import (chunked_prefill_granularity, chunked_prefill_ok,
                           gather_lanes, get_model, lane_independent_decode,
@@ -402,6 +404,33 @@ class ContinuousBatchingScheduler:
         # at the dispatch that commits the first token) -> finished (at
         # harvest); the serving benchmark derives TTFT/TPOT from these
         self.req_times: dict[int, dict] = {}
+        # mesh-sharded serving: resolve the canonical placement of every
+        # serve-state array ONCE (pools over "model" KV-head shards, lanes
+        # over "data") and pin the state there.  Host-path mutations
+        # (compaction gathers, harvest's page-table scatter) can drift an
+        # array off this placement, which would retrace the fused step —
+        # ``_reshard`` pins everything back before each dispatch (a no-op
+        # copy when already canonical).
+        self._mesh = getattr(engine, "mesh", None)
+        if self._mesh is not None:
+            self._cache_sh = DS.cache_shardings(engine.cfg, self.cache,
+                                                self._mesh)
+            lanes = (self.out_buf, self.tok, self.p, self.n_gen, self.budget)
+            self._lane_sh = DS.lane_shardings(lanes, self._mesh)
+            self._sstate_sh = DS.lane_shardings(self.sstate, self._mesh)
+            self._reshard()
+
+    def _reshard(self):
+        """Pin the serve state to its canonical mesh placement (no-op when
+        unsharded or already canonical)."""
+        if self._mesh is None:
+            return
+        self.cache = jax.device_put(self.cache, self._cache_sh)
+        (self.out_buf, self.tok, self.p, self.n_gen,
+         self.budget) = jax.device_put(
+            (self.out_buf, self.tok, self.p, self.n_gen, self.budget),
+            self._lane_sh)
+        self.sstate = jax.device_put(self.sstate, self._sstate_sh)
 
     # ------------------------------------------------------------------
     # public API
@@ -463,6 +492,7 @@ class ContinuousBatchingScheduler:
         self._maybe_compact()
         self._advance_partials()
         self._admit()
+        self._reshard()
         occupied = self.lane_rid >= 0
         self.stats["occupancy_trace"].append(float(occupied.sum())
                                              / self.capacity)
@@ -501,6 +531,7 @@ class ContinuousBatchingScheduler:
         PREVIOUS round instead."""
         eng = self.engine
         self._maybe_compact()
+        self._reshard()
         part_steps = self._plan_partial_steps()
         plan = self._plan_admission()
         occupied = self.lane_rid >= 0

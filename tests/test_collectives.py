@@ -9,8 +9,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+from repro.dist import collectives as C
 from repro.dist.collectives import (ordered_psum, pairwise_psum,
-                                    compressed_psum)
+                                    compressed_psum, psum, set_psum_mode)
 from repro.launch.mesh import make_mesh
 
 if hasattr(jax, "shard_map"):                      # jax >= 0.6
@@ -68,6 +69,35 @@ for _ in range(T):
     acc += np.asarray(m).reshape(1, 16)
 np.testing.assert_allclose(acc / T, exact, atol=amax / 127.0 / 10, rtol=0)
 print("compressed OK")
+
+# ---- psum choice point: mode dispatch (fast/ordered/pairwise) ----
+def run_psum(mode):
+    set_psum_mode(mode)
+    try:
+        return np.asarray(jax.jit(smap(
+            lambda xs: psum(xs, "data"), mesh=mesh,
+            in_specs=P("data"), out_specs=P()))(
+            jnp.asarray(x).reshape(8, 1, 16))).reshape(1, 16)
+    finally:
+        set_psum_mode("fast")
+
+np.testing.assert_array_equal(run_psum("ordered"), want)   # == sequential
+np.testing.assert_allclose(run_psum("fast"), x.sum(0, keepdims=True),
+                           rtol=1e-5, atol=1e-5)
+np.testing.assert_array_equal(run_psum("pairwise"),
+                              np.asarray(out2).reshape(1, 16))
+# explicit mode argument overrides the process-wide choice
+out3 = jax.jit(smap(lambda xs: psum(xs, "data", mode="ordered"), mesh=mesh,
+                    in_specs=P("data"), out_specs=P()))(
+    jnp.asarray(x).reshape(8, 1, 16))
+np.testing.assert_array_equal(np.asarray(out3).reshape(1, 16), want)
+try:
+    C.set_psum_mode("nope")
+except ValueError:
+    pass
+else:
+    raise AssertionError("bad psum mode accepted")
+print("psum choice OK")
 """
 
 
@@ -81,5 +111,6 @@ def test_collectives_on_submesh():
                             "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout + r.stderr
-    for tag in ("ordered OK", "pairwise OK", "compressed OK"):
+    for tag in ("ordered OK", "pairwise OK", "compressed OK",
+                "psum choice OK"):
         assert tag in r.stdout

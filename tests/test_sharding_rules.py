@@ -37,6 +37,59 @@ for shape, names in [((4,), ("data",)), ((2, 2), ("data", "model")),
     m = make_mesh(shape, names)
     sp = SH.spec_for((16, 256, 512), ("layers", "embed", "mlp"), m)
     assert sp[0] is None
+
+# ---- serve-shaped arrays (dist.serve: the scheduler's state layouts) ----
+import numpy as np
+from repro.dist import serve as DSRV
+from repro.models.config import ModelConfig
+
+# page pool (P, Hkv, ps, D): Hkv=2 does NOT divide model=4 -> the pool
+# REPLICATES (divisibility fallback) — never an error, never a seq split
+# (pools are gathered by table; their page dims must stay whole)
+assert SH.spec_for((15, 2, 4, 16), (None, "kv_heads", None, None), mesh,
+                   SH.SERVE_RULES) == P(None, None, None, None)
+# Hkv=4 divides -> heads sharded over model
+assert SH.spec_for((15, 4, 4, 16), (None, "kv_heads", None, None), mesh,
+                   SH.SERVE_RULES) == P(None, "model", None, None)
+# SERVE_RULES: no FSDP weight split over "data" while serving
+assert SH.spec_for((256, 512), ("embed", "heads"), mesh,
+                   SH.SERVE_RULES) == P(None, "model")
+
+# full serve-cache resolution through dist.serve.cache_axes: a paged dense
+# cache with GQA (Hkv=2 vs model=4) must replicate its pools but engage the
+# kv_seq flash-decode fallback on the admission sub-cache's dense lane KV
+cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=64)
+paged = {"k_pages": np.zeros((2, 15, 2, 4, 16), np.float32),
+         "v_pages": np.zeros((2, 15, 2, 4, 16), np.float32),
+         "page_table": np.zeros((4, 6), np.int32),
+         "pos": np.zeros((4,), np.int32)}
+sh = DSRV.cache_shardings(cfg, paged, mesh)
+assert sh["k_pages"].spec == P(None, None, None, None, None), sh["k_pages"].spec
+assert sh["page_table"].spec == P("data", None)
+assert sh["pos"].spec == P("data")
+dense = {"k": np.zeros((2, 4, 2, 64, 16), np.float32),
+         "v": np.zeros((2, 4, 2, 64, 16), np.float32),
+         "pos": np.zeros((4,), np.int32)}
+sh = DSRV.cache_shardings(cfg, dense, mesh)
+# (L, B, Hkv, S, D): lanes over data; Hkv=2 can't take model=4 -> SEQ does
+assert sh["k"].spec == P(None, "data", None, "model", None), sh["k"].spec
+# Hkv=4 divides: heads take model, seq stays whole
+dense4 = dict(dense, k=np.zeros((2, 4, 4, 64, 16), np.float32),
+              v=np.zeros((2, 4, 4, 64, 16), np.float32))
+sh = DSRV.cache_shardings(cfg.replace(n_kv_heads=4), dense4, mesh)
+assert sh["k"].spec == P(None, "data", "model", None, None), sh["k"].spec
+# ---- make_production_mesh degrades instead of raising on a dev box ----
+import warnings
+from repro.launch import mesh as M
+
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    prod = M.make_production_mesh()
+# 16 forced devices here: (16,16) halves largest-first down to (4,4)
+assert dict(zip(prod.axis_names, prod.devices.shape)) == {"data": 4, "model": 4}, prod
+assert any(issubclass(x.category, RuntimeWarning) for x in w), w
+assert any("degraded" in str(x.message) for x in w), w
 print("sharding rules OK")
 """
 
