@@ -83,10 +83,34 @@ def poisson_trace(rng, n_requests, rate, prompt_lo, prompt_hi,
     return out
 
 
+def session_trace(rng, n_users, turns, page_size, turn_gap=60.0):
+    """Multi-turn conversations: each user's turn t+1 prompt EXTENDS its
+    turn t prompt, and turn waves are gapped far enough apart in decode-step
+    time that a turn's lanes retire — and their prefix pages leave residency
+    — before the follow-up arrives.  This is the traffic shape the host-swap
+    eviction tier converts into cross-request session hits; without it every
+    follow-up pays full prefill."""
+    prompts = {u: rng.randint(1, CFG["vocab_size"],
+                              int(rng.randint(page_size, page_size + 5)))
+               for u in range(n_users)}
+    out = []
+    t = 0.0
+    for turn in range(turns):
+        for u in range(n_users):
+            out.append((t + float(rng.rand()), prompts[u].copy(),
+                        int(rng.randint(3, 9))))
+            if turn + 1 < turns:
+                ext = rng.randint(1, CFG["vocab_size"],
+                                  int(rng.randint(4, 9)))
+                prompts[u] = np.concatenate([prompts[u], ext])
+        t += turn_gap
+    return out
+
+
 def bench_capacity(eng, trace, *, capacity, max_len, chunk,
                    compact_threshold, page_size=None, pool_pages=None,
                    sampling=None, prefill_chunk=None, fused=True,
-                   overlap=True):
+                   overlap=True, host_swap_pages=None, collect=None):
     """One scheduler run; ``sampling`` is a per-request SamplingParams
     factory rid -> params (None = greedy).  Steps the scheduler manually so
     per-DECODE-STEP latency percentiles can be reported alongside
@@ -98,7 +122,7 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
         eng, capacity=capacity, max_len=max_len, chunk=chunk,
         compact_threshold=compact_threshold, page_size=page_size,
         pool_pages=pool_pages, prefill_chunk=prefill_chunk,
-        fused=fused, overlap=overlap)
+        fused=fused, overlap=overlap, host_swap_pages=host_swap_pages)
     for rid, (arrival, prompt, max_new) in enumerate(trace):
         sched.submit(prompt, arrival=arrival, max_new_tokens=max_new,
                      sampling=sampling(rid) if sampling else None)
@@ -149,9 +173,19 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
     }
     if page_size is not None:
         pocc = sched.stats["page_occupancy_trace"]
+        # memory-honest throughput accounting: the KV bytes actually held on
+        # device (pools + quantization scale pools) and the mean concurrent
+        # lanes each byte buys — narrow pools serve the same occupancy from
+        # fewer bytes, which is the whole point of quantized pages
+        kv_bytes = sum(int(v.nbytes) for k, v in sched.cache.items()
+                       if k.endswith("_pages") or k.endswith("_pages_scale"))
         rec.update({
             "page_size": page_size,
             "pool_pages": sched.pool_pages,
+            "page_dtype": eng.page_dtype or "float32",
+            "kv_cache_bytes": kv_bytes,
+            "lanes_per_byte": (float(np.mean(occ)) if occ else 0.0)
+                              * capacity / kv_bytes,
             "mean_page_occupancy": float(np.mean(pocc)) if pocc else 0.0,
             "prefix_hits": sched.stats["prefix_hits"],
             "prefix_hit_rate": sched.stats["prefix_hits"] / max(len(results), 1),
@@ -159,9 +193,22 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
             "prefill_tokens": sched.stats["prefill_tokens"],
             "page_waits": sched.stats["page_waits"],
         })
+    if host_swap_pages:
+        rec.update({
+            "host_swap_pages": host_swap_pages,
+            "session_hits": sched.stats["session_hits"],
+            "session_hit_tokens": sched.stats["session_hit_tokens"],
+            "cross_request_hit_rate": (sched.stats["session_hits"]
+                                       / max(len(results), 1)),
+            "swap_out_pages": sched.stats["swap_out_pages"],
+            "swap_in_pages": sched.stats["swap_in_pages"],
+        })
     if prefill_chunk is not None:
         rec["prefill_chunk"] = prefill_chunk
         rec["prefill_chunks"] = sched.stats["prefill_chunks"]
+    if collect is not None:
+        for rid, r in results.items():
+            collect[rid] = r["tokens"].tolist()
     return rec
 
 
@@ -210,6 +257,24 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="run the scheduler legs with chunked admission "
                          "prefill at this chunk size")
+    ap.add_argument("--page-dtype", choices=["int8", "fp8"], default="int8",
+                    help="narrow element type for the QUANTIZED paged leg "
+                         "(pools hold narrow bytes + per-slot f32 scales, "
+                         "dequantized inside the paged-attention gather)")
+    ap.add_argument("--min-quant-lanes-ratio", type=float, default=None,
+                    help="exit non-zero unless the quantized leg's lanes-"
+                         "per-byte reaches this multiple of the matched-"
+                         "memory f32 paged leg's — the CI guard that "
+                         "quantized pages actually buy concurrency per "
+                         "KV byte")
+    ap.add_argument("--session-users", type=int, default=4,
+                    help="users in the multi-turn session trace (the host-"
+                         "swap leg); 0 disables the leg")
+    ap.add_argument("--session-turns", type=int, default=3,
+                    help="turns per user in the session trace")
+    ap.add_argument("--host-swap-pages", type=int, default=64,
+                    help="host LRU swap store capacity (pages) for the "
+                         "session leg")
     ap.add_argument("--min-paged-ratio", type=float, default=None,
                     help="exit non-zero unless every matched-memory paged "
                          "leg reaches this fraction of the continuous "
@@ -253,6 +318,10 @@ def main(argv=None):
     model = get_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, max_new_tokens=max_new, stop_token=7)
+    # the quantized engine shares params; only its page pools differ (narrow
+    # elements + scale pools, dequantized inside the paged gather)
+    eng_q = ServeEngine(cfg, params, max_new_tokens=max_new, stop_token=7,
+                        page_dtype=args.page_dtype)
 
     rng = np.random.RandomState(args.seed)
     trace = poisson_trace(rng, n_requests, args.rate, 4, 13,
@@ -263,10 +332,12 @@ def main(argv=None):
               "seed": args.seed, "share_frac": args.share_frac,
               "max_new_tokens": max_new, "cfg": CFG,
               "paged_attn": eng.paged_attn,
+              "page_size": args.page_size,
+              "page_dtype": args.page_dtype,
               "paged_mem_frac": args.paged_mem_frac,
               "psum_mode": args.psum,
               "continuous": [], "static": [], "paged": [], "paged_half": [],
-              "sampled": [], "tp": []}
+              "quantized": [], "session": [], "sampled": [], "tp": []}
 
     def _sampled_params(rid: int):
         # fixed per-request seed (the rid) => the stochastic leg is exactly
@@ -335,6 +406,28 @@ def main(argv=None):
               f"(ratio {p['dense_paged_ratio']:.2f}, "
               f"p50 {p['decode_step_p50_ms']:.1f} ms, "
               f"prefix hits {p['prefix_hits']}/{p['requests']})" + half)
+        # quantized leg: the SAME page count as the matched-memory paged leg
+        # but narrow pool bytes — occupancy holds while the KV footprint
+        # shrinks ~4x, so lanes_per_byte (concurrent lanes per KV byte) is
+        # the headline; quant_lanes_ratio is what CI gates
+        pool = max(int(round(dense_pages * args.paged_mem_frac)), per_lane)
+        bench_capacity(eng_q, trace, capacity=cap, max_len=max_len, chunk=4,
+                       compact_threshold=0.5, page_size=args.page_size,
+                       pool_pages=pool, prefill_chunk=args.prefill_chunk)
+        q = bench_capacity(eng_q, trace, capacity=cap, max_len=max_len,
+                           chunk=4, compact_threshold=0.5,
+                           page_size=args.page_size, pool_pages=pool,
+                           prefill_chunk=args.prefill_chunk)
+        q["mem_frac"] = args.paged_mem_frac
+        q["dense_paged_ratio"] = q["tokens_per_s"] / r["tokens_per_s"]
+        q["quant_lanes_ratio"] = (q["lanes_per_byte"]
+                                  / max(p["lanes_per_byte"], 1e-12))
+        record["quantized"].append(q)
+        print(f"             quantized({q['page_dtype']}) "
+              f"{q['tokens_per_s']:8.1f} tok/s "
+              f"(kv {q['kv_cache_bytes'] / 1e6:.2f} vs "
+              f"{p['kv_cache_bytes'] / 1e6:.2f} MB, "
+              f"lanes/byte x{q['quant_lanes_ratio']:.2f})")
         if args.sampling:
             bench_capacity(eng, trace, capacity=cap, max_len=max_len,
                            chunk=4, compact_threshold=0.5,
@@ -348,6 +441,48 @@ def main(argv=None):
                   f"{q['tokens_per_s']:8.1f} tok/s "
                   f"(p50/p99 {q['decode_step_p50_ms']:.1f}/"
                   f"{q['decode_step_p99_ms']:.1f} ms)")
+
+    if args.session_users:
+        # multi-turn SESSION leg: each user's turn t+1 prompt extends turn
+        # t's, and turn waves are gapped so the earlier lane has retired —
+        # its prefix pages are off-pool — before the follow-up arrives.  A
+        # hit can then only come from the host-swap tier paging the evicted
+        # prefix back in.  Two gates ride the leg: cross-request hits must
+        # actually occur, and the warm run's greedy tokens must equal the
+        # cold (swap-disabled) run byte-for-byte — page-in restores the
+        # same pool bytes that were spilled.
+        cap = capacities[-1]
+        s_max_len = 48
+        s_trace = session_trace(np.random.RandomState(args.seed + 1),
+                                args.session_users, args.session_turns,
+                                args.page_size)
+        kw = dict(capacity=cap, max_len=s_max_len, chunk=4,
+                  compact_threshold=0.5, page_size=args.page_size,
+                  pool_pages=cap * pages_needed(s_max_len, args.page_size))
+        cold: dict = {}
+        bench_capacity(eng, s_trace, **kw, collect=cold)
+        warm: dict = {}
+        sess = bench_capacity(eng, s_trace, **kw,
+                              host_swap_pages=args.host_swap_pages,
+                              collect=warm)
+        follow_ups = args.session_users * (args.session_turns - 1)
+        sess.update({
+            "users": args.session_users,
+            "turns": args.session_turns,
+            "follow_up_requests": follow_ups,
+            "tokens_identical_cold": warm == cold,
+        })
+        record["session"].append(sess)
+        print(f"session({args.session_users}u x {args.session_turns}t)  "
+              f"hits {sess['session_hits']}/{follow_ups} follow-ups "
+              f"({sess['session_hit_tokens']} tokens skipped, "
+              f"swap out/in {sess['swap_out_pages']}/"
+              f"{sess['swap_in_pages']} pages)  "
+              f"tokens identical to cold: {sess['tokens_identical_cold']}")
+        if sess["session_hits"] == 0 or not sess["tokens_identical_cold"]:
+            print("FAIL session leg: expected cross-request hits > 0 with "
+                  "byte-identical tokens after page-in")
+            raise SystemExit(1)
 
     if mesh is not None:
         # tensor-parallel leg at the LARGEST capacity: same trace through a
@@ -398,6 +533,18 @@ def main(argv=None):
             raise SystemExit(1)
         print(f"paged/continuous ratio >= {args.min_paged_ratio} "
               f"at mem_frac={args.paged_mem_frac}: ok")
+
+    if args.min_quant_lanes_ratio is not None:
+        bad = [q for q in record["quantized"]
+               if q["quant_lanes_ratio"] < args.min_quant_lanes_ratio]
+        if bad:
+            for q in bad:
+                print(f"FAIL capacity={q['capacity']}: quantized lanes/byte "
+                      f"x{q['quant_lanes_ratio']:.2f} < "
+                      f"{args.min_quant_lanes_ratio} vs f32 paged")
+            raise SystemExit(1)
+        print(f"quantized lanes-per-byte >= {args.min_quant_lanes_ratio}x "
+              f"f32 paged at matched page count: ok")
 
     if args.min_continuous_ratio is not None:
         top = record["continuous"][-1]

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Docs gate: link-check the markdown layer, and assert docs/BENCH.md's
+glossary covers every key the serving benchmark actually emits.
+
+    python scripts/check_docs.py                      # link check only
+    python scripts/check_docs.py --bench-json BENCH_serving.json
+
+Link check: every relative markdown link in README.md and docs/*.md must
+resolve to an existing file, and fragment links (`file.md#anchor` or
+`#anchor`) must point at a real heading (GitHub slug rules).
+
+Glossary check (with --bench-json): collect the record's top-level keys
+plus every key of every per-leg record, and require each to appear
+backtick-quoted in docs/BENCH.md.  Adding a metric to
+benchmarks/bench_serving.py without documenting it fails this gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug (the subset we rely on)."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set:
+    return {_slugify(h) for h in HEADING_RE.findall(md_path.read_text())}
+
+
+def check_links(md_files) -> list:
+    errors = []
+    for md in md_files:
+        text = md.read_text()
+        # strip fenced code blocks: bench output / shell snippets aren't links
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = md if not path_part else (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> "
+                              f"{target} ({dest} does not exist)")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in _anchors(dest):
+                    errors.append(f"{md.relative_to(ROOT)}: dead anchor -> "
+                                  f"{target} (no heading slugs to "
+                                  f"#{fragment})")
+    return errors
+
+
+def bench_keys(record: dict) -> set:
+    """Every key the bench emits: top-level + each per-leg record's keys."""
+    keys = set(record)
+    for value in record.values():
+        if isinstance(value, list):
+            for rec in value:
+                if isinstance(rec, dict):
+                    keys.update(rec)
+    return keys
+
+
+def check_glossary(bench_json: Path, glossary_md: Path) -> list:
+    record = json.loads(bench_json.read_text())
+    glossary = glossary_md.read_text()
+    missing = sorted(k for k in bench_keys(record)
+                     if f"`{k}`" not in glossary)
+    return [f"{glossary_md.relative_to(ROOT)}: undocumented bench key "
+            f"`{k}` (emitted by benchmarks/bench_serving.py)"
+            for k in missing]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench-json", type=Path, default=None,
+                    help="BENCH_serving.json to check glossary coverage "
+                         "against (skipped if omitted)")
+    args = ap.parse_args()
+
+    md_files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    errors = check_links(md_files)
+    print(f"link check: {len(md_files)} files, "
+          f"{'ok' if not errors else f'{len(errors)} broken'}")
+
+    if args.bench_json is not None:
+        glossary_errors = check_glossary(args.bench_json,
+                                         ROOT / "docs" / "BENCH.md")
+        n = len(bench_keys(json.loads(args.bench_json.read_text())))
+        print(f"glossary check: {n} emitted keys, "
+              f"{'ok' if not glossary_errors else f'{len(glossary_errors)} undocumented'}")
+        errors += glossary_errors
+    else:
+        print("glossary check: skipped (no --bench-json)")
+
+    for e in errors:
+        print(f"  FAIL {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,20 @@ Layout conventions
 * the dense layout is the degenerate case ``page_size == max_len``,
   ``table[b] == [b]`` — one private page per lane, gather is the identity
   permutation.
+
+Quantized pools (SVE §2.3.3 extending/truncating loads)
+-------------------------------------------------------
+SVE's extending gather-loads keep NARROW data in memory and widen it in
+register at the point of use; truncating scatter-stores narrow on the way
+back.  The quantized pool layout is the same contract: pools hold int8 (or
+fp8) elements, and a **scale pool** of shape ``lead + (P, Hkv, page_size)``
+rides alongside under ``<key>_pages_scale`` — one f32 absmax scale per
+(page, head, slot), i.e. per token row.  Per-slot (rather than whole-page)
+scales make the single-token decode scatter an exact local operation: the
+new token quantizes against its own absmax, no read-modify-write of the
+page's other rows.  ``gather_pages(..., scale=)`` widens in the gather —
+the same ``jnp.take`` walks both pools — and ``scatter_page_q`` /
+``scatter_block_q`` truncate on store.
 """
 
 from __future__ import annotations
@@ -47,7 +61,8 @@ def page_whilelt(lens, n_pages: int, page_size: int) -> Array:
     return first_tok < jnp.asarray(lens, jnp.int32)[..., None]
 
 
-def gather_pages(pool: Array, table: Array, *, n_lead: int = 0) -> Array:
+def gather_pages(pool: Array, table: Array, *, n_lead: int = 0,
+                 scale: Array | None = None) -> Array:
     """Gather-load the dense logical view of a paged tensor.
 
     pool: ``lead + (P, Hkv, page_size, D)``; table: ``(B, n_pages) int32``.
@@ -57,13 +72,23 @@ def gather_pages(pool: Array, table: Array, *, n_lead: int = 0) -> Array:
     page ids clamp (JAX gather semantics); garbage beyond a lane's valid
     length is masked downstream by ``kv_lens`` predicates, mirroring the
     dense cache's garbage-beyond-pos contract.
+
+    With ``scale`` (the ``lead + (P, Hkv, page_size)`` per-slot scale pool of
+    a quantized cache) this is an *extending* gather-load: the narrow pool
+    elements widen to f32 in the returned view, ``q * scale`` per token row —
+    the same index vector drives both walks.
     """
     b, n_pages = table.shape
     lead = pool.shape[:n_lead]
     hkv, ps, d = pool.shape[n_lead + 1:]
-    flat = jnp.take(pool, table.reshape(-1).astype(jnp.int32), axis=n_lead)
+    ids = table.reshape(-1).astype(jnp.int32)
+    flat = jnp.take(pool, ids, axis=n_lead)
     out = flat.reshape(lead + (b, n_pages, hkv, ps, d))
     out = jnp.moveaxis(out, n_lead + 1, n_lead + 2)     # lead+(B,Hkv,n,ps,D)
+    if scale is not None:
+        sc = jnp.take(scale, ids, axis=n_lead).reshape(lead + (b, n_pages, hkv, ps))
+        sc = jnp.moveaxis(sc, n_lead + 1, n_lead + 2)   # lead+(B,Hkv,n,ps)
+        out = out.astype(sc.dtype) * sc[..., None]
     return out.reshape(lead + (b, hkv, n_pages * ps, d))
 
 
@@ -110,13 +135,125 @@ def gather_block(pool: Array, page_ids: Array, *, n_lead: int = 0) -> Array:
 
 
 def alloc_pools(spec: dict, pool_pages: int, page_size: int, kv_heads: int,
-                head_dim: int, dtype) -> dict:
+                head_dim: int, dtype, page_dtype=None) -> dict:
     """Allocate the zeroed page pools for a family's paged-cache spec.
 
     ``spec`` maps cache key -> tuple of leading (layer-stack) dims; the pool
     for key ``k`` is stored under ``k + "_pages"`` with shape
     ``lead + (pool_pages, kv_heads, page_size, head_dim)``.
+
+    ``page_dtype`` (``"int8"`` / ``"fp8"`` or a dtype) switches the pool to
+    narrow in-memory storage: elements are held quantized and an f32 scale
+    pool of shape ``lead + (pool_pages, kv_heads, page_size)`` is allocated
+    under ``k + "_pages_scale"`` (one absmax scale per token row).
     """
-    return {key + "_pages": jnp.zeros(tuple(lead) + (pool_pages, kv_heads,
-                                                     page_size, head_dim), dtype)
-            for key, lead in spec.items()}
+    qdt = resolve_page_dtype(page_dtype)
+    pool_dt = qdt if qdt is not None else dtype
+    pools = {}
+    for key, lead in spec.items():
+        pools[key + "_pages"] = jnp.zeros(
+            tuple(lead) + (pool_pages, kv_heads, page_size, head_dim), pool_dt)
+        if qdt is not None:
+            pools[key + "_pages_scale"] = jnp.zeros(
+                tuple(lead) + (pool_pages, kv_heads, page_size), jnp.float32)
+    return pools
+
+
+# --- quantization: narrow-in-memory pools, widened in the gather ------------
+
+_QUANT_NAMES = {"int8": "int8", "fp8": "float8_e4m3fn",
+                "float8_e4m3fn": "float8_e4m3fn"}
+
+
+def resolve_page_dtype(page_dtype):
+    """Normalize a ``--page-dtype`` value to a jnp dtype (or None for full
+    precision).  Accepts ``"int8"``, ``"fp8"``/``"float8_e4m3fn"``, a dtype,
+    or None."""
+    if page_dtype is None:
+        return None
+    if isinstance(page_dtype, str):
+        name = _QUANT_NAMES.get(page_dtype)
+        if name is None:
+            raise ValueError(f"unknown page_dtype {page_dtype!r}; "
+                             f"expected one of {sorted(_QUANT_NAMES)}")
+        if name == "float8_e4m3fn" and not hasattr(jnp, "float8_e4m3fn"):
+            raise ValueError("fp8 pages need a jax with jnp.float8_e4m3fn")
+        page_dtype = getattr(jnp, name)
+    dt = jnp.dtype(page_dtype)
+    if not is_quant_dtype(dt):
+        raise ValueError(f"page_dtype {dt} is not a supported narrow type")
+    return dt
+
+
+def is_quant_dtype(dtype) -> bool:
+    """True for the narrow in-memory element types pools may quantize to."""
+    dt = jnp.dtype(dtype)
+    return dt == jnp.dtype(jnp.int8) or dt.name.startswith("float8")
+
+
+def quant_max(dtype) -> float:
+    """Largest representable magnitude of a narrow pool dtype — absmax maps
+    onto this, the quantized analogue of the widest in-register value."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.int8):
+        return 127.0
+    return float(jnp.finfo(dt).max)
+
+
+def quantize_block(values: Array, dtype) -> tuple[Array, Array]:
+    """Truncating store: quantize ``values (..., D)`` to ``dtype`` with one
+    absmax scale per row.  Returns ``(q (..., D) dtype, scale (...,) f32)``
+    with ``q * scale ≈ values``; all-zero rows get scale 0 (and decode to 0).
+    """
+    v = values.astype(jnp.float32)
+    qmax = quant_max(dtype)
+    absmax = jnp.max(jnp.abs(v), axis=-1)
+    scale = absmax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = v / safe[..., None]
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        q = jnp.round(q)
+    # clip in all cases: float rounding in the division can land a hair past
+    # qmax, which would saturate int8 wrongly and overflow fp8 (no inf) to nan
+    q = jnp.clip(q, -qmax, qmax)
+    return q.astype(dtype), scale.astype(jnp.float32)
+
+
+def dequantize(q: Array, scale: Array) -> Array:
+    """Extending load: widen ``q (..., D)`` by its per-row ``scale (...,)``."""
+    return q.astype(scale.dtype) * scale[..., None]
+
+
+def scatter_page_q(pool: Array, scale: Array, page_ids: Array, offsets: Array,
+                   values: Array, *, n_lead: int = 0) -> tuple[Array, Array]:
+    """Quantizing ``scatter_page``: truncate one f32 element per lane into a
+    narrow pool, storing its absmax scale in the scale pool at the same
+    (page, offset) — the decode-step write of a quantized cache.  Returns the
+    updated ``(pool, scale)``.
+    """
+    q, sc = quantize_block(values, pool.dtype)       # lead+(B,Hkv,D) / (B,Hkv)
+    pool = scatter_page(pool, page_ids, offsets, q, n_lead=n_lead)
+    lead = scale.shape[:n_lead]
+    b = page_ids.shape[0]
+    hkv = scale.shape[n_lead + 1]
+    scale2 = scale.reshape((-1,) + scale.shape[n_lead:])      # (lead*,P,Hkv,ps)
+    vals = sc.reshape((-1, b, hkv))                           # (lead*,B,Hkv)
+    vals = jnp.moveaxis(vals, 0, 1)                           # (B,lead*,Hkv)
+    idx = (slice(None), page_ids.astype(jnp.int32), slice(None),
+           offsets.astype(jnp.int32))
+    # non-adjacent advanced indices: the broadcast lane axis leads, as in
+    # scatter_page
+    scale2 = scale2.at[idx].set(vals.astype(scale.dtype))
+    return pool, scale2.reshape(lead + scale.shape[n_lead:])
+
+
+def scatter_block_q(pool: Array, scale: Array, page_ids: Array, blocks: Array,
+                    *, n_lead: int = 0) -> tuple[Array, Array]:
+    """Quantizing ``scatter_block``: truncate whole f32 pages
+    ``(K,) + lead + (Hkv, ps, D)`` into a narrow pool, with per-slot scales
+    landing in the scale pool — the admission path of a quantized cache.
+    Returns the updated ``(pool, scale)``.
+    """
+    q, sb = quantize_block(blocks, pool.dtype)
+    return (scatter_block(pool, page_ids, q, n_lead=n_lead),
+            scatter_block(scale, page_ids, sb, n_lead=n_lead))

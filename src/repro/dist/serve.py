@@ -15,6 +15,9 @@ serving, the data axis carries lanes only):
     not divide the axis REPLICATES (the divisibility fallback); the page
     and page-size dims are never sharded — pages are gathered by table,
     splitting them would turn every gather into a collective.
+  * scale pools ``<key>_pages_scale`` — ``lead + (P, Hkv, page_size)``
+    (quantized caches): KV heads take "model" with their pool; page dims
+    whole, for the same reason.
   * per-lane dense KV — ``lead + (B, Hkv, S, D)``: lanes over "data", KV
     heads over "model" with the ``kv_seq`` flash-decode fallback for GQA
     head counts (left-to-right resolution in ``spec_for``).
@@ -53,6 +56,12 @@ def cache_axes(cfg, cache) -> dict:
         elif key.endswith("_pages"):
             ax = [None] * nd
             ax[nd - 3] = "kv_heads"
+            out[key] = tuple(ax)
+        elif key.endswith("_pages_scale"):
+            # per-slot scale pools lead + (P, Hkv, ps): shard the head axis
+            # with the pool it scales; page dims stay whole
+            ax = [None] * nd
+            ax[nd - 2] = "kv_heads"
             out[key] = tuple(ax)
         elif key in lane_ax:
             la = lane_ax[key]

@@ -40,6 +40,23 @@ def _flash_kernel(
     m_scr, l_scr, acc_scr,
     *, bq: int, bk: int, n_kv: int, causal: bool, scale: float,
 ):
+    _flash_tile(kvlen_ref, qoff_ref, win_ref, q_ref,
+                k_ref[0, 0].astype(jnp.float32),
+                v_ref[0, 0].astype(jnp.float32),
+                o_ref, m_scr, l_scr, acc_scr,
+                bq=bq, bk=bk, n_kv=n_kv, causal=causal, scale=scale)
+
+
+def _flash_tile(
+    kvlen_ref, qoff_ref, win_ref, q_ref,
+    k, v,                                          # (bk, D) f32 tiles, loaded
+    o_ref, m_scr, l_scr, acc_scr,
+    *, bq: int, bk: int, n_kv: int, causal: bool, scale: float,
+):
+    """The shared online-softmax tile body.  K/V tiles arrive as loaded f32
+    arrays so callers may widen narrow (quantized) storage on the way in —
+    the in-register half of SVE's extending load — without forking the math.
+    """
     b = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -51,8 +68,6 @@ def _flash_kernel(
         acc_scr[...] = jnp.zeros_like(acc_scr[...])
 
     q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
-    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
-    v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale  # (bq, bk)
@@ -119,6 +134,31 @@ def _flash_kernel_paged(
                   causal=causal, scale=scale)
 
 
+def _flash_kernel_paged_quant(
+    # scalar-prefetch operands (SMEM)
+    table_ref, kvlen_ref, qoff_ref, win_ref,
+    # blocked operands: narrow K/V page tiles + their per-slot scale rows
+    q_ref, k_ref, v_ref, ks_ref, vs_ref,
+    # blocked output
+    o_ref,
+    # VMEM scratch
+    m_scr, l_scr, acc_scr,
+    *, bq: int, page_size: int, n_pages: int, causal: bool, scale: float,
+):
+    """Quantized paged tile: the scale rows arrive through the SAME
+    table-driven index_map as the K/V page, and the narrow elements widen in
+    register (``q8 * scale`` per token row) before the unchanged softmax body
+    — SVE §2.3.3's extending gather-load at the block-fetch level."""
+    del table_ref                                  # consumed by the index_maps
+    k = (k_ref[0, 0].astype(jnp.float32)
+         * ks_ref[0, 0].astype(jnp.float32)[:, None])
+    v = (v_ref[0, 0].astype(jnp.float32)
+         * vs_ref[0, 0].astype(jnp.float32)[:, None])
+    _flash_tile(kvlen_ref, qoff_ref, win_ref, q_ref, k, v, o_ref,
+                m_scr, l_scr, acc_scr, bq=bq, bk=page_size, n_kv=n_pages,
+                causal=causal, scale=scale)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bq", "causal", "scale", "interpret"))
@@ -126,6 +166,7 @@ def flash_attention_pallas_paged(
     q, k_pool, v_pool, page_table, kv_lens, q_offset, window,
     *, bq: int = 256, causal: bool = False,
     scale: float | None = None, interpret: bool = True,
+    k_scale=None, v_scale=None,
 ):
     """q: (B, Hq, Sq, D) with Sq % bq == 0; k_pool/v_pool: (P, Hkv, ps, D);
     page_table: (B, n_pages) int32.  The KV grid axis walks LOGICAL pages;
@@ -133,7 +174,11 @@ def flash_attention_pallas_paged(
     PHYSICAL page, so block (b, j) fetches ``pool[table[b, j]]``.  The table
     arrives with out-of-strip (possibly stale) entries already clamped under
     the page-granular whilelt (ops._flash_paged), so the index_map never
-    chases a freed id; the in-kernel predicate masks those blocks anyway."""
+    chases a freed id; the in-kernel predicate masks those blocks anyway.
+
+    ``k_scale`` / ``v_scale``: ``(P, Hkv, ps)`` per-slot scale pools of a
+    QUANTIZED cache; their (1, 1, ps) blocks ride the same table-driven
+    index_map and the kernel widens the narrow K/V in register."""
     bsz, hq, sq, d = q.shape
     hkv, ps = k_pool.shape[1], k_pool.shape[2]
     n_pages = page_table.shape[1]
@@ -141,10 +186,11 @@ def flash_attention_pallas_paged(
     assert sq % bq == 0, (sq, bq)
     n_q = sq // bq
     scale = (d ** -0.5) if scale is None else scale
+    quant = k_scale is not None
 
+    kern = _flash_kernel_paged_quant if quant else _flash_kernel_paged
     kernel = functools.partial(
-        _flash_kernel_paged, bq=bq, page_size=ps, n_pages=n_pages,
-        causal=causal, scale=scale)
+        kern, bq=bq, page_size=ps, n_pages=n_pages, causal=causal, scale=scale)
 
     def q_map(b, h, i, j, table, kvl, qo, win):
         return (b, h, i, 0)
@@ -152,14 +198,24 @@ def flash_attention_pallas_paged(
     def kv_map(b, h, i, j, table, kvl, qo, win):
         return (table[b, j], h // group, 0, 0)     # the gather: index vector
 
+    def sc_map(b, h, i, j, table, kvl, qo, win):
+        return (table[b, j], h // group, 0)        # scale rows: same walk
+
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d), q_map),
+        pl.BlockSpec((1, 1, ps, d), kv_map),
+        pl.BlockSpec((1, 1, ps, d), kv_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, ps), sc_map),
+                     pl.BlockSpec((1, 1, ps), sc_map)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,                     # table, kv_lens, qoff, win
         grid=(bsz, hq, n_q, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d), q_map),
-            pl.BlockSpec((1, 1, ps, d), kv_map),
-            pl.BlockSpec((1, 1, ps, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
         scratch_shapes=[
             pltpu.VMEM((bq, 128), jnp.float32),
@@ -172,8 +228,7 @@ def flash_attention_pallas_paged(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), kv_lens, q_offset, window,
-      q, k_pool, v_pool)
+    )(page_table.astype(jnp.int32), kv_lens, q_offset, window, *operands)
 
 
 @functools.partial(

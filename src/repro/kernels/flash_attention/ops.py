@@ -33,7 +33,7 @@ def flash_attention(
     *, kv_lens=None, causal: bool = False, window: int | None = None,
     q_offset=None, scale: float | None = None,
     impl: str = "kernel", bq: int | None = None, bk: int | None = None,
-    interpret: bool = True, page_table=None,
+    interpret: bool = True, page_table=None, k_scale=None, v_scale=None,
 ):
     """Predicated attention.  q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).
 
@@ -47,12 +47,18 @@ def flash_attention(
     - ``page_table``: (B, n_pages) int32 — PAGED mode: ``k``/``v`` are page
       POOLS of shape (P, Hkv, page_size, D) and attention reads K/V through
       the table (SVE §2.3.3 gather-load).  Forward-only (serving).
+    - ``k_scale`` / ``v_scale``: (P, Hkv, page_size) per-slot scale pools of a
+      QUANTIZED paged cache; the gather widens ``q8 * scale`` in register (the
+      extending gather-load).  Paged mode only.
     """
     if page_table is not None:
         return _flash_paged(q, k, v, page_table, kv_lens=kv_lens,
                             causal=causal, window=window, q_offset=q_offset,
                             scale=scale, impl=impl, bq=bq,
-                            interpret=interpret)
+                            interpret=interpret,
+                            k_scale=k_scale, v_scale=v_scale)
+    assert k_scale is None and v_scale is None, \
+        "quantized K/V scales require page_table (paged mode)"
     b, hq, sq, d = q.shape
     skv = k.shape[2]
     if kv_lens is None:
@@ -96,7 +102,8 @@ def flash_attention(
 
 
 def _flash_paged(q, k_pool, v_pool, page_table, *, kv_lens, causal, window,
-                 q_offset, scale, impl, bq, interpret):
+                 q_offset, scale, impl, bq, interpret,
+                 k_scale=None, v_scale=None):
     """Paged dispatch: pools + page table instead of dense K/V."""
     b, hq, sq, d = q.shape
     ps = k_pool.shape[2]
@@ -120,9 +127,10 @@ def _flash_paged(q, k_pool, v_pool, page_table, *, kv_lens, causal, window,
                            page_table, 0)
 
     if impl == "naive":
-        # quadratic oracle over the gathered dense view (tests only)
-        k = _paging.gather_pages(k_pool, page_table)
-        v = _paging.gather_pages(v_pool, page_table)
+        # quadratic oracle over the gathered dense view (tests only) — the
+        # extending gather widens quantized pools here too
+        k = _paging.gather_pages(k_pool, page_table, scale=k_scale)
+        v = _paging.gather_pages(v_pool, page_table, scale=v_scale)
         return _ref.mha_ref(q, k, v, kv_lens=kv_lens, causal=causal,
                             window=window, q_offset=q_offset, scale=scale)
 
@@ -138,9 +146,11 @@ def _flash_paged(q, k_pool, v_pool, page_table, *, kv_lens, causal, window,
     if impl == "xla":
         out = flash_attention_xla_paged(
             q, k_pool, v_pool, page_table, kv_lens, q_offset, win[0],
-            causal=causal, scale=scale_f, bq=bq)
+            causal=causal, scale=scale_f, bq=bq,
+            k_scale=k_scale, v_scale=v_scale)
     else:
         out = flash_attention_pallas_paged(
             q, k_pool, v_pool, page_table, kv_lens, q_offset, win,
-            bq=bq, causal=causal, scale=scale_f, interpret=interpret)
+            bq=bq, causal=causal, scale=scale_f, interpret=interpret,
+            k_scale=k_scale, v_scale=v_scale)
     return out[:, :, :sq, :]

@@ -194,7 +194,8 @@ def flash_attention_xla(q, k, v, kv_lens, q_offset, window, *, causal,
 # ---------------------------------------------------------------------------
 
 def flash_attention_xla_paged(q, k_pool, v_pool, page_table, kv_lens,
-                              q_offset, window, *, causal, scale, bq):
+                              q_offset, window, *, causal, scale, bq,
+                              k_scale=None, v_scale=None):
     """Flash forward over a PAGED KV cache (SVE §2.3.3 gather-load).
 
     k_pool / v_pool: ``(P, Hkv, page_size, D)`` page pools; ``page_table``:
@@ -208,6 +209,11 @@ def flash_attention_xla_paged(q, k_pool, v_pool, page_table, kv_lens,
     out-of-strip (possibly stale) entries already clamped to page 0 under the
     page-granular whilelt — ops._flash_paged governs the walk once for every
     impl.
+
+    ``k_scale`` / ``v_scale``: ``(P, Hkv, page_size)`` per-slot scale pools
+    of a QUANTIZED cache — the same ``jnp.take`` that fetches a page fetches
+    its scales and widens the narrow elements in register (SVE §2.3.3
+    extending gather-load): ``kb = q8 * scale``.
     """
     b, h, sq, d = q.shape
     hkv, ps = k_pool.shape[1], k_pool.shape[2]
@@ -226,6 +232,10 @@ def flash_attention_xla_paged(q, k_pool, v_pool, page_table, kv_lens,
             pids = table[:, ik]
             kb = jnp.take(k_pool, pids, axis=0).astype(f32)   # (B,Hkv,ps,D)
             vb = jnp.take(v_pool, pids, axis=0).astype(f32)
+            if k_scale is not None:
+                kb = kb * jnp.take(k_scale, pids, axis=0)[..., None]
+            if v_scale is not None:
+                vb = vb * jnp.take(v_scale, pids, axis=0)[..., None]
             s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
             pred = _block_pred(iq, ik, bq, ps, kv_lens, q_offset, window,
                                causal)[:, None, None]

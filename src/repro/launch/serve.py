@@ -43,6 +43,16 @@ def main():
                          "footprint, capacity * pages-per-lane)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable prompt-prefix page sharing under --page-size")
+    ap.add_argument("--page-dtype", choices=["int8", "fp8"], default=None,
+                    help="quantized KV page pools: pages hold narrow elements "
+                         "with per-(page, head, slot) f32 absmax scales, "
+                         "dequantized inside the paged-attention gather "
+                         "(requires --page-size)")
+    ap.add_argument("--host-swap-pages", type=int, default=None,
+                    help="host-side LRU swap store capacity in pages: shared-"
+                         "prefix pages spill to host on eviction and page "
+                         "back in on a later prompt hit — the cross-request "
+                         "session cache (requires --page-size)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split admission prefill into chunks of this many "
                          "tokens interleaved with decode rounds (long "
@@ -137,8 +147,15 @@ def main():
             .astype(np.float32))
         batch["src_lens"] = jnp.full((args.batch,), args.prompt_len, jnp.int32)
 
+    if args.page_dtype is not None and args.page_size is None:
+        ap.error("--page-dtype requires --page-size (quantization lives in "
+                 "the page pools)")
+    if args.host_swap_pages is not None and args.page_size is None:
+        ap.error("--host-swap-pages requires --page-size (the swap tier "
+                 "moves pages)")
     eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7,
-                      paged_attn=args.paged_attn, mesh=mesh)
+                      paged_attn=args.paged_attn, mesh=mesh,
+                      page_dtype=args.page_dtype)
     if args.static or cfg.cross_attn_group:
         # vlm cross_emb extras are per-batch, not yet per-request: static path
         res = eng.generate(batch, sampling=[_sampling(i)
@@ -158,6 +175,7 @@ def main():
         compact_threshold=args.compact_threshold, page_size=args.page_size,
         pool_pages=args.pool_pages,
         prefix_sharing=not args.no_prefix_sharing,
+        host_swap_pages=args.host_swap_pages,
         prefill_chunk=args.prefill_chunk,
         fused=not args.no_fused, overlap=args.overlap, src_len=src_len)
     rid_len = {}
@@ -191,7 +209,15 @@ def main():
               f"mean pool occupancy={sum(pocc) / max(len(pocc), 1):.2f}  "
               f"prefix hits={sched.stats['prefix_hits']} "
               f"({sched.stats['prefix_hit_tokens']} tokens skipped)  "
-              f"page waits={sched.stats['page_waits']}")
+              f"page waits={sched.stats['page_waits']}"
+              + (f"  page_dtype={args.page_dtype}" if args.page_dtype
+                 else ""))
+        if args.host_swap_pages:
+            print(f"[swap] session hits={sched.stats['session_hits']} "
+                  f"({sched.stats['session_hit_tokens']} tokens skipped)  "
+                  f"out={sched.stats['swap_out_pages']} "
+                  f"in={sched.stats['swap_in_pages']} pages  "
+                  f"store={len(sched.host_swap)}/{args.host_swap_pages}")
 
 
 if __name__ == "__main__":

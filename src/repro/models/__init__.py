@@ -128,6 +128,14 @@ def is_paged(cache) -> bool:
     return isinstance(cache, dict) and "page_table" in cache
 
 
+def is_quantized(cache) -> bool:
+    """True when the paged cache stores pools NARROW (int8/fp8) with per-slot
+    scale pools riding alongside under ``<key>_pages_scale`` — SVE §2.3.3
+    extending/truncating loads applied to KV memory."""
+    return isinstance(cache, dict) and any(
+        k.endswith("_pages_scale") for k in cache)
+
+
 def paged_decode_ok(cfg) -> bool:
     """True when cfg's family decode() consumes a paged cache NATIVELY:
     flash attention reads K/V through the page table and each layer
@@ -168,7 +176,7 @@ def chunked_prefill_granularity(cfg) -> int:
     return int(fn(cfg)) if fn else 1
 
 
-def to_paged(cfg, cache, *, page_size: int, pool_pages=None):
+def to_paged(cfg, cache, *, page_size: int, pool_pages=None, page_dtype=None):
     """Convert a DENSE cache to the paged layout with identity page tables
     (lane b's logical block j lives in physical page ``b * n_pages + j``).
 
@@ -177,6 +185,10 @@ def to_paged(cfg, cache, *, page_size: int, pool_pages=None):
     serve families the scheduler does not manage (encdec, vlm) through the
     native paged decode path, and by tests to build paged caches without a
     scheduler.  Token axes are zero-padded up to a page multiple.
+
+    With ``page_dtype`` the pools store NARROW: each token row truncates to
+    int8/fp8 against its absmax scale (``<key>_pages_scale``), and the
+    round trip through ``paged_view`` is identity up to quantization error.
     """
     spec = get_model(cfg).paged_cache_spec(cfg)
     if not spec:
@@ -190,6 +202,7 @@ def to_paged(cfg, cache, *, page_size: int, pool_pages=None):
     if pool_pages < need:
         raise ValueError(f"pool_pages={pool_pages} < {need} needed for the "
                          f"identity layout ({b} lanes x {n_pages} pages)")
+    qdt = PG.resolve_page_dtype(page_dtype)
     out = {k: v for k, v in cache.items() if k not in spec}
     for key, lead in spec.items():
         nl = len(lead)
@@ -207,6 +220,9 @@ def to_paged(cfg, cache, *, page_size: int, pool_pages=None):
             widths = [(0, 0)] * v.ndim
             widths[nl] = (0, pool_pages - need)
             v = jnp.pad(v, widths)
+        if qdt is not None:
+            v, sc = PG.quantize_block(v, qdt)        # truncating store
+            out[key + "_pages_scale"] = sc
         out[key + "_pages"] = v
     out["page_table"] = (jnp.arange(b, dtype=jnp.int32)[:, None] * n_pages
                          + jnp.arange(n_pages, dtype=jnp.int32)[None, :])
@@ -215,14 +231,18 @@ def to_paged(cfg, cache, *, page_size: int, pool_pages=None):
 
 def paged_view(cfg, cache):
     """Materialize the dense logical view of a paged cache through the page
-    table (SVE gather-load).  Non-paged per-lane entries pass through."""
+    table (SVE gather-load).  Non-paged per-lane entries pass through.  On a
+    quantized cache the gather widens (dequantizes) the pools, so the view is
+    always full precision."""
     spec = get_model(cfg).paged_cache_spec(cfg)
     table = cache["page_table"]
     out = {k: v for k, v in cache.items()
-           if k != "page_table" and not k.endswith("_pages")}
+           if k != "page_table" and not k.endswith("_pages")
+           and not k.endswith("_pages_scale")}
     for key, lead in spec.items():
         out[key] = PG.gather_pages(cache[key + "_pages"], table,
-                                   n_lead=len(lead))
+                                   n_lead=len(lead),
+                                   scale=cache.get(key + "_pages_scale"))
     return out
 
 
@@ -248,8 +268,14 @@ def paged_writeback(cfg, cache, view, pos):
         s = v.shape[-2]
         idx = jnp.clip(pos, 0, s - 1).reshape((1,) * len(lead) + (-1, 1, 1, 1))
         tok = jnp.take_along_axis(v, idx, axis=-2)[..., 0, :]   # lead+(B,Hkv,D)
-        out[key + "_pages"] = PG.scatter_page(cache[key + "_pages"], page_ids,
-                                              offsets, tok, n_lead=len(lead))
+        sc = cache.get(key + "_pages_scale")
+        if sc is not None:                            # truncating store
+            out[key + "_pages"], out[key + "_pages_scale"] = PG.scatter_page_q(
+                cache[key + "_pages"], sc, page_ids, offsets, tok,
+                n_lead=len(lead))
+        else:
+            out[key + "_pages"] = PG.scatter_page(
+                cache[key + "_pages"], page_ids, offsets, tok, n_lead=len(lead))
     for k, v in view.items():
         if k not in spec:
             out[k] = v

@@ -193,14 +193,15 @@ def paged_cache_spec(cfg):
 
 
 def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
-                     pool_pages: int, dtype=None):
+                     pool_pages: int, dtype=None, page_dtype=None):
     """Paged decode cache: shared page pools + per-lane page table (+ the
-    non-token-indexed remainder of make_cache)."""
+    non-token-indexed remainder of make_cache).  ``page_dtype`` ("int8" /
+    "fp8") stores pools narrow with per-slot scale pools riding alongside."""
     from repro.core import paging as PG
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     cache = PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
-                           hkv, hd, dtype)
+                           hkv, hd, dtype, page_dtype=page_dtype)
     cache["page_table"] = jnp.zeros(
         (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
     cache["pos"] = jnp.zeros((batch_size,), jnp.int32)
@@ -317,10 +318,13 @@ def decode(params, cfg, batch, cache):
         n_groups = cfg.n_layers // g
         h = x
         paged = "k_pages" in cache
+        ksc = vsc = None
         if paged:
             # native paged vlm decode: self-attention K/V lives in page pools
             # (lead (n_groups, n_self)); cross K/V stays a per-lane constant
             kc, vc = cache["k_pages"], cache["v_pages"]
+            ksc = cache.get("k_pages_scale")
+            vsc = cache.get("v_pages_scale")
             table = cache["page_table"]
         else:
             kc, vc = cache["k"], cache["v"]
@@ -331,16 +335,26 @@ def decode(params, cfg, batch, cache):
                     h = _cross_decode(gp["cross"], h, positions, cfg,
                                       cache["cross_k"][gi], cache["cross_v"][gi])
                 lp = jax.tree.map(lambda a, si=si: a[si], gp["self"])
-                layer_cache = ((kc[gi, si], vc[gi, si], table) if paged
-                               else (kc[gi, si], vc[gi, si]))
-                h, (kn, vn) = L.block_apply(
+                if not paged:
+                    layer_cache = (kc[gi, si], vc[gi, si])
+                elif ksc is None:
+                    layer_cache = (kc[gi, si], vc[gi, si], table)
+                else:
+                    layer_cache = (kc[gi, si], vc[gi, si], table,
+                                   ksc[gi, si], vsc[gi, si])
+                h, new_kv = L.block_apply(
                     lp, h, positions, cfg, causal=False, kv_lens=pos + 1,
                     q_offset=pos, cache=layer_cache, cache_pos=pos)
-                kc = kc.at[gi, si].set(kn)
-                vc = vc.at[gi, si].set(vn)
+                kc = kc.at[gi, si].set(new_kv[0])
+                vc = vc.at[gi, si].set(new_kv[1])
+                if ksc is not None:
+                    ksc = ksc.at[gi, si].set(new_kv[2])
+                    vsc = vsc.at[gi, si].set(new_kv[3])
         cache = dict(cache)
         if paged:
             cache["k_pages"], cache["v_pages"] = kc, vc
+            if ksc is not None:
+                cache["k_pages_scale"], cache["v_pages_scale"] = ksc, vsc
         else:
             cache["k"], cache["v"] = kc, vc
     elif "k_pages" in cache:
@@ -349,17 +363,27 @@ def decode(params, cfg, batch, cache):
         # (SVE §2.3.3) — the pool, not a per-lane dense cache, is the operand
         h = x
         kp, vp = cache["k_pages"], cache["v_pages"]     # (L, P, Hkv, ps, Dh)
+        ksc = cache.get("k_pages_scale")                # (L, P, Hkv, ps) | None
+        vsc = cache.get("v_pages_scale")
         table = cache["page_table"]
+        dus = jax.lax.dynamic_update_slice_in_dim
         for li in range(cfg.n_layers):
             lp = jax.tree.map(lambda a, li=li: a[li], params["blocks"])
-            h, (kl, vl) = L.block_apply(
+            layer_cache = ((kp[li], vp[li], table) if ksc is None
+                           else (kp[li], vp[li], table, ksc[li], vsc[li]))
+            h, new_kv = L.block_apply(
                 lp, h, positions, cfg, causal=False, window=wins[li],
-                kv_lens=pos + 1, q_offset=pos, cache=(kp[li], vp[li], table),
+                kv_lens=pos + 1, q_offset=pos, cache=layer_cache,
                 cache_pos=pos)
-            kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
-            vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+            kp = dus(kp, new_kv[0][None], li, axis=0)
+            vp = dus(vp, new_kv[1][None], li, axis=0)
+            if ksc is not None:
+                ksc = dus(ksc, new_kv[2][None], li, axis=0)
+                vsc = dus(vsc, new_kv[3][None], li, axis=0)
         cache = dict(cache)
         cache["k_pages"], cache["v_pages"] = kp, vp
+        if ksc is not None:
+            cache["k_pages_scale"], cache["v_pages_scale"] = ksc, vsc
     elif not cfg.scan_layers_decode:
         # unrolled decode: per-layer dynamic-update-slice on the STACKED cache
         # lets XLA alias in place — no scan-ys double buffer (EXPERIMENTS §Perf)

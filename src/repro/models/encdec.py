@@ -200,13 +200,14 @@ def paged_cache_spec(cfg):
 
 
 def make_paged_cache(cfg, batch_size: int, max_len: int, src_len: int = 1, *,
-                     page_size: int, pool_pages: int, dtype=None):
+                     page_size: int, pool_pages: int, dtype=None,
+                     page_dtype=None):
     from repro.core import paging as PG
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     lcount = cfg.n_dec_layers
     cache = PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
-                           hkv, hd, dtype)
+                           hkv, hd, dtype, page_dtype=page_dtype)
     cache["page_table"] = jnp.zeros(
         (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
     cache["cross_k"] = jnp.zeros((lcount, batch_size, hkv, src_len, hd), dtype)
@@ -288,18 +289,28 @@ def _decode_paged(params, cfg, x, positions, cache):
     table = cache["page_table"]
     cache = dict(cache)
     kp, vp = cache["k_pages"], cache["v_pages"]
+    ksc = cache.get("k_pages_scale")
+    vsc = cache.get("v_pages_scale")
     h = x
+    dus = jax.lax.dynamic_update_slice_in_dim
     for li in range(cfg.n_dec_layers):
         lp = jax.tree.map(lambda a, li=li: a[li], params["dec_blocks"])
-        h, (kl, vl) = _dec_block_apply(
+        layer_cache = ((kp[li], vp[li], table) if ksc is None
+                       else (kp[li], vp[li], table, ksc[li], vsc[li]))
+        h, new_kv = _dec_block_apply(
             lp, h, positions, cfg, None, src_lens=cache["src_lens"],
-            kv_lens=pos + 1, q_offset=pos, cache=(kp[li], vp[li], table),
+            kv_lens=pos + 1, q_offset=pos, cache=layer_cache,
             cache_pos=pos,
             cross_cache=(cache["cross_k"][li], cache["cross_v"][li]),
             causal=False)
-        kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
-        vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+        kp = dus(kp, new_kv[0][None], li, axis=0)
+        vp = dus(vp, new_kv[1][None], li, axis=0)
+        if ksc is not None:
+            ksc = dus(ksc, new_kv[2][None], li, axis=0)
+            vsc = dus(vsc, new_kv[3][None], li, axis=0)
     cache["k_pages"], cache["v_pages"] = kp, vp
+    if ksc is not None:
+        cache["k_pages_scale"], cache["v_pages_scale"] = ksc, vsc
     return h, cache
 
 

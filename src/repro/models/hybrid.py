@@ -130,14 +130,15 @@ def paged_cache_spec(cfg):
 
 
 def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
-                     pool_pages: int, dtype=None):
+                     pool_pages: int, dtype=None, page_dtype=None):
     from repro.core import paging as PG
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     dense = make_cache(cfg, batch_size, max_len, dtype=dtype)
     cache = {k: v for k, v in dense.items()
              if k not in ("shared_k", "shared_v")}
     cache.update(PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
-                                cfg.n_kv_heads, cfg.resolved_head_dim, dtype))
+                                cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
+                                page_dtype=page_dtype))
     cache["page_table"] = jnp.zeros(
         (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
     return cache
@@ -228,6 +229,8 @@ def _decode_paged(params, cfg, x, positions, cache):
     h = x
     conv, state = cache["conv"], cache["state"]
     skp, svp = cache["shared_k_pages"], cache["shared_v_pages"]
+    sksc = cache.get("shared_k_pages_scale")
+    svsc = cache.get("shared_v_pages_scale")
     n_groups = skp.shape[0]
 
     def mamba_body(carry, xs):
@@ -242,13 +245,21 @@ def _decode_paged(params, cfg, x, positions, cache):
                                       (gp, conv[gi], state[gi]))
         conv = conv.at[gi].set(cg)
         state = state.at[gi].set(sg)
-        h, (skl, svl) = L.block_apply(
+        layer_cache = ((skp[gi], svp[gi], table) if sksc is None
+                       else (skp[gi], svp[gi], table, sksc[gi], svsc[gi]))
+        h, new_kv = L.block_apply(
             shared, h, positions, cfg, causal=False, kv_lens=pos + 1,
-            q_offset=pos, cache=(skp[gi], svp[gi], table), cache_pos=pos)
-        skp = skp.at[gi].set(skl)
-        svp = svp.at[gi].set(svl)
+            q_offset=pos, cache=layer_cache, cache_pos=pos)
+        skp = skp.at[gi].set(new_kv[0])
+        svp = svp.at[gi].set(new_kv[1])
+        if sksc is not None:
+            sksc = sksc.at[gi].set(new_kv[2])
+            svsc = svsc.at[gi].set(new_kv[3])
     cache["conv"], cache["state"] = conv, state
     cache["shared_k_pages"], cache["shared_v_pages"] = skp, svp
+    if sksc is not None:
+        cache["shared_k_pages_scale"] = sksc
+        cache["shared_v_pages_scale"] = svsc
 
     if "tail" in params:
         (h,), (tc, ts) = jax.lax.scan(

@@ -42,6 +42,15 @@ def shard_pool(cfg, pool):
     return SH.constrain(pool, (None,) * (nd - 3) + ("kv_heads", None, None))
 
 
+def shard_scale(cfg, scale):
+    """Per-slot scale-pool sharding constraint: ``lead + (P, Hkv, ps)`` rides
+    its pool — heads over the model axis, page dims whole."""
+    if cfg.act_shard == "none":
+        return scale
+    nd = scale.ndim
+    return SH.constrain(scale, (None,) * (nd - 2) + ("kv_heads", None))
+
+
 def shard_residual(cfg, x):
     """Megatron-SP: residual stream (B, S, d) sharded over the model axis on
     the seq dim between blocks (only under act_shard='tp_sp').  The remat-
@@ -319,22 +328,39 @@ def attention(p, x, positions, cfg, *,
 
     new_cache = None
     page_table = None
+    k_sc = v_sc = None
     if cache is not None:
-        if len(cache) == 3:
-            # paged cache (k_pool, v_pool, page_table): scatter-store the new
-            # token into the lane's tail page; attention gathers K/V blocks
-            # through the page table (SVE §2.3.3).  Decode-only (Snew == 1).
-            k_pool, v_pool, page_table = cache
+        if len(cache) in (3, 5):
+            # paged cache (k_pool, v_pool, page_table[, k_scale, v_scale]):
+            # scatter-store the new token into the lane's tail page; attention
+            # gathers K/V blocks through the page table (SVE §2.3.3).  The
+            # 5-tuple is a QUANTIZED cache: the scatter truncates to the
+            # narrow pool dtype (per-slot absmax scale) and the gather widens
+            # in register.  Decode-only (Snew == 1).
+            k_pool, v_pool, page_table = cache[:3]
             ps = k_pool.shape[2]
             page_col = jnp.clip(cache_pos // ps, 0, page_table.shape[1] - 1)
             page_ids = jnp.take_along_axis(page_table, page_col[:, None],
                                            axis=1)[:, 0]
-            k_pool = shard_pool(cfg, PG.scatter_page(
-                k_pool, page_ids, cache_pos % ps, k[:, :, 0, :]))
-            v_pool = shard_pool(cfg, PG.scatter_page(
-                v_pool, page_ids, cache_pos % ps, v[:, :, 0, :]))
-            k, v = k_pool.astype(cdt(cfg)), v_pool.astype(cdt(cfg))
-            new_cache = (k_pool, v_pool)
+            off = cache_pos % ps
+            if len(cache) == 5:
+                k_sc, v_sc = cache[3], cache[4]
+                k_pool, k_sc = PG.scatter_page_q(k_pool, k_sc, page_ids, off,
+                                                 k[:, :, 0, :])
+                v_pool, v_sc = PG.scatter_page_q(v_pool, v_sc, page_ids, off,
+                                                 v[:, :, 0, :])
+                k_sc, v_sc = shard_scale(cfg, k_sc), shard_scale(cfg, v_sc)
+                k_pool = shard_pool(cfg, k_pool)
+                v_pool = shard_pool(cfg, v_pool)
+                k, v = k_pool, v_pool            # narrow: widened in-gather
+                new_cache = (k_pool, v_pool, k_sc, v_sc)
+            else:
+                k_pool = shard_pool(cfg, PG.scatter_page(
+                    k_pool, page_ids, off, k[:, :, 0, :]))
+                v_pool = shard_pool(cfg, PG.scatter_page(
+                    v_pool, page_ids, off, v[:, :, 0, :]))
+                k, v = k_pool.astype(cdt(cfg)), v_pool.astype(cdt(cfg))
+                new_cache = (k_pool, v_pool)
         else:
             k_cache, v_cache = cache
             k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, cache_pos)
@@ -343,7 +369,8 @@ def attention(p, x, positions, cfg, *,
 
     out = flash_attention(
         q, k, v, kv_lens=kv_lens, causal=causal, window=window,
-        q_offset=q_offset, impl=cfg.attn_impl, page_table=page_table)
+        q_offset=q_offset, impl=cfg.attn_impl, page_table=page_table,
+        k_scale=k_sc, v_scale=v_sc)
     out = shard_act(cfg, out, ("batch", "act_heads", None, None))
     # the out-proj input: under training rules act_attn_in rides "model"
     # (Megatron row-parallel, psum after the dot); under SERVE_RULES it

@@ -256,11 +256,12 @@ def paged_cache_spec(cfg):
 
 
 def make_paged_cache(cfg, batch_size: int, max_len: int, *, page_size: int,
-                     pool_pages: int, dtype=None):
+                     pool_pages: int, dtype=None, page_dtype=None):
     from repro.core import paging as PG
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     cache = PG.alloc_pools(paged_cache_spec(cfg), pool_pages, page_size,
-                           cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+                           cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
+                           page_dtype=page_dtype)
     cache["page_table"] = jnp.zeros(
         (batch_size, PG.pages_needed(max_len, page_size)), jnp.int32)
     cache["pos"] = jnp.zeros((batch_size,), jnp.int32)
@@ -326,25 +327,45 @@ def _decode_paged(params, cfg, x, positions, cache):
     table = cache["page_table"]
     cache = dict(cache)
     h = x
+    dus = jax.lax.dynamic_update_slice_in_dim
     if cfg.first_k_dense:
         kp, vp = cache["dense_k_pages"], cache["dense_v_pages"]
+        ksc = cache.get("dense_k_pages_scale")
+        vsc = cache.get("dense_v_pages_scale")
         for li in range(cfg.first_k_dense):
             lp = jax.tree.map(lambda a, li=li: a[li], params["dense_blocks"])
-            h, (kl, vl) = L.block_apply(
+            layer_cache = ((kp[li], vp[li], table) if ksc is None
+                           else (kp[li], vp[li], table, ksc[li], vsc[li]))
+            h, new_kv = L.block_apply(
                 lp, h, positions, cfg, causal=False, kv_lens=pos + 1,
-                q_offset=pos, cache=(kp[li], vp[li], table), cache_pos=pos)
-            kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
-            vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+                q_offset=pos, cache=layer_cache, cache_pos=pos)
+            kp = dus(kp, new_kv[0][None], li, axis=0)
+            vp = dus(vp, new_kv[1][None], li, axis=0)
+            if ksc is not None:
+                ksc = dus(ksc, new_kv[2][None], li, axis=0)
+                vsc = dus(vsc, new_kv[3][None], li, axis=0)
         cache["dense_k_pages"], cache["dense_v_pages"] = kp, vp
+        if ksc is not None:
+            cache["dense_k_pages_scale"] = ksc
+            cache["dense_v_pages_scale"] = vsc
     kp, vp = cache["k_pages"], cache["v_pages"]
+    ksc = cache.get("k_pages_scale")
+    vsc = cache.get("v_pages_scale")
     for li in range(cfg.n_layers - cfg.first_k_dense):
         lp = jax.tree.map(lambda a, li=li: a[li], params["blocks"])
-        h, _, (kl, vl) = _moe_block_apply(
+        layer_cache = ((kp[li], vp[li], table) if ksc is None
+                       else (kp[li], vp[li], table, ksc[li], vsc[li]))
+        h, _, new_kv = _moe_block_apply(
             lp, h, positions, cfg, kv_lens=pos + 1, q_offset=pos,
-            cache=(kp[li], vp[li], table), cache_pos=pos, causal=False)
-        kp = jax.lax.dynamic_update_slice_in_dim(kp, kl[None], li, axis=0)
-        vp = jax.lax.dynamic_update_slice_in_dim(vp, vl[None], li, axis=0)
+            cache=layer_cache, cache_pos=pos, causal=False)
+        kp = dus(kp, new_kv[0][None], li, axis=0)
+        vp = dus(vp, new_kv[1][None], li, axis=0)
+        if ksc is not None:
+            ksc = dus(ksc, new_kv[2][None], li, axis=0)
+            vsc = dus(vsc, new_kv[3][None], li, axis=0)
     cache["k_pages"], cache["v_pages"] = kp, vp
+    if ksc is not None:
+        cache["k_pages_scale"], cache["v_pages_scale"] = ksc, vsc
     return h, cache
 
 

@@ -3,6 +3,7 @@ from repro.sample import SamplingParams  # noqa: F401  (re-export: serve API)
 from .engine import ServeEngine  # noqa: F401
 from .scheduler import (  # noqa: F401
     ContinuousBatchingScheduler,
+    HostSwapStore,
     PageAllocator,
     PrefixIndex,
     Request,

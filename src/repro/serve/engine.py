@@ -45,6 +45,20 @@ from repro.sample.processors import ban_pred, mask_logits
 
 @dataclasses.dataclass
 class ServeEngine:
+    """Family-agnostic generation engine: jitted prefill / decode-burst /
+    fused-serve-step programs over one model config + params.
+
+    The engine owns everything that touches the device — cache allocation
+    (dense, paged, or quantized paged via ``page_dtype``), the decode burst
+    with per-lane predication, the fused one-dispatch serve step, and the
+    mesh-sharded variants — while ``ContinuousBatchingScheduler`` owns all
+    host-side traffic state (lanes, pages, prefixes, the swap tier).  Entry
+    points: ``generate`` (static batch), ``make_paged_cache`` /
+    ``_fused_step`` and friends (driven by the scheduler).  All jitted
+    programs are shape-bucketed so ragged traffic compiles a bounded set of
+    executables; see docs/ARCHITECTURE.md for the round anatomy.
+    """
+
     cfg: object
     params: object
     max_new_tokens: int = 32
@@ -63,6 +77,12 @@ class ServeEngine:
     # family decode, scatter the one new token back (bitwise identical to the
     # dense cache BY CONSTRUCTION; tests pin the native path against it).
     paged_attn: str = "native"
+    # quantized KV pages: None (full precision) or "int8" / "fp8" — pools
+    # store narrow elements with per-slot absmax scale pools riding alongside
+    # (``<key>_pages_scale``); flash attention widens them in the gather
+    # (SVE §2.3.3 extending loads).  Applies to every paged cache this engine
+    # allocates (make_paged_cache / generate(page_size=...)).
+    page_dtype: Optional[str] = None
     # mesh-sharded serving: a jax Mesh with "model" (TP) and/or "data" (lane)
     # axes.  Params commit to their TP placement, every jitted entry point
     # traces under SERVE_RULES so the model's activation constraints resolve,
@@ -114,6 +134,14 @@ class ServeEngine:
             static_argnames=("n_steps", "stochastic", "admit_stoch",
                             "part_final", "part_stoch", "max_len", "width"),
             donate_argnums=fused_donate)
+        if self.page_dtype is not None:
+            PG.resolve_page_dtype(self.page_dtype)   # validate eagerly
+        # host-swap page movers: batched whole-page reads/writes used by the
+        # scheduler's eviction tier (device -> host spill, host -> device
+        # page-in).  Eager jitted calls outside the fused program; the
+        # scheduler pads the page-id vectors to pow2 buckets.
+        self._gather_blocks = jax.jit(self._gather_blocks_impl)
+        self._scatter_blocks = jax.jit(self._scatter_blocks_impl)
         if self.mesh is not None:
             # commit params to their TP placement and trace every entry
             # point under the ambient serve rules so the model's logical-
@@ -121,7 +149,7 @@ class ServeEngine:
             self.params = DS.shard_params(self.model, self.cfg, self.params,
                                           self.mesh)
             for name in ("_prefill", "_decode_chunk", "_decode_chunk_serve",
-                         "_fused_step"):
+                         "_fused_step", "_gather_blocks", "_scatter_blocks"):
                 setattr(self, name, self._with_mesh(getattr(self, name)))
         self._warned_gather_fallback = False
 
@@ -306,8 +334,11 @@ class ServeEngine:
         mask = jnp.arange(max_len, dtype=jnp.int32)[None, :] < seed_len[:, None]
         sub_cache = dict(sub_cache)
         for key, lead in spec.items():
+            # extending gather: a quantized cache's seed widens through the
+            # scale pool, so the dense prefill sub-cache is full precision
             view = PG.gather_pages(cache[key + "_pages"], seed_tab,
-                                   n_lead=len(lead))
+                                   n_lead=len(lead),
+                                   scale=cache.get(key + "_pages_scale"))
             mm = mask.reshape((1,) * len(lead) + (m, 1, max_len, 1))
             sub_cache[key] = jnp.where(mm, view.astype(sub_cache[key].dtype),
                                        sub_cache[key])
@@ -332,9 +363,49 @@ class ServeEngine:
             dnp = jnp.moveaxis(dnp, nl, 0)          # (m,)+lead+(Hkv,n,ps,D)
             dnp = jnp.moveaxis(dnp, nl + 2, 1)      # (m,n_pages)+lead+...
             blocks = dnp[rows, cols]                # (K,)+lead+(Hkv,ps,D)
-            cache[key + "_pages"] = PG.scatter_block(
-                cache[key + "_pages"], dsts, blocks, n_lead=nl)
+            sc = cache.get(key + "_pages_scale")
+            if sc is not None:                      # truncating store
+                (cache[key + "_pages"],
+                 cache[key + "_pages_scale"]) = PG.scatter_block_q(
+                    cache[key + "_pages"], sc, dsts, blocks, n_lead=nl)
+            else:
+                cache[key + "_pages"] = PG.scatter_block(
+                    cache[key + "_pages"], dsts, blocks, n_lead=nl)
         cache["page_table"] = cache["page_table"].at[lanes].set(tab_rows)
+        return cache
+
+    # ------------------------------------------------------------------
+    # host-swap page movers (the scheduler's eviction tier)
+    # ------------------------------------------------------------------
+
+    def _gather_blocks_impl(self, cache, pids):
+        """Batched whole-page read: for each pool (and scale pool) of the
+        paged ``cache``, gather pages ``pids (K,)`` as ``(K,) + lead +
+        (Hkv, ps[, D])`` blocks — the device->host half of a spill.  A
+        quantized cache spills its NARROW bytes plus scales, so a later
+        page-in restores the pool rows bit-exactly."""
+        spec = self.model.paged_cache_spec(self.cfg)
+        out = {}
+        for key, lead in spec.items():
+            for suffix in ("_pages", "_pages_scale"):
+                pk = key + suffix
+                if pk in cache:
+                    out[pk] = PG.gather_block(cache[pk], pids,
+                                              n_lead=len(lead))
+        return out
+
+    def _scatter_blocks_impl(self, cache, pids, blocks):
+        """Batched whole-page write: scatter host-held ``blocks`` (the dict
+        ``_gather_blocks`` produced) into pages ``pids`` — the page-in half
+        of a swap.  Padding entries aim at the trash page."""
+        spec = self.model.paged_cache_spec(self.cfg)
+        cache = dict(cache)
+        for key, lead in spec.items():
+            for suffix in ("_pages", "_pages_scale"):
+                pk = key + suffix
+                if pk in cache:
+                    cache[pk] = PG.scatter_block(cache[pk], pids, blocks[pk],
+                                                 n_lead=len(lead))
         return cache
 
     def _splice_admission(self, cache, out_buf, tok, p, n_gen, budget, sstate,
@@ -438,15 +509,18 @@ class ServeEngine:
     def make_paged_cache(self, b: int, max_len: int, *, page_size: int,
                          pool_pages: int, batch: Optional[dict] = None,
                          src_len: Optional[int] = None):
-        """Allocate a paged cache: shared page pools + per-lane page table."""
+        """Allocate a paged cache: shared page pools + per-lane page table
+        (narrow pools + scale pools when the engine has a ``page_dtype``)."""
         if self.cfg.family == "encdec":
             sl = src_len if src_len is not None else batch["src_emb"].shape[1]
             return self.model.make_paged_cache(
                 self.cfg, b, max_len, src_len=sl,
-                page_size=page_size, pool_pages=pool_pages)
+                page_size=page_size, pool_pages=pool_pages,
+                page_dtype=self.page_dtype)
         return self.model.make_paged_cache(self.cfg, b, max_len,
                                            page_size=page_size,
-                                           pool_pages=pool_pages)
+                                           pool_pages=pool_pages,
+                                           page_dtype=self.page_dtype)
 
     def make_cache(self, b: int, max_len: int, batch: Optional[dict] = None,
                    src_len: Optional[int] = None):
@@ -486,7 +560,8 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, dict(batch, lens=lens), cache)
         if page_size is not None:
             cache = to_paged(self.cfg, cache, page_size=page_size,
-                             pool_pages=pool_pages)
+                             pool_pages=pool_pages,
+                             page_dtype=self.page_dtype)
         # all-greedy batches skip the stochastic pipeline here too (keys of
         # greedy lanes are never read, so not splitting them is inert)
         if S.is_all_greedy(sstate):

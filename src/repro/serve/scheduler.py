@@ -25,6 +25,16 @@ capacity currency — and a prefix index lets a request whose prompt prefix is
 already resident skip prefill for the shared pages (refcount bump + suffix
 prefill).  Compacting lanes never moves a page: only the table rows permute.
 
+With ``host_swap_pages`` set, the prefix cache grows an EVICTION TIER: a
+shared-prefix page whose refcount drops to zero is spilled to a host-side
+LRU store (content-addressed by its full prefix token bytes) instead of
+being forgotten, and a later request whose prompt walks the same prefix
+pages it back in — fresh pool pages, one batched scatter, re-registered in
+the radix index.  The prefix cache thereby outlives lane residency and
+becomes a cross-REQUEST session cache: turn N+1 of a conversation hits the
+prefix that turn N retired minutes ago.  A quantized pool spills its narrow
+bytes plus scales, so page-in restores the pool rows bit-exactly.
+
 Everything that moves request state is an index gather/scatter; nothing is
 recompiled when traffic gets ragged — the vector-length-agnostic contract.
 
@@ -114,6 +124,52 @@ class PageAllocator:
         return False
 
 
+class HostSwapStore:
+    """Host-side LRU store of evicted prefix pages (the swap tier).
+
+    Entries are content-addressed by the FULL prefix token bytes up to and
+    including the page's block — unlike the resident radix index, no parent
+    page identity is needed: the whole token history is in the key, which
+    is sound across page-id recycling and scheduler restarts.  Each entry
+    holds one page's pool blocks as numpy arrays ``{pool_key: (lead +
+    (Hkv, ps[, D]))}`` — quantized pools store narrow bytes + scales, so
+    page-in is bit-exact.  Capacity is counted in PAGES; insertion past
+    capacity evicts least-recently-used entries.
+    """
+
+    def __init__(self, max_pages: int):
+        if max_pages < 1:
+            raise ValueError(f"host_swap_pages must be >= 1, got {max_pages}")
+        self.max_pages = max_pages
+        self._store: collections.OrderedDict = collections.OrderedDict()
+        self.evictions = 0
+
+    def __len__(self):
+        return len(self._store)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._store
+
+    def get(self, key: bytes):
+        """The entry for ``key`` (refreshed to most-recently-used), or
+        None."""
+        entry = self._store.get(key)
+        if entry is not None:
+            self._store.move_to_end(key)
+        return entry
+
+    def put(self, key: bytes, entry: dict):
+        """Insert a spilled page (no-op refresh when already stored — the
+        content under a full-prefix key can never change)."""
+        if key in self._store:
+            self._store.move_to_end(key)
+            return
+        self._store[key] = entry
+        while len(self._store) > self.max_pages:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+
 class PrefixIndex:
     """Radix-style map from (parent page, token block) to a resident page.
 
@@ -129,6 +185,7 @@ class PrefixIndex:
         self._child: dict = {}                         # (parent, bytes) -> page
         self._key_of: dict = {}                        # page -> its key
         self._kids: dict = collections.defaultdict(set)  # parent -> pages
+        self._prefix_of: dict = {}      # page -> full prefix bytes (swap key)
 
     def __len__(self):
         return len(self._child)
@@ -146,17 +203,29 @@ class PrefixIndex:
             parent = page
         return chain
 
-    def register(self, parent: int, block: np.ndarray, page: int):
+    def register(self, parent: int, block: np.ndarray, page: int,
+                 prefix: Optional[bytes] = None):
+        """Index ``page`` under ``(parent, block bytes)``; ``prefix`` is the
+        FULL prompt byte string through this block, kept so an eviction tier
+        can content-address the page when it later spills to host."""
         key = (parent, block.tobytes())
         if key in self._child:          # identical block admitted concurrently
             return
         self._child[key] = page
         self._key_of[page] = key
         self._kids[parent].add(page)
+        if prefix is not None:
+            self._prefix_of[page] = prefix
+
+    def prefix_of(self, page: int) -> Optional[bytes]:
+        """Full prefix token bytes of an indexed page (the host-swap key),
+        or None when the page is unindexed."""
+        return self._prefix_of.get(page)
 
     def drop(self, page: int):
         """Unindex a dying page and (recursively) its indexed subtree."""
         key = self._key_of.pop(page, None)
+        self._prefix_of.pop(page, None)
         if key is not None:
             self._child.pop(key, None)
             self._kids[key[0]].discard(page)
@@ -168,10 +237,11 @@ class PrefixIndex:
 class _PagePlan:
     """Admission plan for one request under the paged cache."""
     shared: list                        # resident prefix pages (refs taken)
+    swapped: list                       # fresh pages paged in from host swap
     new: list                           # freshly allocated pages
     budget: int                         # decode token budget
     plen: int                           # full prompt length
-    pos0: int                           # len(shared) * page_size
+    pos0: int                           # (len(shared)+len(swapped)) * page_size
 
 
 @dataclasses.dataclass
@@ -257,6 +327,13 @@ class ContinuousBatchingScheduler:
     prefix_sharing: admit a request whose prompt prefix is already resident
         by bumping page refcounts and prefilling only the suffix (families
         whose full prefix state lives in paged KV only).
+    host_swap_pages: capacity (in pages) of the host-side LRU swap store —
+        enables the EVICTION TIER: shared-prefix pages that release to
+        refcount zero spill to host instead of being forgotten, and a later
+        request whose prompt walks a spilled prefix pages it back in (fresh
+        pool pages + one batched scatter) and skips its prefill.  Turns the
+        prefix cache into a cross-request session cache.  Requires paging +
+        prefix sharing; None/0 disables.
     prefill_chunk: split admission prefill into chunks of at most this many
         tokens, interleaved with decode rounds — a long prompt no longer
         freezes resident lanes for its whole prefill.  The chunked request
@@ -293,6 +370,7 @@ class ContinuousBatchingScheduler:
                  page_size: Optional[int] = None,
                  pool_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
+                 host_swap_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  fused: bool = True, overlap: bool = False,
                  src_len: Optional[int] = None):
@@ -355,10 +433,17 @@ class ContinuousBatchingScheduler:
             self.prefix_index = PrefixIndex()
             self.prefix_sharing = prefix_sharing and getattr(
                 get_model(engine.cfg), "PAGED_PREFIX_OK", False)
+            self.host_swap = (HostSwapStore(host_swap_pages)
+                              if host_swap_pages and self.prefix_sharing
+                              else None)
             self.lane_pages: dict[int, list] = {}     # lane -> held page ids
         else:
+            if host_swap_pages:
+                raise ValueError("host_swap_pages needs a paged cache "
+                                 "(set page_size)")
             self.cache = engine.make_cache(b, max_len, src_len=src_len)
             self.prefix_sharing = False
+            self.host_swap = None
         self.max_len = max_len
         max_out = engine.max_new_tokens
         self.out_buf = jnp.zeros((b, max_out), jnp.int32)
@@ -387,7 +472,9 @@ class ContinuousBatchingScheduler:
                       "occupancy_trace": [], "page_occupancy_trace": [],
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "prefill_tokens": 0, "page_waits": 0,
-                      "prefill_chunks": 0, "dispatches": 0, "host_syncs": 0}
+                      "prefill_chunks": 0, "dispatches": 0, "host_syncs": 0,
+                      "swap_out_pages": 0, "swap_in_pages": 0,
+                      "session_hits": 0, "session_hit_tokens": 0}
         # async-overlap state: the in-flight round's result handles (with
         # host copies prefetched) plus the lane view they were dispatched
         # under; harvested one round late at the single blocking sync
@@ -439,8 +526,18 @@ class ContinuousBatchingScheduler:
     def submit(self, tokens, *, max_new_tokens: Optional[int] = None,
                arrival: float = 0.0, extras: Optional[dict] = None,
                sampling: Optional[S.SamplingParams] = None) -> int:
-        """Queue a request; returns its rid.  ``sampling`` carries the
-        request's own decoding distribution (None: engine default/greedy)."""
+        """Queue a request; returns its rid (key into ``run()``'s results).
+
+        ``tokens`` is the 1-D int prompt (<= ``max_len``).  ``arrival`` is
+        the decode-step timestamp before which the request is not admissible
+        (0.0 = immediately); the bench uses it to replay Poisson / session
+        traces deterministically.  ``max_new_tokens`` caps this request's
+        decode budget below the engine default; ``sampling`` carries the
+        request's own decoding distribution (None: engine default/greedy) —
+        lanes with different distributions coexist in one burst.  ``extras``
+        holds per-request side inputs (encdec: ``src_emb``/``src_lens``).
+        Submission never touches the device; planning happens at admission.
+        """
         tokens = np.asarray(tokens, np.int32)
         if tokens.ndim != 1:
             raise ValueError(f"prompt must be 1-D, got shape {tokens.shape}")
@@ -662,6 +759,7 @@ class ContinuousBatchingScheduler:
         if finished.size == 0:
             return
         t = time.perf_counter()
+        freed: list = []
         for lane in finished:
             lane = int(lane)
             rid = int(st["lane_rid"][lane])
@@ -675,13 +773,25 @@ class ContinuousBatchingScheduler:
             if self.page_size is not None:
                 for pid in self.lane_pages.pop(lane):
                     if self.allocator.release(pid):
-                        self.prefix_index.drop(pid)
+                        freed.append(pid)
         if self.page_size is not None:
+            if freed:
+                self._spill_pages(freed)
             self.cache["page_table"] = self.cache["page_table"].at[
                 jnp.asarray(finished, jnp.int32)].set(self.trash_page)
 
     def run(self) -> dict[int, dict]:
-        """Drain the queue and all live lanes; returns {rid: result}."""
+        """Drain the queue and all live lanes; returns ``{rid: result}``.
+
+        Calls ``step()`` (one scheduling round: plan, one fused dispatch,
+        harvest the previous round) until no request is queued or resident,
+        then flushes the overlap stash.  Each result carries ``tokens`` (the
+        generated ids, stop token excluded) and ``n_generated``; per-request
+        timing lands in ``req_times`` and aggregate counters in ``stats``.
+        ``run`` is resumable: more ``submit``s after it returns and a second
+        ``run()`` continue on the same lanes/pages/prefix state — with the
+        host-swap tier on, later calls hit prefixes earlier calls retired.
+        """
         while self.queue or (self.lane_rid >= 0).any():
             self.step()
         self._flush_stash()
@@ -709,19 +819,33 @@ class ContinuousBatchingScheduler:
 
     def _plan_pages(self, req: Request) -> Optional[_PagePlan]:
         """Reserve pages for one request: longest resident prompt prefix is
-        SHARED (refcount bump, no prefill), the rest freshly allocated.
-        Returns None — and touches nothing — when the pool can't cover it:
-        admission is gated on page availability, not lane count."""
+        SHARED (refcount bump, no prefill), then — with the eviction tier
+        enabled — the chain is EXTENDED through host-swapped pages (fresh
+        allocations whose content pages in from the host store), and the
+        rest is freshly allocated for suffix prefill.  Returns None — and
+        touches nothing — when the pool can't cover it: admission is gated
+        on page availability, not lane count."""
         ps = self.page_size
         plen = len(req.tokens)
         budget = self._budget_for(req, plen)
         shared: list = []
+        swap_keys: list = []
         if self.prefix_sharing and not req.extras:
             shared = self.prefix_index.lookup(req.tokens, ps)
             # the suffix prefill must be non-empty (the last prompt token's
             # logits seed decode), so never share the whole prompt
             while shared and len(shared) * ps >= plen:
                 shared.pop()
+            if self.host_swap is not None:
+                # extend the resident chain through the host store; same
+                # non-empty-suffix guard as above
+                j = len(shared)
+                while (j + 1) * ps < plen:
+                    key = req.tokens[:(j + 1) * ps].tobytes()
+                    if key not in self.host_swap:
+                        break
+                    swap_keys.append(key)
+                    j += 1
         n_total = PG.pages_needed(min(plen + budget, self.max_len), ps)
         new = self.allocator.alloc(n_total - len(shared))
         if new is None:
@@ -729,21 +853,34 @@ class ContinuousBatchingScheduler:
             return None
         for pid in shared:
             self.allocator.retain(pid)
+        swapped, new = new[:len(swap_keys)], new[len(swap_keys):]
+        if swapped:
+            self._page_in(swapped, swap_keys)
+            self.stats["session_hits"] += 1
+            self.stats["session_hit_tokens"] += len(swapped) * ps
         if shared:
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += len(shared) * ps
-        return _PagePlan(shared=shared, new=new, budget=budget, plen=plen,
-                         pos0=len(shared) * ps)
+        return _PagePlan(shared=shared, swapped=swapped, new=new,
+                         budget=budget, plen=plen,
+                         pos0=(len(shared) + len(swapped)) * ps)
 
     def _unplan_pages(self, plan: _PagePlan):
         """Roll back a reservation for a candidate that didn't fit the
         admission group after all (releases never free a donor's pages —
-        the donor still holds its own references)."""
-        for pid in plan.new + plan.shared:
+        the donor still holds its own references).  Paged-in swap pages
+        release to the free list; their content stays in the host store
+        (content-addressed, immutable), so a re-plan just pages them in
+        again."""
+        for pid in plan.new + plan.swapped + plan.shared:
             self.allocator.release(pid)
         if plan.shared:
             self.stats["prefix_hits"] -= 1
-            self.stats["prefix_hit_tokens"] -= plan.pos0
+            self.stats["prefix_hit_tokens"] -= len(plan.shared) * self.page_size
+        if plan.swapped:
+            self.stats["session_hits"] -= 1
+            self.stats["session_hit_tokens"] -= (len(plan.swapped)
+                                                 * self.page_size)
 
     def _plan_admission(self) -> Optional[_AdmitPlan]:
         """Scan the queue and plan this round's admission sub-batch — pure
@@ -959,7 +1096,8 @@ class ContinuousBatchingScheduler:
             admit["copy_dsts"] = dsts_a
             admit["tab_rows"] = tab_full
             for i, pl in enumerate(plan.plans):
-                self.lane_pages[int(plan.lanes[i])] = pl.shared + pl.new
+                self.lane_pages[int(plan.lanes[i])] = (pl.shared + pl.swapped
+                                                       + pl.new)
             for req, pl in zip(plan.reqs, plan.plans):
                 self._register_prefix(req, pl)
         for i, r in enumerate(plan.reqs):
@@ -1056,6 +1194,7 @@ class ContinuousBatchingScheduler:
             spec = self._effective_spec(part.req)
             if part.plan is not None:
                 self.lane_pages[part.lane] = (part.plan.shared
+                                              + part.plan.swapped
                                               + part.plan.new)
                 self._register_prefix(part.req, part.plan)
             self._lane_pending[part.lane] = False
@@ -1150,17 +1289,70 @@ class ContinuousBatchingScheduler:
     def _paged_spec(self):
         return get_model(self.engine.cfg).paged_cache_spec(self.engine.cfg)
 
+    def _page_in(self, pages: list, keys: list):
+        """Swap-in: scatter host-store entries ``keys`` into freshly
+        allocated ``pages`` (one batched jitted write, pid vector padded to
+        a power of two aimed at the trash page).  The pages then seed the
+        admission prefill exactly like resident shared pages; the host
+        entries stay (content-addressed) for future hits."""
+        entries = [self.host_swap.get(k) for k in keys]
+        kpad = _next_pow2(len(pages))
+        pids = np.full((kpad,), self.trash_page, np.int32)
+        pids[:len(pages)] = pages
+        blocks = {}
+        for pk, proto in entries[0].items():
+            rows = [e[pk] for e in entries]
+            rows += [np.zeros_like(proto)] * (kpad - len(rows))
+            blocks[pk] = np.stack(rows)
+        self.stats["dispatches"] += 1
+        self.stats["swap_in_pages"] += len(pages)
+        self.cache = self.engine._scatter_blocks(
+            self.cache, jnp.asarray(pids), blocks)
+        # pin the written pools back to canonical placement so the round's
+        # fused dispatch doesn't retrace on a drifted layout
+        self._reshard()
+
+    def _spill_pages(self, freed: list):
+        """Dying-page exit: spill indexed pages to the host store (one
+        batched gather; skipped for pages already stored under their prefix
+        key), then drop them — and their subtrees — from the radix index."""
+        if self.host_swap is not None:
+            spill = []
+            for pid in freed:
+                pfx = self.prefix_index.prefix_of(pid)
+                if pfx is not None and pfx not in self.host_swap:
+                    spill.append((pid, pfx))
+            if spill:
+                kpad = _next_pow2(len(spill))
+                pids = np.full((kpad,), self.trash_page, np.int32)
+                pids[:len(spill)] = [pid for pid, _ in spill]
+                self.stats["dispatches"] += 1
+                self.stats["host_syncs"] += 1
+                blocks = self.engine._gather_blocks(self.cache,
+                                                    jnp.asarray(pids))
+                blocks = {k: np.asarray(v) for k, v in blocks.items()}
+                for i, (_, pfx) in enumerate(spill):
+                    self.host_swap.put(pfx, {k: b[i]
+                                             for k, b in blocks.items()})
+                self.stats["swap_out_pages"] += len(spill)
+        for pid in freed:
+            self.prefix_index.drop(pid)
+
     def _seed_arrays(self, plans, n_pad):
         """Seed table + per-row shared length for prefix-seeded admission
-        (None when no plan shares anything)."""
-        if not any(pl.shared for pl in plans):
+        (None when no plan shares anything).  Swapped-in pages seed exactly
+        like resident shared pages — their content is in the pool by the
+        time the seed gather runs (``_page_in`` writes eagerly at plan
+        time)."""
+        if not any(pl.shared or pl.swapped for pl in plans):
             return None
         ps = self.page_size
         seed_tab = np.zeros((n_pad, self.n_pages), np.int32)
         shared_len = np.zeros((n_pad,), np.int32)
         for i, pl in enumerate(plans):
-            seed_tab[i, :len(pl.shared)] = pl.shared
-            shared_len[i] = len(pl.shared) * ps
+            chain = pl.shared + pl.swapped
+            seed_tab[i, :len(chain)] = chain
+            shared_len[i] = len(chain) * ps
         return seed_tab, shared_len
 
     def _seed_shared_prefix(self, sub_cache, plans, n_pad):
@@ -1182,13 +1374,13 @@ class ContinuousBatchingScheduler:
         rows, cols, dsts = [], [], []
         tab_rows = np.zeros((len(plans), self.n_pages), np.int32)
         for i, pl in enumerate(plans):
-            n_sh = len(pl.shared)
+            n_sh = len(pl.shared) + len(pl.swapped)   # seeded, not prefilled
             n_used = PG.pages_needed(pl.plen, ps)
             for j in range(n_sh, n_used):
                 rows.append(i)
                 cols.append(j)
                 dsts.append(pl.new[j - n_sh])
-            ids = pl.shared + pl.new
+            ids = pl.shared + pl.swapped + pl.new
             tab_rows[i, :len(ids)] = ids
             tab_rows[i, len(ids):] = pl.new[-1]
         return rows, cols, dsts, tab_rows
@@ -1203,18 +1395,23 @@ class ContinuousBatchingScheduler:
             jnp.asarray(dsts, dtype=jnp.int32), jnp.asarray(tab_rows),
             jnp.asarray(lanes, jnp.int32))
         for i, pl in enumerate(plans):
-            self.lane_pages[int(lanes[i])] = pl.shared + pl.new
+            self.lane_pages[int(lanes[i])] = pl.shared + pl.swapped + pl.new
 
     def _register_prefix(self, req: Request, plan: _PagePlan):
-        """Make this request's full prompt pages discoverable for sharing."""
+        """Make this request's full prompt pages discoverable for sharing.
+        Called at COMMIT time (the splice is riding this round's dispatch),
+        never at plan time — a rolled-back plan must need no index surgery.
+        Swapped-in pages register like fresh ones: they are new page ids
+        whose content just arrived from the host store."""
         if not self.prefix_sharing or req.extras:
             return
         ps = self.page_size
         parent = plan.shared[-1] if plan.shared else -1
-        ids = plan.shared + plan.new
+        ids = plan.shared + plan.swapped + plan.new
         for j in range(len(plan.shared), plan.plen // ps):
-            self.prefix_index.register(parent, req.tokens[j * ps:(j + 1) * ps],
-                                       ids[j])
+            self.prefix_index.register(
+                parent, req.tokens[j * ps:(j + 1) * ps], ids[j],
+                prefix=req.tokens[:(j + 1) * ps].tobytes())
             parent = ids[j]
 
     def _harvest(self):
@@ -1228,6 +1425,7 @@ class ContinuousBatchingScheduler:
         out = np.asarray(self.out_buf[finished])
         n_gen = np.asarray(self.n_gen[finished])
         t = time.perf_counter()
+        freed: list = []
         for j, lane in enumerate(finished):
             rid = int(self.lane_rid[lane])
             n = int(n_gen[j])
@@ -1240,8 +1438,10 @@ class ContinuousBatchingScheduler:
             if self.page_size is not None:
                 for pid in self.lane_pages.pop(int(lane)):
                     if self.allocator.release(pid):
-                        self.prefix_index.drop(pid)
+                        freed.append(pid)
         if self.page_size is not None:
+            if freed:
+                self._spill_pages(freed)
             # retired lanes keep decoding architecturally until their slot is
             # refilled: repoint their table rows at the trash page so the
             # freed pages can be reused without interference

@@ -8,7 +8,7 @@ the other property suites)."""
 import numpy as np
 import pytest
 
-from repro.serve import PageAllocator, PrefixIndex
+from repro.serve import HostSwapStore, PageAllocator, PrefixIndex
 
 
 def _check_invariants(alloc: PageAllocator):
@@ -188,3 +188,98 @@ if _HAS_HYPOTHESIS:
 else:
     def test_property_schedules_skipped_without_hypothesis():
         pytest.skip("hypothesis not installed (optional dependency)")
+
+
+# ---------------------------------------------------------------------------
+# host swap store (the eviction tier below the prefix index)
+# ---------------------------------------------------------------------------
+
+def test_host_swap_store_lru_eviction_order():
+    s = HostSwapStore(2)
+    s.put(b"a", {"k": 1})
+    s.put(b"b", {"k": 2})
+    assert s.get(b"a")["k"] == 1                    # refreshes recency
+    s.put(b"c", {"k": 3})                           # evicts b (LRU), not a
+    assert b"a" in s and b"c" in s and b"b" not in s
+    assert s.evictions == 1 and len(s) == 2
+    assert s.get(b"b") is None
+
+
+def test_host_swap_store_put_is_first_write_wins():
+    """Entries are content-addressed by the full prefix bytes, so a second
+    put of the same key (the same prefix respilled) must be a no-op — the
+    stored pool blocks are immutable."""
+    s = HostSwapStore(4)
+    s.put(b"a", {"k": 1})
+    s.put(b"a", {"k": 9})
+    assert s.get(b"a")["k"] == 1
+    assert len(s) == 1 and s.evictions == 0
+
+
+def test_host_swap_store_rejects_zero_capacity():
+    with pytest.raises(ValueError):
+        HostSwapStore(0)
+
+
+def test_prefix_index_prefix_of_follows_registration():
+    """prefix_of returns the full-prefix bytes recorded at registration (the
+    host-store key for a later spill) and dies with the page — a recycled
+    page id must never expose the old prefix."""
+    idx = PrefixIndex()
+    toks = np.arange(8, dtype=np.int32)
+    idx.register(-1, toks[0:4], 5, prefix=toks[0:4].tobytes())
+    idx.register(5, toks[4:8], 6, prefix=toks[0:8].tobytes())
+    assert idx.prefix_of(5) == toks[0:4].tobytes()
+    assert idx.prefix_of(6) == toks[0:8].tobytes()
+    idx.drop(5)
+    assert idx.prefix_of(5) is None
+    other = np.arange(50, 54, dtype=np.int32)
+    idx.register(-1, other, 5)                      # recycled, no prefix
+    assert idx.prefix_of(5) is None
+
+
+def test_prefix_index_duplicate_register_keeps_first_prefix():
+    """Registering the same (parent, block) under a new page is a no-op (the
+    resident page wins), so its prefix record must survive unchanged."""
+    idx = PrefixIndex()
+    blk = np.arange(4, dtype=np.int32)
+    idx.register(-1, blk, 1, prefix=b"one")
+    idx.register(-1, blk, 2, prefix=b"two")         # duplicate key: ignored
+    assert idx.lookup(np.concatenate([blk, blk]), 4) == [1]
+    assert idx.prefix_of(1) == b"one"
+    assert idx.prefix_of(2) is None
+
+
+if _HAS_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(cap=st.integers(1, 6),
+           ops=st.lists(st.tuples(st.booleans(), st.integers(0, 9)),
+                        max_size=80))
+    def test_property_host_swap_store_is_bounded_lru(cap, ops):
+        """The store tracks a reference LRU model exactly: bounded size,
+        least-recently-USED eviction, first-write-wins contents."""
+        s = HostSwapStore(cap)
+        model: dict = {}                            # insertion-ordered model
+        for is_put, arg in ops:
+            key = bytes([arg])
+            if is_put:
+                s.put(key, {"v": arg})
+                if key in model:
+                    model[key] = model.pop(key)     # duplicate put: refresh
+                else:
+                    model[key] = arg
+                    if len(model) > cap:
+                        model.pop(next(iter(model)))  # LRU falls off
+            else:
+                got = s.get(key)
+                if key in model:
+                    assert got == {"v": model[key]}
+                    model[key] = model.pop(key)     # refresh recency
+                else:
+                    assert got is None
+            assert len(s) <= cap
+            assert list(s._store) == list(model)
+else:
+    def test_property_host_swap_skipped_without_hypothesis():
+        pytest.skip("hypothesis not installed")

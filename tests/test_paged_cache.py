@@ -573,3 +573,165 @@ def test_ssm_family_refuses_paging():
     eng = ServeEngine(cfg, params, max_new_tokens=4)
     with pytest.raises(ValueError, match="paging does not apply"):
         ContinuousBatchingScheduler(eng, capacity=2, max_len=16, page_size=8)
+
+
+# ---------------------------------------------------------------------------
+# quantized pages: narrow pools widened in the gather (SVE extending loads)
+# ---------------------------------------------------------------------------
+
+def _quant_dtype_or_skip(name):
+    try:
+        return PG.resolve_page_dtype(name)
+    except ValueError as e:                          # fp8-less jax build
+        pytest.skip(str(e))
+
+
+@pytest.mark.parametrize("page_dtype", ["int8", "fp8"])
+def test_quantize_block_roundtrip_bounded(page_dtype):
+    """quantize_block -> dequantize stays within the per-row absmax step:
+    int8 rounds to absmax/127 steps (max error half a step), fp8 e4m3 keeps
+    ~4 bits of relative precision.  All-zero rows decode to exactly zero."""
+    dt = _quant_dtype_or_skip(page_dtype)
+    rng = np.random.RandomState(0)
+    v = rng.randn(5, 3, 16).astype(np.float32) * 4.0
+    v[2, 1] = 0.0                                   # an all-zero row
+    q, scale = PG.quantize_block(jnp.asarray(v), dt)
+    assert q.dtype == dt and scale.shape == (5, 3)
+    deq = np.asarray(PG.dequantize(q, scale))
+    absmax = np.abs(v).max(-1, keepdims=True)
+    tol = absmax * ((0.5 / 127.0) if page_dtype == "int8" else (1.0 / 16.0))
+    assert (np.abs(deq - v) <= tol + 1e-7).all()
+    np.testing.assert_array_equal(deq[2, 1], np.zeros(16, np.float32))
+    assert float(scale[2, 1]) == 0.0
+
+
+def test_gather_pages_scale_is_extending_load():
+    """gather_pages(scale=...) widens narrow pool elements at the point of
+    use: the view equals gathering an explicitly dequantized pool, and stays
+    within quantization tolerance of the original f32 pages."""
+    rng = np.random.RandomState(1)
+    P, hkv, ps, d = 6, 2, 4, 8
+    blocks = rng.randn(3, hkv, ps, d).astype(np.float32)
+    ids = jnp.asarray([5, 0, 2], jnp.int32)
+    pool = jnp.zeros((P, hkv, ps, d), jnp.int8)
+    scale = jnp.zeros((P, hkv, ps), jnp.float32)
+    pool, scale = PG.scatter_block_q(pool, scale, ids, jnp.asarray(blocks))
+    table = jnp.asarray([[5, 0], [2, 5]], jnp.int32)
+    view = PG.gather_pages(pool, table, scale=scale)
+    assert view.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(view),
+        np.asarray(PG.gather_pages(PG.dequantize(pool, scale), table)))
+    # lane 0 reads blocks 0 then 1; bounded by the absmax step per token row
+    want = np.concatenate([blocks[0], blocks[1]], axis=1)
+    tol = np.abs(want).max(-1, keepdims=True) * (0.5 / 127.0) + 1e-7
+    assert (np.abs(np.asarray(view[0]) - want) <= tol).all()
+
+
+def test_scatter_page_q_exact_single_token():
+    """The decode-step quantizing write: per-(page, slot) scale granularity
+    makes a single-token store quantize EXACTLY (same bytes+scale as
+    quantize_block alone), with every other slot's bytes and scales
+    untouched — no read-modify-write of neighbours."""
+    rng = np.random.RandomState(2)
+    P, hkv, ps, d = 5, 2, 4, 8
+    pool = jnp.asarray(rng.randint(-127, 128, (P, hkv, ps, d)), jnp.int8)
+    scale = jnp.asarray(rng.rand(P, hkv, ps).astype(np.float32))
+    before_p, before_s = np.asarray(pool).copy(), np.asarray(scale).copy()
+    vals = jnp.asarray(rng.randn(2, hkv, d).astype(np.float32))
+    page_ids = jnp.asarray([3, 1], jnp.int32)
+    offsets = jnp.asarray([2, 0], jnp.int32)
+    pool2, scale2 = PG.scatter_page_q(pool, scale, page_ids, offsets, vals)
+    q_want, s_want = PG.quantize_block(vals, jnp.int8)
+    after_p, after_s = np.asarray(pool2).copy(), np.asarray(scale2).copy()
+    for i in range(2):
+        pid, off = int(page_ids[i]), int(offsets[i])
+        np.testing.assert_array_equal(after_p[pid, :, off], q_want[i])
+        np.testing.assert_array_equal(after_s[pid, :, off], s_want[i])
+        after_p[pid, :, off] = before_p[pid, :, off]
+        after_s[pid, :, off] = before_s[pid, :, off]
+    np.testing.assert_array_equal(after_p, before_p)   # neighbours untouched
+    np.testing.assert_array_equal(after_s, before_s)
+
+
+@pytest.mark.parametrize("impl", ["naive", "xla", "kernel"])
+def test_paged_flash_quantized_close_to_dense(impl):
+    """Paged flash attention over int8 pools + scale pools stays within
+    quantization tolerance of dense f32 flash — every impl widens the same
+    narrow bytes through the same page walk."""
+    rng = np.random.RandomState(3)
+    B, Hq, Hkv, D, ps, npg, P = 2, 4, 2, 16, 8, 3, 9
+    S = npg * ps
+    kd = rng.randn(B, Hkv, S, D).astype(np.float32)
+    vd = rng.randn(B, Hkv, S, D).astype(np.float32)
+    q = jnp.asarray(rng.randn(B, Hq, 1, D).astype(np.float32))
+    table = np.arange(B * npg, dtype=np.int32).reshape(B, npg)
+    pool_k = jnp.zeros((P, Hkv, ps, D), jnp.int8)
+    pool_v = jnp.zeros((P, Hkv, ps, D), jnp.int8)
+    sc_k = jnp.zeros((P, Hkv, ps), jnp.float32)
+    sc_v = jnp.zeros((P, Hkv, ps), jnp.float32)
+    ids = jnp.arange(B * npg, dtype=jnp.int32)
+    blk = lambda a: jnp.asarray(np.stack(
+        [a[b, :, j * ps:(j + 1) * ps, :] for b in range(B)
+         for j in range(npg)]))
+    pool_k, sc_k = PG.scatter_block_q(pool_k, sc_k, ids, blk(kd))
+    pool_v, sc_v = PG.scatter_block_q(pool_v, sc_v, ids, blk(vd))
+    kv_lens = jnp.asarray([11, S], jnp.int32)
+    q_off = kv_lens - 1
+    ref = flash_attention(q, jnp.asarray(kd), jnp.asarray(vd),
+                          kv_lens=kv_lens, q_offset=q_off, causal=True,
+                          impl="xla")
+    out = flash_attention(q, pool_k, pool_v, page_table=jnp.asarray(table),
+                          kv_lens=kv_lens, q_offset=q_off, causal=True,
+                          impl=impl, k_scale=sc_k, v_scale=sc_v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid", "encdec", "vlm"])
+def test_quantized_native_decode_matches_gather_oracle(family):
+    """Acceptance criterion: EVERY family decodes an int8 paged cache
+    natively with token streams identical to the gather oracle, which
+    dequantizes the same pool bytes into a dense view — the oracle bounds
+    quantization error to exactly what quantize_block introduced, so any
+    native/oracle divergence is a widening bug, not noise."""
+    cfg = _family_cfg(family)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(21)
+    batch = _family_batch(cfg, rng, b=3, s=9)
+    native = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7,
+                         page_dtype="int8")
+    oracle = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7,
+                         paged_attn="gather", page_dtype="int8")
+    paged = native.generate(batch, max_len=MAX_LEN, page_size=8)
+    gathered = oracle.generate(batch, max_len=MAX_LEN, page_size=8)
+    np.testing.assert_array_equal(np.asarray(paged["tokens"]),
+                                  np.asarray(gathered["tokens"]))
+    np.testing.assert_array_equal(np.asarray(paged["n_generated"]),
+                                  np.asarray(gathered["n_generated"]))
+
+
+def test_quantized_scheduler_matches_quantized_generate(dense_setup):
+    """Streamed int8-paged requests (admission scatter_block_q writes +
+    decode scatter_page_q writes, lane recycling, prefix sharing) produce
+    the same tokens as fresh one-shot quantized generation — the scheduler
+    introduces no quantization of its own."""
+    cfg, _, params = dense_setup
+    eng = ServeEngine(cfg, params, max_new_tokens=8, stop_token=7,
+                      page_dtype="int8")
+    rng = np.random.RandomState(22)
+    prompts = [rng.randint(1, 64, rng.randint(4, 12)) for _ in range(8)]
+    sched = ContinuousBatchingScheduler(eng, capacity=4, max_len=MAX_LEN,
+                                        chunk=4, page_size=8)
+    assert "k_pages_scale" in sched.cache            # scale pools allocated
+    rids = [sched.submit(p) for p in prompts]
+    results = sched.run()
+    for rid, prompt in zip(rids, prompts):
+        res = eng.generate({"tokens": jnp.asarray(prompt)[None, :]},
+                           max_len=MAX_LEN, page_size=8)
+        n = int(res["n_generated"][0])
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"],
+                                      np.asarray(res["tokens"][0, :n]))
+    assert sched.allocator.free_pages == sched.pool_pages

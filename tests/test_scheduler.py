@@ -270,3 +270,79 @@ def test_batched_speculative_with_stop_token():
     assert got[0, :n0].tolist() == probe[0, :n0].tolist()
     first_stop = probe[0].tolist().index(stop)
     assert n0 == first_stop + 1
+
+
+# ---------------------------------------------------------------------------
+# host-swap eviction tier: the prefix cache as a cross-request session cache
+# ---------------------------------------------------------------------------
+
+def test_multi_turn_session_page_in_byte_identical():
+    """Acceptance criterion: turn 2 of a conversation arrives after turn 1's
+    lanes retired (its shared-prefix pages spilled to the host store), pages
+    the prefix back in, and decodes tokens BYTE-IDENTICAL to a scheduler
+    that never swapped — page-in restores the exact pool bytes."""
+    cfg, _, params = _mk()
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7)
+    rng = np.random.RandomState(30)
+    turn1 = [rng.randint(1, 64, 9) for _ in range(3)]
+    turn2 = [np.concatenate([p, rng.randint(1, 64, 4)]) for p in turn1]
+
+    def serve_two_waves(host_swap_pages):
+        sched = ContinuousBatchingScheduler(
+            eng, capacity=4, max_len=MAX_LEN, chunk=4, page_size=4,
+            host_swap_pages=host_swap_pages)
+        for p in turn1:
+            sched.submit(p)
+        sched.run()                                  # wave 1 fully retires
+        rids = [sched.submit(p) for p in turn2]
+        res = sched.run()
+        toks = [res[r]["tokens"].tolist() for r in rids]
+        return sched, toks
+
+    warm_sched, warm = serve_two_waves(host_swap_pages=64)
+    cold_sched, cold = serve_two_waves(host_swap_pages=None)
+    assert warm == cold                              # byte-identical greedy
+    st = warm_sched.stats
+    assert st["session_hits"] > 0                    # cross-request hits
+    assert st["swap_out_pages"] > 0 and st["swap_in_pages"] > 0
+    assert st["session_hit_tokens"] >= st["session_hits"] * 4
+    assert cold_sched.stats["session_hits"] == 0
+    # drained: every page back, nothing resident survives in the index
+    assert warm_sched.allocator.free_pages == warm_sched.pool_pages
+    assert (warm_sched.allocator.refcount == 0).all()
+    assert len(warm_sched.prefix_index) == 0
+    assert len(warm_sched.host_swap) <= 64
+
+
+def test_host_swap_requires_paging_and_prefix_sharing():
+    cfg, _, params = _mk()
+    eng = ServeEngine(cfg, params, max_new_tokens=4)
+    with pytest.raises(ValueError, match="host_swap_pages"):
+        ContinuousBatchingScheduler(eng, capacity=2, max_len=16,
+                                    host_swap_pages=8)
+
+
+def test_session_results_unperturbed_by_swap_tier():
+    """The swap tier must be invisible to correctness: a ragged mixed trace
+    (shared prefixes, natural stops, lane recycling) served WITH the tier
+    matches per-request fresh dense references bit-exactly, and the LRU
+    store respects its capacity while evicting."""
+    cfg, _, params = _mk()
+    eng = ServeEngine(cfg, params, max_new_tokens=6, stop_token=7)
+    rng = np.random.RandomState(31)
+    common = rng.randint(1, 64, 5)
+    prompts = [np.concatenate([common, rng.randint(1, 64, rng.randint(2, 6))])
+               if i % 2 == 0 else rng.randint(1, 64, rng.randint(4, 10))
+               for i in range(10)]
+    sched = ContinuousBatchingScheduler(eng, capacity=3, max_len=MAX_LEN,
+                                        chunk=3, page_size=4,
+                                        host_swap_pages=2)
+    rids = [sched.submit(p, arrival=float(i)) for i, p in enumerate(prompts)]
+    results = sched.run()
+    for rid, prompt in zip(rids, prompts):
+        want, n = _fresh_reference(eng, prompt)
+        assert results[rid]["n_generated"] == n
+        np.testing.assert_array_equal(results[rid]["tokens"], want)
+    assert len(sched.host_swap) <= 2                 # capacity respected
+    assert sched.stats["swap_out_pages"] > 0
+    assert sched.allocator.free_pages == sched.pool_pages
