@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -53,6 +54,7 @@ from repro.core.paging import pages_needed
 from repro.dist import collectives as C
 from repro.launch.mesh import force_host_devices, make_mesh, parse_mesh
 from repro.models import ModelConfig, get_model
+from repro.obs import Obs, Tracer
 from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
 
 CFG = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
@@ -110,23 +112,42 @@ def session_trace(rng, n_users, turns, page_size, turn_gap=60.0):
 def bench_capacity(eng, trace, *, capacity, max_len, chunk,
                    compact_threshold, page_size=None, pool_pages=None,
                    sampling=None, prefill_chunk=None, fused=True,
-                   overlap=True, host_swap_pages=None, collect=None):
+                   overlap=True, host_swap_pages=None, collect=None,
+                   obs=None, trace_dir=None, leg="serve"):
     """One scheduler run; ``sampling`` is a per-request SamplingParams
     factory rid -> params (None = greedy).  Steps the scheduler manually so
     per-DECODE-STEP latency percentiles can be reported alongside
     throughput (p99 is the number continuous batching is supposed to hold
     down while admission/compaction churn the lane vector).  Default is the
     fused step program with the async overlap harvest — one dispatch and one
-    blocking sync per round."""
+    blocking sync per round.
+
+    The per-leg summary IS the obs registry snapshot: counters/series live
+    in the scheduler's registry, latency percentiles come from streaming
+    log2 histograms (no stored sample lists), and ``snapshot()`` emits the
+    exact key shape BENCH_serving.json promises — every scheduler leg now
+    carries every counter (swap/session/prefix keys are 0 where the feature
+    is off).  Pass ``obs`` (e.g. with a tracer) to share/record the run;
+    with ``trace_dir`` set a fresh tracer is attached and the leg's
+    Chrome/Perfetto timeline is exported to ``<trace_dir>/<leg>.json``.
+    """
+    if obs is None:
+        obs = Obs(tracer=Tracer()) if trace_dir else Obs()
+    reg = obs.metrics
+    # wall-clock latency histograms: decode_step (per-round latency amortized
+    # over its decode steps), TTFT (submit -> first token committed to a
+    # dispatch), TPOT (first token -> harvest, per subsequent token)
+    for name in ("decode_step", "ttft", "tpot"):
+        reg.histogram(name, unit="ms", percentiles=(50, 99))
     sched = ContinuousBatchingScheduler(
         eng, capacity=capacity, max_len=max_len, chunk=chunk,
         compact_threshold=compact_threshold, page_size=page_size,
         pool_pages=pool_pages, prefill_chunk=prefill_chunk,
-        fused=fused, overlap=overlap, host_swap_pages=host_swap_pages)
+        fused=fused, overlap=overlap, host_swap_pages=host_swap_pages,
+        obs=obs)
     for rid, (arrival, prompt, max_new) in enumerate(trace):
         sched.submit(prompt, arrival=arrival, max_new_tokens=max_new,
                      sampling=sampling(rid) if sampling else None)
-    step_lat = []
     t0 = time.perf_counter()
     while sched.queue or (sched.lane_rid >= 0).any():
         ds0 = sched.stats["decode_steps"]
@@ -135,44 +156,29 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
         dt = time.perf_counter() - s0
         ran = sched.stats["decode_steps"] - ds0
         if ran:                      # amortize the round over its decode steps
-            step_lat += [dt / ran] * ran
+            for _ in range(ran):
+                reg.observe("decode_step", dt / ran * 1e3)
     sched.run()                      # overlap: harvest the final stash
     wall = time.perf_counter() - t0
     results = sched.results
     toks = sum(r["n_generated"] for r in results.values())
-    occ = sched.stats["occupancy_trace"]
-    lane_eff = (sched.stats["active_lane_steps"]
-                / max(sched.stats["lane_steps"], 1))
-    # wall-clock TTFT (submit -> first token committed to a dispatch) and
-    # TPOT (first token -> harvest, per subsequent token) per request
-    ttft = [sched.req_times[r]["first_token"] - sched.req_times[r]["submitted"]
-            for r in results]
-    tpot = [(sched.req_times[r]["finished"]
-             - sched.req_times[r]["first_token"])
-            / max(results[r]["n_generated"] - 1, 1) for r in results]
+    for r in results:
+        rt = sched.req_times[r]
+        reg.observe("ttft", (rt["first_token"] - rt["submitted"]) * 1e3)
+        reg.observe("tpot", (rt["finished"] - rt["first_token"]) * 1e3
+                    / max(results[r]["n_generated"] - 1, 1))
     rec = {
         "capacity": capacity,
         "requests": len(results),
         "tokens": int(toks),
         "wall_s": wall,
         "tokens_per_s": toks / wall,
-        "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
-        "lane_efficiency": lane_eff,
-        "compactions": sched.stats["compactions"],
-        "rounds": sched.stats["steps"],
-        "dispatches": sched.stats["dispatches"],
-        "host_syncs": sched.stats["host_syncs"],
-        "decode_step_p50_ms": (float(np.percentile(step_lat, 50)) * 1e3
-                               if step_lat else 0.0),
-        "decode_step_p99_ms": (float(np.percentile(step_lat, 99)) * 1e3
-                               if step_lat else 0.0),
-        "ttft_p50_ms": float(np.percentile(ttft, 50)) * 1e3 if ttft else 0.0,
-        "ttft_p99_ms": float(np.percentile(ttft, 99)) * 1e3 if ttft else 0.0,
-        "tpot_p50_ms": float(np.percentile(tpot, 50)) * 1e3 if tpot else 0.0,
-        "tpot_p99_ms": float(np.percentile(tpot, 99)) * 1e3 if tpot else 0.0,
+        "lane_efficiency": (sched.stats["active_lane_steps"]
+                            / max(sched.stats["lane_steps"], 1)),
     }
+    rec.update(reg.snapshot())
+    rec["prefix_hit_rate"] = rec["prefix_hits"] / max(len(results), 1)
     if page_size is not None:
-        pocc = sched.stats["page_occupancy_trace"]
         # memory-honest throughput accounting: the KV bytes actually held on
         # device (pools + quantization scale pools) and the mean concurrent
         # lanes each byte buys — narrow pools serve the same occupancy from
@@ -184,31 +190,23 @@ def bench_capacity(eng, trace, *, capacity, max_len, chunk,
             "pool_pages": sched.pool_pages,
             "page_dtype": eng.page_dtype or "float32",
             "kv_cache_bytes": kv_bytes,
-            "lanes_per_byte": (float(np.mean(occ)) if occ else 0.0)
-                              * capacity / kv_bytes,
-            "mean_page_occupancy": float(np.mean(pocc)) if pocc else 0.0,
-            "prefix_hits": sched.stats["prefix_hits"],
-            "prefix_hit_rate": sched.stats["prefix_hits"] / max(len(results), 1),
-            "prefix_hit_tokens": sched.stats["prefix_hit_tokens"],
-            "prefill_tokens": sched.stats["prefill_tokens"],
-            "page_waits": sched.stats["page_waits"],
+            "lanes_per_byte": rec["mean_occupancy"] * capacity / kv_bytes,
         })
     if host_swap_pages:
         rec.update({
             "host_swap_pages": host_swap_pages,
-            "session_hits": sched.stats["session_hits"],
-            "session_hit_tokens": sched.stats["session_hit_tokens"],
             "cross_request_hit_rate": (sched.stats["session_hits"]
                                        / max(len(results), 1)),
-            "swap_out_pages": sched.stats["swap_out_pages"],
-            "swap_in_pages": sched.stats["swap_in_pages"],
         })
     if prefill_chunk is not None:
         rec["prefill_chunk"] = prefill_chunk
-        rec["prefill_chunks"] = sched.stats["prefill_chunks"]
     if collect is not None:
         for rid, r in results.items():
             collect[rid] = r["tokens"].tolist()
+    if trace_dir and obs.tracing:
+        os.makedirs(trace_dir, exist_ok=True)
+        rec["trace_events"] = obs.export(
+            os.path.join(trace_dir, f"{leg}.json"))
     return rec
 
 
@@ -299,6 +297,19 @@ def main(argv=None):
                     help="add a stochastic leg (temperature=0.8, top_p=0.9, "
                          "per-request seed = rid): exercises the per-lane "
                          "predicated sampler deterministically")
+    ap.add_argument("--trace-dir", default=None,
+                    help="export a Chrome/Perfetto trace_event JSON per "
+                         "showcase leg (paged/quantized/session/tp + the "
+                         "traced continuous leg) into this directory; "
+                         "continuous legs stay untraced so the trace-"
+                         "overhead gate compares cleanly")
+    ap.add_argument("--max-trace-overhead", type=float, default=None,
+                    help="run an extra TRACED continuous leg at the largest "
+                         "capacity and exit non-zero unless (a) its tokens/"
+                         "dispatches/host_syncs equal the untraced leg's "
+                         "exactly (tracing must observe, not perturb) and "
+                         "(b) its tokens_per_s loss stays within this "
+                         "fraction (0.10 = at most 10%% slower)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -337,7 +348,8 @@ def main(argv=None):
               "paged_mem_frac": args.paged_mem_frac,
               "psum_mode": args.psum,
               "continuous": [], "static": [], "paged": [], "paged_half": [],
-              "quantized": [], "session": [], "sampled": [], "tp": []}
+              "quantized": [], "session": [], "sampled": [], "tp": [],
+              "traced": []}
 
     def _sampled_params(rid: int):
         # fixed per-request seed (the rid) => the stochastic leg is exactly
@@ -380,7 +392,9 @@ def main(argv=None):
             p = bench_capacity(eng, trace, capacity=cap, max_len=max_len,
                                chunk=4, compact_threshold=0.5,
                                page_size=args.page_size, pool_pages=pool,
-                               prefill_chunk=args.prefill_chunk)
+                               prefill_chunk=args.prefill_chunk,
+                               trace_dir=args.trace_dir,
+                               leg=f"{leg_name}_cap{cap}")
             p["mem_frac"] = frac
             p["dense_pages"] = dense_pages
             p["dense_paged_ratio"] = p["tokens_per_s"] / r["tokens_per_s"]
@@ -417,7 +431,9 @@ def main(argv=None):
         q = bench_capacity(eng_q, trace, capacity=cap, max_len=max_len,
                            chunk=4, compact_threshold=0.5,
                            page_size=args.page_size, pool_pages=pool,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           trace_dir=args.trace_dir,
+                           leg=f"quantized_cap{cap}")
         q["mem_frac"] = args.paged_mem_frac
         q["dense_paged_ratio"] = q["tokens_per_s"] / r["tokens_per_s"]
         q["quant_lanes_ratio"] = (q["lanes_per_byte"]
@@ -464,7 +480,8 @@ def main(argv=None):
         warm: dict = {}
         sess = bench_capacity(eng, s_trace, **kw,
                               host_swap_pages=args.host_swap_pages,
-                              collect=warm)
+                              collect=warm, trace_dir=args.trace_dir,
+                              leg=f"session_cap{cap}")
         follow_ups = args.session_users * (args.session_turns - 1)
         sess.update({
             "users": args.session_users,
@@ -499,7 +516,8 @@ def main(argv=None):
                        compact_threshold=0.5, prefill_chunk=args.prefill_chunk)
         t = bench_capacity(eng_tp, trace, capacity=cap, max_len=max_len,
                            chunk=4, compact_threshold=0.5,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           trace_dir=args.trace_dir, leg=f"tp_cap{cap}")
         t["mesh"] = args.tp_mesh
         t["psum_mode"] = args.psum
         base = next(r for r in record["continuous"] if r["capacity"] == cap)
@@ -517,6 +535,52 @@ def main(argv=None):
                   f"{base['dispatches']} / {base['tokens']}")
             raise SystemExit(1)
         print(f"tp dispatch count matches continuous at capacity {cap}: ok")
+
+    if args.max_trace_overhead is not None or args.trace_dir:
+        # traced continuous leg at the largest capacity vs an UNTRACED twin:
+        # the zero-sync telemetry contract, gated.  Tokens, dispatches and
+        # host_syncs must match exactly (tracing observes, never perturbs)
+        # and the throughput loss must stay under --max-trace-overhead.
+        # The twin runs back-to-back with the traced leg and both take their
+        # best-of-3 tokens_per_s — wall clocks this short are at the mercy
+        # of CI machine noise, and the gate must measure tracing, not a
+        # neighboring job.
+        cap = capacities[-1]
+        kw = dict(capacity=cap, max_len=max_len, chunk=4,
+                  compact_threshold=0.5, prefill_chunk=args.prefill_chunk)
+        base = tr = None
+        for _ in range(3):
+            b = bench_capacity(eng, trace, **kw)
+            if base is None or b["tokens_per_s"] > base["tokens_per_s"]:
+                base = b
+            t = bench_capacity(eng, trace, **kw, obs=Obs(tracer=Tracer()),
+                               trace_dir=args.trace_dir,
+                               leg=f"traced_cap{cap}")
+            if tr is None or t["tokens_per_s"] > tr["tokens_per_s"]:
+                tr = t
+        tr["trace_overhead"] = 1.0 - tr["tokens_per_s"] / base["tokens_per_s"]
+        record["traced"].append(tr)
+        print(f"capacity={cap:2d}  traced "
+              f"{tr['tokens_per_s']:8.1f} tok/s "
+              f"(overhead {tr['trace_overhead'] * 100:+.1f}%, "
+              f"{tr.get('trace_events', 0)} events)")
+        if (tr["tokens"] != base["tokens"]
+                or tr["dispatches"] != base["dispatches"]
+                or tr["host_syncs"] != base["host_syncs"]):
+            print(f"FAIL traced leg: tokens/dispatches/syncs "
+                  f"{tr['tokens']}/{tr['dispatches']}/{tr['host_syncs']} != "
+                  f"untraced {base['tokens']}/{base['dispatches']}/"
+                  f"{base['host_syncs']} — tracing perturbed the serve loop")
+            raise SystemExit(1)
+        if (args.max_trace_overhead is not None
+                and tr["trace_overhead"] > args.max_trace_overhead):
+            print(f"FAIL traced leg: tokens_per_s overhead "
+                  f"{tr['trace_overhead'] * 100:.1f}% > "
+                  f"{args.max_trace_overhead * 100:.0f}%")
+            raise SystemExit(1)
+        if args.max_trace_overhead is not None:
+            print(f"trace overhead within "
+                  f"{args.max_trace_overhead * 100:.0f}%: ok")
 
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)

@@ -20,6 +20,20 @@ PSUM_MODES = ("fast", "ordered", "pairwise")
 
 _PSUM_MODE = "fast"
 
+# observability hook (repro.obs): when set, each TRACED ``psum`` call bumps
+# a ``psum_<mode>_traced`` counter — a trace-time census of which ordering
+# the compiled programs bake in (NOT a runtime collective count; jit caching
+# means a cached executable re-runs without re-tracing).  Wire from
+# ``launch/serve.py --metrics`` via ``set_obs``.
+_OBS = None
+
+
+def set_obs(obs) -> None:
+    """Attach an ``repro.obs.Obs`` whose registry counts traced psum calls
+    by mode (None detaches)."""
+    global _OBS
+    _OBS = obs
+
 
 def set_psum_mode(mode: str) -> None:
     """Select the ordering ``psum`` dispatches to (process-wide choice point;
@@ -36,13 +50,18 @@ def psum_mode() -> str:
 
 def psum(x, axis_name: str, mode: str | None = None):
     """The serve-path reduction choice point: one name model code can call,
-    resolving to the native all-reduce or a deterministic ordering."""
+    resolving to the native all-reduce or a deterministic ordering.  Each
+    call is wrapped in a ``psum_<mode>`` named_scope so HLO dumps and XLA
+    profiles attribute collective cost to the ordering that produced it."""
     mode = _PSUM_MODE if mode is None else mode
-    if mode == "ordered":
-        return ordered_psum(x, axis_name)
-    if mode == "pairwise":
-        return pairwise_psum(x, axis_name)
-    return jax.lax.psum(x, axis_name)
+    if _OBS is not None:
+        _OBS.metrics.inc(f"psum_{mode}_traced")
+    with jax.named_scope(f"psum_{mode}"):
+        if mode == "ordered":
+            return ordered_psum(x, axis_name)
+        if mode == "pairwise":
+            return pairwise_psum(x, axis_name)
+        return jax.lax.psum(x, axis_name)
 
 
 def ordered_psum(x, axis_name: str):

@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs import all_arch_names, get_config
 from repro.dist import collectives as C
 from repro.models import get_model
+from repro.obs import Obs, Tracer
 from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
 
 from .mesh import force_host_devices, make_mesh, parse_mesh
@@ -98,9 +99,26 @@ def main():
                          "level code: native all-reduce, or the "
                          "deterministic ordered (fadda) / pairwise (faddv) "
                          "collectives")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record the serve run's round/request timeline and "
+                         "export Chrome/Perfetto trace_event JSON to FILE "
+                         "(open in ui.perfetto.dev); served tokens and "
+                         "dispatch/sync counts are unchanged by tracing")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the obs registry snapshot (the flat "
+                         "counter/percentile dict the serving bench records "
+                         "per leg) after the run")
+    ap.add_argument("--xla-annotations", action="store_true",
+                    help="wrap dispatch-seam spans in jax.profiler."
+                         "TraceAnnotation so a concurrently captured XLA "
+                         "device profile interleaves with the host timeline")
     args = ap.parse_args()
 
     C.set_psum_mode(args.psum)
+    obs = Obs(tracer=Tracer() if args.trace_out else None,
+              xla_annotations=args.xla_annotations)
+    if args.metrics or args.trace_out:
+        C.set_obs(obs)
     mesh = None
     if args.mesh is not None:
         d, m = parse_mesh(args.mesh)
@@ -155,7 +173,7 @@ def main():
                  "moves pages)")
     eng = ServeEngine(cfg, params, max_new_tokens=args.max_new, stop_token=7,
                       paged_attn=args.paged_attn, mesh=mesh,
-                      page_dtype=args.page_dtype)
+                      page_dtype=args.page_dtype, obs=obs)
     if args.static or cfg.cross_attn_group:
         # vlm cross_emb extras are per-batch, not yet per-request: static path
         res = eng.generate(batch, sampling=[_sampling(i)
@@ -164,6 +182,7 @@ def main():
             n = int(res["n_generated"][i])
             print(f"req{i} len={int(batch['lens'][i]):2d} -> "
                   f"{res['tokens'][i, :n].tolist()}")
+        _finish_obs(args, obs)
         return
 
     # ---- continuous batching: stream requests through the lane vector ----
@@ -177,7 +196,8 @@ def main():
         prefix_sharing=not args.no_prefix_sharing,
         host_swap_pages=args.host_swap_pages,
         prefill_chunk=args.prefill_chunk,
-        fused=not args.no_fused, overlap=args.overlap, src_len=src_len)
+        fused=not args.no_fused, overlap=args.overlap, src_len=src_len,
+        obs=obs)
     rid_len = {}
     for i in range(args.requests):
         plen = int(rng.randint(4, args.prompt_len + 1))
@@ -218,6 +238,19 @@ def main():
                   f"out={sched.stats['swap_out_pages']} "
                   f"in={sched.stats['swap_in_pages']} pages  "
                   f"store={len(sched.host_swap)}/{args.host_swap_pages}")
+    _finish_obs(args, obs)
+
+
+def _finish_obs(args, obs):
+    """Export the trace / print the metrics snapshot per the CLI flags."""
+    if args.trace_out:
+        n = obs.export(args.trace_out)
+        print(f"[obs] wrote {n} trace events to {args.trace_out} "
+              "(open in ui.perfetto.dev or chrome://tracing)")
+    if args.metrics:
+        import json
+        print("[obs] " + json.dumps(obs.metrics.snapshot(), indent=2,
+                                    sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,111 @@
+"""The ``Obs`` facade the serving stack threads through (``obs=...``).
+
+One object bundles the two sinks — a :class:`~repro.obs.metrics.
+MetricsRegistry` (always present; it backs ``scheduler.stats``) and an
+optional :class:`~repro.obs.trace.Tracer` — behind no-op-cheap entry
+points.  Every hook degrades to a single attribute test when tracing is
+off: ``span`` returns the shared :data:`NULL_SPAN`, ``event``/``counter``/
+``request_*`` return immediately.  That is the "tracing OFF costs nothing
+measurable" half of the contract; the other half (tracing ON moves no
+tokens and no ``dispatches``/``host_syncs``) holds because every hook
+records only host-resident values.
+
+``xla_annotations=True`` additionally wraps ``span(..., xla=True)`` seams
+in ``jax.profiler.TraceAnnotation`` so a concurrently-captured XLA profile
+(``jax.profiler.trace``) interleaves the device timeline with these spans.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .metrics import MetricsRegistry
+from .trace import Tracer
+
+__all__ = ["Obs", "NULL_SPAN"]
+
+
+class _NullSpan:
+    """Shared do-nothing context manager (the tracing-off fast path)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+def _trace_annotation(name: str):
+    """A ``jax.profiler.TraceAnnotation`` (None when unavailable)."""
+    try:
+        from jax.profiler import TraceAnnotation
+    except Exception:                                    # pragma: no cover
+        return None
+    return TraceAnnotation(name)
+
+
+class Obs:
+    """Observability handle: a metrics registry plus an optional tracer.
+
+    Parameters
+    ----------
+    metrics: registry to record into (default: a fresh one — callers that
+        want engine + scheduler + bench in one registry pass it explicitly).
+    tracer: a :class:`Tracer` to record the span timeline into, or None
+        (the default) for metrics-only operation.
+    xla_annotations: wrap dispatch-seam spans in
+        ``jax.profiler.TraceAnnotation`` so XLA device profiles interleave.
+    """
+
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 xla_annotations: bool = False):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.xla_annotations = xla_annotations
+
+    @property
+    def tracing(self) -> bool:
+        return self.tracer is not None
+
+    # ------------------------------------------------------------------
+    # span/event hooks (no-ops without a tracer)
+    # ------------------------------------------------------------------
+
+    def span(self, name: str, xla: bool = False, **args):
+        """Span on the serve-loop track; ``xla=True`` marks a dispatch seam
+        eligible for the TraceAnnotation wrapper."""
+        if self.tracer is None:
+            return NULL_SPAN
+        ann = (_trace_annotation(name)
+               if xla and self.xla_annotations else None)
+        return self.tracer.span(name, ann=ann, **args)
+
+    def event(self, name: str, **args):
+        if self.tracer is not None:
+            self.tracer.instant(name, **args)
+
+    def counter(self, name: str, value: float):
+        if self.tracer is not None:
+            self.tracer.counter(name, value)
+
+    def request_begin(self, rid: int, **args):
+        if self.tracer is not None:
+            self.tracer.request_begin(rid, **args)
+
+    def request_event(self, rid: int, name: str, **args):
+        if self.tracer is not None:
+            self.tracer.request_event(rid, name, **args)
+
+    def request_end(self, rid: int, **args):
+        if self.tracer is not None:
+            self.tracer.request_end(rid, **args)
+
+    def export(self, path: str) -> int:
+        """Export the trace (0 events when tracing is off)."""
+        return self.tracer.export(path) if self.tracer is not None else 0

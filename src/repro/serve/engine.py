@@ -40,6 +40,7 @@ from repro.dist import sharding as SH
 from repro.models import (gather_lanes, get_model, is_paged, merge_lanes,
                           paged_decode_ok, paged_view, paged_writeback,
                           slot_update, to_paged)
+from repro.obs import Obs
 from repro.sample.processors import ban_pred, mask_logits
 
 
@@ -89,8 +90,15 @@ class ServeEngine:
     # and the scheduler commits its serve state through ``dist.serve`` —
     # model code itself never sees the mesh (the VL-agnostic contract).
     mesh: Optional[object] = None
+    # observability handle (repro.obs.Obs): one-shot ``generate`` records its
+    # prefill/decode seams here.  The scheduler does NOT inherit this — it
+    # defaults to its own registry; pass the same handle to both when one
+    # combined timeline is wanted (launch --trace-out does).
+    obs: Optional[object] = None
 
     def __post_init__(self):
+        if self.obs is None:
+            self.obs = Obs()
         if self.paged_attn not in ("native", "kernel", "gather"):
             raise ValueError(
                 f"paged_attn must be 'native' ('kernel' alias) or 'gather', "
@@ -557,7 +565,9 @@ class ServeEngine:
         cache = self.make_cache(b, max_len, batch)
         sstate = self.make_state(b, sampling)
 
-        logits, cache = self._prefill(self.params, dict(batch, lens=lens), cache)
+        with self.obs.span("prefill", xla=True, b=b, s=s):
+            logits, cache = self._prefill(self.params,
+                                          dict(batch, lens=lens), cache)
         if page_size is not None:
             cache = to_paged(self.cfg, cache, page_size=page_size,
                              pool_pages=pool_pages,
@@ -575,10 +585,11 @@ class ServeEngine:
         budget = jnp.full((b,), max_new, jnp.int32)
         p0 = (first_tok != self.stop_token) & (budget > 1)
         # ---- single dispatch: the whole decode loop runs inside XLA ----
-        cache, out, tok, _, n_gen, _, _ = self._decode_chunk(
-            self.params, cache, out, first_tok, p0, jnp.ones((b,), jnp.int32),
-            budget, sstate, n_steps=max_new,
-            stochastic=not S.is_all_greedy(sstate))
+        with self.obs.span("decode", xla=True, b=b, n_steps=max_new):
+            cache, out, tok, _, n_gen, _, _ = self._decode_chunk(
+                self.params, cache, out, first_tok, p0,
+                jnp.ones((b,), jnp.int32), budget, sstate, n_steps=max_new,
+                stochastic=not S.is_all_greedy(sstate))
         p = tok != self.stop_token                  # lanes that never exited
         return {"tokens": out, "n_generated": n_gen, "active": p,
                 "cache": cache}

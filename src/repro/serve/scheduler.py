@@ -67,8 +67,24 @@ from repro.core import paging as PG
 from repro.models import (chunked_prefill_granularity, chunked_prefill_ok,
                           gather_lanes, get_model, lane_independent_decode,
                           slot_update)
+from repro.obs import Obs
 
 from .engine import ServeEngine
+
+#: every scheduler stat, registered as a typed metric in the obs registry
+#: (``(name, snapshot key)``; None = same).  ``stats`` is a dict view over
+#: these, so ``stats["x"] += 1`` call sites and tests keep working while
+#: ``obs.metrics.snapshot()`` is the single summary definition the bench
+#: records.
+_STAT_COUNTERS = (
+    ("steps", "rounds"), ("decode_steps", None), ("lane_steps", None),
+    ("active_lane_steps", None), ("compactions", None),
+    ("prefix_hits", None), ("prefix_hit_tokens", None),
+    ("prefill_tokens", None), ("page_waits", None), ("prefill_chunks", None),
+    ("dispatches", None), ("host_syncs", None), ("swap_out_pages", None),
+    ("swap_in_pages", None), ("session_hits", None),
+    ("session_hit_tokens", None),
+)
 
 
 def _next_pow2(n: int) -> int:
@@ -363,6 +379,13 @@ class ContinuousBatchingScheduler:
     src_len: encoder memory length for encdec serving (every request's
         ``src_emb`` extra is zero-padded to this length at submit; required
         for the encdec family, ignored otherwise).
+    obs: an ``repro.obs.Obs`` handle — its metrics registry backs ``stats``
+        and, when it carries a tracer, the round/request timeline is
+        recorded at the host-side seams (never inside jitted code, never
+        adding a device sync).  Default: a FRESH metrics-only handle —
+        callers that want engine + scheduler + bench in one registry (the
+        launcher, the bench's traced legs) pass one explicitly; sharing one
+        obs across scheduler instances accumulates their counters.
     """
 
     def __init__(self, engine: ServeEngine, *, capacity: int, max_len: int,
@@ -373,7 +396,8 @@ class ContinuousBatchingScheduler:
                  host_swap_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  fused: bool = True, overlap: bool = False,
-                 src_len: Optional[int] = None):
+                 src_len: Optional[int] = None,
+                 obs: Optional[Obs] = None):
         if engine.cfg.family == "encdec" and src_len is None:
             raise ValueError(
                 "encdec serving needs src_len= (the padded encoder memory "
@@ -467,14 +491,16 @@ class ContinuousBatchingScheduler:
         # recycled, moves coherently under compaction) but excluded from
         # decode commits and harvest until its final chunk splices in
         self._lane_pending = np.zeros((b,), bool)
-        self.stats = {"steps": 0, "decode_steps": 0, "lane_steps": 0,
-                      "active_lane_steps": 0, "compactions": 0,
-                      "occupancy_trace": [], "page_occupancy_trace": [],
-                      "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefill_tokens": 0, "page_waits": 0,
-                      "prefill_chunks": 0, "dispatches": 0, "host_syncs": 0,
-                      "swap_out_pages": 0, "swap_in_pages": 0,
-                      "session_hits": 0, "session_hit_tokens": 0}
+        # the stats dict is a VIEW over typed metrics in the obs registry:
+        # same indexing/mutation surface as the old free-form dict, but the
+        # registry's snapshot() is now the single summary definition
+        self.obs = obs if obs is not None else Obs()
+        reg = self.obs.metrics
+        for name, key in _STAT_COUNTERS:
+            reg.counter(name, key=key)
+        reg.series("occupancy_trace", key="mean_occupancy")
+        reg.series("page_occupancy_trace", key="mean_page_occupancy")
+        self.stats = reg.stats_view()
         # async-overlap state: the in-flight round's result handles (with
         # host copies prefetched) plus the lane view they were dispatched
         # under; harvested one round late at the single blocking sync
@@ -519,6 +545,18 @@ class ContinuousBatchingScheduler:
             self._lane_sh)
         self.sstate = jax.device_put(self.sstate, self._sstate_sh)
 
+    def _block_on(self, tree, what: str):
+        """THE single place the serve loop blocks on device results.
+
+        Materializes every leaf of ``tree`` to numpy (one blocking sync
+        point, however many arrays ride it), counts it in ``host_syncs`` and
+        traces it as a ``sync`` span — so the sync accounting is measured at
+        the choke point instead of asserted by magic numbers at call sites.
+        """
+        self.stats["host_syncs"] += 1
+        with self.obs.span("sync", what=what):
+            return jax.tree_util.tree_map(np.asarray, tree)
+
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
@@ -552,6 +590,8 @@ class ContinuousBatchingScheduler:
         self.queue.append(Request(rid, tokens, max_new_tokens, arrival,
                                   extras, sampling))
         self.req_times[rid] = {"submitted": time.perf_counter()}
+        self.obs.request_begin(rid, prompt_len=len(tokens),
+                               arrival=float(arrival))
         return rid
 
     def _pad_encdec_extras(self, extras: Optional[dict]) -> dict:
@@ -586,39 +626,46 @@ class ContinuousBatchingScheduler:
         self._round_admitted = []
         if self.fused:
             return self._step_fused()
-        self._maybe_compact()
-        self._advance_partials()
-        self._admit()
-        self._reshard()
-        occupied = self.lane_rid >= 0
-        self.stats["occupancy_trace"].append(float(occupied.sum())
-                                             / self.capacity)
-        if self.page_size is not None:
-            self.stats["page_occupancy_trace"].append(
-                self.allocator.live_pages / self.pool_pages)
-        if occupied.any():
-            eng = self.engine
-            gen_before = int(self.n_gen.sum())
-            self.stats["dispatches"] += 1
-            (self.cache, self.out_buf, self.tok, self.p,
-             self.n_gen, self.sstate, steps) = eng._decode_chunk(
-                eng.params, self.cache, self.out_buf, self.tok, self.p,
-                self.n_gen, self.budget, self.sstate, n_steps=self.chunk,
-                stochastic=bool(self._lane_stoch.any()))
-            # the jitted loop exits early once every lane retires, and lanes
-            # die mid-chunk: charge what actually ran (each active lane-step
-            # commits exactly one token, so the n_gen delta is exact)
-            steps = int(steps)
-            self.stats["decode_steps"] += steps
-            self.stats["lane_steps"] += steps * self.capacity
-            self.stats["active_lane_steps"] += int(self.n_gen.sum()) - gen_before
-            self.stats["host_syncs"] += 3       # gen_before, steps, gen_after
-            # the clock is in decode-step units: advance by what actually ran
-            self.now += steps
-        else:
-            self._idle_tick()
-        self.stats["steps"] += 1
-        self._harvest()
+        with self.obs.span("round", round=self.stats["steps"]):
+            self._maybe_compact()
+            self._advance_partials()
+            self._admit()
+            self._reshard()
+            occupied = self.lane_rid >= 0
+            occ = float(occupied.sum()) / self.capacity
+            self.stats["occupancy_trace"].append(occ)
+            self.obs.counter("occupancy", occ)
+            if self.page_size is not None:
+                pocc = self.allocator.live_pages / self.pool_pages
+                self.stats["page_occupancy_trace"].append(pocc)
+                self.obs.counter("pool_occupancy", pocc)
+            if occupied.any():
+                eng = self.engine
+                gen_before = int(self._block_on(self.n_gen.sum(),
+                                                "gen_before"))
+                self.stats["dispatches"] += 1
+                with self.obs.span("burst", xla=True, chunk=self.chunk):
+                    (self.cache, self.out_buf, self.tok, self.p,
+                     self.n_gen, self.sstate, steps) = eng._decode_chunk(
+                        eng.params, self.cache, self.out_buf, self.tok,
+                        self.p, self.n_gen, self.budget, self.sstate,
+                        n_steps=self.chunk,
+                        stochastic=bool(self._lane_stoch.any()))
+                # the jitted loop exits early once every lane retires, and
+                # lanes die mid-chunk: charge what actually ran (each active
+                # lane-step commits exactly one token, so the n_gen delta is
+                # exact)
+                steps = int(self._block_on(steps, "steps"))
+                self.stats["decode_steps"] += steps
+                self.stats["lane_steps"] += steps * self.capacity
+                self.stats["active_lane_steps"] += int(
+                    self._block_on(self.n_gen.sum(), "gen_after")) - gen_before
+                # the clock is in decode-step units: advance by what ran
+                self.now += steps
+            else:
+                self._idle_tick()
+            self.stats["steps"] += 1
+            self._harvest()
 
     def _step_fused(self):
         """One round through the fused step program: all host work is
@@ -627,66 +674,83 @@ class ContinuousBatchingScheduler:
         legacy loop); overlap mode stashes the handles and harvests the
         PREVIOUS round instead."""
         eng = self.engine
-        self._maybe_compact()
-        self._reshard()
-        part_steps = self._plan_partial_steps()
-        plan = self._plan_admission()
-        occupied = self.lane_rid >= 0
-        self.stats["occupancy_trace"].append(float(occupied.sum())
-                                             / self.capacity)
-        if self.page_size is not None:
-            self.stats["page_occupancy_trace"].append(
-                self.allocator.live_pages / self.pool_pages)
-        self.stats["steps"] += 1
-        if plan is None and not part_steps and not occupied.any():
-            self._flush_stash()                 # can only be a no-op stash
-            self._idle_tick()
-            return
-        self.stats["dispatches"] += 1
-        if plan is None and not part_steps:
-            width = self._burst_width()
-            (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
-             self.sstate, steps_h) = eng._decode_chunk_serve(
-                eng.params, self.cache, self.out_buf, self.tok, self.p,
-                self.n_gen, self.budget, self.sstate,
-                n_steps=self.chunk,
-                stochastic=bool(self._lane_stoch.any()), width=width)
-        else:
-            admit = self._assemble_admit(plan)
-            parts, part_final, part_stoch = self._assemble_parts(part_steps)
-            admit_stoch = bool(plan is not None and any(
-                self._is_stochastic(s) for s in plan.specs))
-            # _lane_stoch / width read AFTER the admit/part assembly committed
-            # this round's splices — a just-admitted stochastic lane must get
-            # a stochastic decode burst, and a lane spliced in this round must
-            # be inside the burst bucket (same ordering as the unfused loop)
-            stoch = bool(self._lane_stoch.any())
-            width = self._burst_width()
-            (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
-             self.budget, self.sstate, steps_h,
-             parts_out) = eng._fused_step(
-                eng.params, self.cache, self.out_buf, self.tok, self.p,
-                self.n_gen, self.budget, self.sstate, admit, parts,
-                n_steps=self.chunk, stochastic=stoch,
-                admit_stoch=admit_stoch, part_final=part_final,
-                part_stoch=part_stoch, max_len=self.max_len, width=width)
-            nonfinal = [s.part for s in part_steps if not s.final]
-            for part, new_cache in zip(nonfinal, parts_out):
-                part.sub_cache = new_cache
-        if self.overlap:
-            self._push_stash(steps_h, width)
-        else:
-            steps = int(steps_h)
-            self.stats["host_syncs"] += 2       # steps + n_gen readback
-            self.stats["decode_steps"] += steps
-            self.stats["lane_steps"] += steps * (width or self.capacity)
-            ngen = np.asarray(self.n_gen)
-            base = self._host_ngen.copy()
-            base[self._round_admitted] = 1
-            self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
-            self._host_ngen = ngen.astype(np.int64)
-            self.now += steps
-            self._harvest()
+        obs = self.obs
+        with obs.span("round", round=self.stats["steps"]):
+            self._maybe_compact()
+            self._reshard()
+            with obs.span("plan"):
+                part_steps = self._plan_partial_steps()
+                plan = self._plan_admission()
+            occupied = self.lane_rid >= 0
+            occ = float(occupied.sum()) / self.capacity
+            self.stats["occupancy_trace"].append(occ)
+            obs.counter("occupancy", occ)
+            if self.page_size is not None:
+                pocc = self.allocator.live_pages / self.pool_pages
+                self.stats["page_occupancy_trace"].append(pocc)
+                obs.counter("pool_occupancy", pocc)
+            self.stats["steps"] += 1
+            if plan is None and not part_steps and not occupied.any():
+                self._flush_stash()             # can only be a no-op stash
+                self._idle_tick()
+                return
+            self.stats["dispatches"] += 1
+            if plan is None and not part_steps:
+                width = self._burst_width()
+                with obs.span("dispatch", xla=True, kind="decode",
+                              width=width or self.capacity):
+                    obs.event("burst", chunk=self.chunk,
+                              width=width or self.capacity)
+                    (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
+                     self.sstate, steps_h) = eng._decode_chunk_serve(
+                        eng.params, self.cache, self.out_buf, self.tok,
+                        self.p, self.n_gen, self.budget, self.sstate,
+                        n_steps=self.chunk,
+                        stochastic=bool(self._lane_stoch.any()), width=width)
+            else:
+                with obs.span("admit", n=plan.n if plan else 0,
+                              parts=len(part_steps)):
+                    admit = self._assemble_admit(plan)
+                    parts, part_final, part_stoch = self._assemble_parts(
+                        part_steps)
+                admit_stoch = bool(plan is not None and any(
+                    self._is_stochastic(s) for s in plan.specs))
+                # _lane_stoch / width read AFTER the admit/part assembly
+                # committed this round's splices — a just-admitted stochastic
+                # lane must get a stochastic decode burst, and a lane spliced
+                # in this round must be inside the burst bucket (same
+                # ordering as the unfused loop)
+                stoch = bool(self._lane_stoch.any())
+                width = self._burst_width()
+                with obs.span("dispatch", xla=True, kind="fused",
+                              width=width or self.capacity):
+                    obs.event("burst", chunk=self.chunk,
+                              width=width or self.capacity)
+                    (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
+                     self.budget, self.sstate, steps_h,
+                     parts_out) = eng._fused_step(
+                        eng.params, self.cache, self.out_buf, self.tok,
+                        self.p, self.n_gen, self.budget, self.sstate, admit,
+                        parts, n_steps=self.chunk, stochastic=stoch,
+                        admit_stoch=admit_stoch, part_final=part_final,
+                        part_stoch=part_stoch, max_len=self.max_len,
+                        width=width)
+                nonfinal = [s.part for s in part_steps if not s.final]
+                for part, new_cache in zip(nonfinal, parts_out):
+                    part.sub_cache = new_cache
+            if self.overlap:
+                self._push_stash(steps_h, width)
+            else:
+                steps = int(self._block_on(steps_h, "steps"))
+                self.stats["decode_steps"] += steps
+                self.stats["lane_steps"] += steps * (width or self.capacity)
+                ngen = self._block_on(self.n_gen, "n_gen")
+                base = self._host_ngen.copy()
+                base[self._round_admitted] = 1
+                self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
+                self._host_ngen = ngen.astype(np.int64)
+                self.now += steps
+                self._harvest()
 
     def _burst_width(self):
         """Pow2 lane bucket the fused decode burst may narrow to, or None for
@@ -713,6 +777,7 @@ class ContinuousBatchingScheduler:
             self.now = float(nxt)
         else:
             self.now += self.chunk
+        self.obs.event("idle", now=self.now)
 
     # ------------------------------------------------------------------
     # async overlap: one-round-delayed harvest from prefetched handles
@@ -743,42 +808,45 @@ class ContinuousBatchingScheduler:
         """The round's SINGLE blocking sync: materialize the prefetched
         handles, account the decode burst, and harvest finished lanes under
         the lane view the stash was created with."""
-        self.stats["host_syncs"] += 1
-        p = np.asarray(st["p"])
-        out = np.asarray(st["out"])
-        ngen = np.asarray(st["ngen"])
-        steps = int(st["steps"])
-        self.stats["decode_steps"] += steps
-        self.stats["lane_steps"] += steps * (st.get("width") or self.capacity)
-        base = self._host_ngen.copy()
-        base[st["admitted"]] = 1
-        self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
-        self._host_ngen = ngen.astype(np.int64)
-        self.now += steps
-        finished = np.flatnonzero((st["lane_rid"] >= 0) & ~p & ~st["pending"])
-        if finished.size == 0:
-            return
-        t = time.perf_counter()
-        freed: list = []
-        for lane in finished:
-            lane = int(lane)
-            rid = int(st["lane_rid"][lane])
-            n = int(ngen[lane])
-            self.results[rid] = {"tokens": out[lane, :n].copy(),
-                                 "n_generated": n,
-                                 "finished_at": self.now}
-            self.req_times[rid]["finished"] = t
-            self.lane_rid[lane] = -1
-            self._lane_stoch[lane] = False
+        with self.obs.span("harvest", delayed=True):
+            p, out, ngen, steps_a = self._block_on(
+                (st["p"], st["out"], st["ngen"], st["steps"]), "harvest")
+            steps = int(steps_a)
+            self.stats["decode_steps"] += steps
+            self.stats["lane_steps"] += steps * (st.get("width")
+                                                 or self.capacity)
+            base = self._host_ngen.copy()
+            base[st["admitted"]] = 1
+            self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
+            self._host_ngen = ngen.astype(np.int64)
+            self.now += steps
+            finished = np.flatnonzero((st["lane_rid"] >= 0) & ~p
+                                      & ~st["pending"])
+            if finished.size == 0:
+                return
+            t = time.perf_counter()
+            freed: list = []
+            for lane in finished:
+                lane = int(lane)
+                rid = int(st["lane_rid"][lane])
+                n = int(ngen[lane])
+                self.results[rid] = {"tokens": out[lane, :n].copy(),
+                                     "n_generated": n,
+                                     "finished_at": self.now}
+                self.req_times[rid]["finished"] = t
+                self.obs.request_end(rid, n_generated=n,
+                                     finished_at=self.now)
+                self.lane_rid[lane] = -1
+                self._lane_stoch[lane] = False
+                if self.page_size is not None:
+                    for pid in self.lane_pages.pop(lane):
+                        if self.allocator.release(pid):
+                            freed.append(pid)
             if self.page_size is not None:
-                for pid in self.lane_pages.pop(lane):
-                    if self.allocator.release(pid):
-                        freed.append(pid)
-        if self.page_size is not None:
-            if freed:
-                self._spill_pages(freed)
-            self.cache["page_table"] = self.cache["page_table"].at[
-                jnp.asarray(finished, jnp.int32)].set(self.trash_page)
+                if freed:
+                    self._spill_pages(freed)
+                self.cache["page_table"] = self.cache["page_table"].at[
+                    jnp.asarray(finished, jnp.int32)].set(self.trash_page)
 
     def run(self) -> dict[int, dict]:
         """Drain the queue and all live lanes; returns ``{rid: result}``.
@@ -982,8 +1050,15 @@ class ContinuousBatchingScheduler:
             budgets = np.asarray([self._budget_for(r, int(lens[i]))
                                   for i, r in enumerate(batch_reqs)], np.int32)
         t = time.perf_counter()
-        for r in batch_reqs:
+        for i, r in enumerate(batch_reqs):
             self.req_times[r.rid]["first_token"] = t
+            pl = plans[i] if plans else None
+            self.obs.request_event(
+                r.rid, "admitted", lane=int(lanes[i]),
+                **({"shared_pages": len(pl.shared),
+                    "swapped_pages": len(pl.swapped),
+                    "new_pages": len(pl.new)} if pl is not None else {}))
+            self.obs.request_event(r.rid, "first_token")
         return _AdmitPlan(reqs=batch_reqs, plans=plans, lanes=lanes, n=n,
                           n_pad=n_pad, toks=toks, lens=lens,
                           pos0_pad=pos0_pad, budgets=budgets, specs=specs)
@@ -1023,7 +1098,8 @@ class ContinuousBatchingScheduler:
         if self.page_size is not None:
             sub_cache = self._seed_shared_prefix(sub_cache, plan.plans, n_pad)
         self.stats["dispatches"] += 1
-        logits, sub_cache = eng._prefill(eng.params, batch, sub_cache)
+        with self.obs.span("admit", xla=True, n=n):
+            logits, sub_cache = eng._prefill(eng.params, batch, sub_cache)
         # per-request sampler rows: built from each request's OWN spec/seed
         # (dummy pad rows are greedy with a zero key), first token sampled
         # through the same repro.sample entry point the decode loop uses
@@ -1148,6 +1224,9 @@ class ContinuousBatchingScheduler:
             req=req, plan=plan, lane=lane, sub_cache=sub_cache, done=0,
             pos0=plan.pos0 if plan is not None else 0, budget=budget,
             seed=seed))
+        self.obs.request_event(req.rid, "prefill_start", lane=lane,
+                               suffix=len(req.tokens)
+                               - (plan.pos0 if plan is not None else 0))
 
     def _plan_partial_steps(self) -> list[_PartStep]:
         """Plan at most ONE prefill chunk per pending request — pure host
@@ -1185,6 +1264,8 @@ class ContinuousBatchingScheduler:
             self.stats["prefill_tokens"] += n
             self.stats["prefill_chunks"] += 1
             part.done += n
+            self.obs.request_event(part.req.rid, "prefill_chunk",
+                                   done=part.done)
             final = start + n >= len(toks)
             steps.append(_PartStep(part=part, batch=batch, final=final,
                                    seed=seed))
@@ -1202,6 +1283,9 @@ class ContinuousBatchingScheduler:
             self._round_admitted.append(part.lane)
             t = time.perf_counter() if t is None else t
             self.req_times[part.req.rid]["first_token"] = t
+            self.obs.request_event(part.req.rid, "admitted",
+                                   lane=part.lane, chunked=True)
+            self.obs.request_event(part.req.rid, "first_token")
         self._partials = still
         return steps
 
@@ -1215,8 +1299,10 @@ class ContinuousBatchingScheduler:
                     self.cache, s.part.sub_cache, s.seed[0], s.seed[1],
                     self.max_len)
             self.stats["dispatches"] += 1
-            logits, s.part.sub_cache = self.engine._prefill(
-                self.engine.params, batch, s.part.sub_cache)
+            with self.obs.span("prefill_chunk", xla=True,
+                               rid=s.part.req.rid, final=s.final):
+                logits, s.part.sub_cache = self.engine._prefill(
+                    self.engine.params, batch, s.part.sub_cache)
             if s.final:
                 self._splice_partial(s.part, logits)
 
@@ -1295,22 +1381,23 @@ class ContinuousBatchingScheduler:
         a power of two aimed at the trash page).  The pages then seed the
         admission prefill exactly like resident shared pages; the host
         entries stay (content-addressed) for future hits."""
-        entries = [self.host_swap.get(k) for k in keys]
-        kpad = _next_pow2(len(pages))
-        pids = np.full((kpad,), self.trash_page, np.int32)
-        pids[:len(pages)] = pages
-        blocks = {}
-        for pk, proto in entries[0].items():
-            rows = [e[pk] for e in entries]
-            rows += [np.zeros_like(proto)] * (kpad - len(rows))
-            blocks[pk] = np.stack(rows)
-        self.stats["dispatches"] += 1
-        self.stats["swap_in_pages"] += len(pages)
-        self.cache = self.engine._scatter_blocks(
-            self.cache, jnp.asarray(pids), blocks)
-        # pin the written pools back to canonical placement so the round's
-        # fused dispatch doesn't retrace on a drifted layout
-        self._reshard()
+        with self.obs.span("swap_in", pages=len(pages)):
+            entries = [self.host_swap.get(k) for k in keys]
+            kpad = _next_pow2(len(pages))
+            pids = np.full((kpad,), self.trash_page, np.int32)
+            pids[:len(pages)] = pages
+            blocks = {}
+            for pk, proto in entries[0].items():
+                rows = [e[pk] for e in entries]
+                rows += [np.zeros_like(proto)] * (kpad - len(rows))
+                blocks[pk] = np.stack(rows)
+            self.stats["dispatches"] += 1
+            self.stats["swap_in_pages"] += len(pages)
+            self.cache = self.engine._scatter_blocks(
+                self.cache, jnp.asarray(pids), blocks)
+            # pin the written pools back to canonical placement so the
+            # round's fused dispatch doesn't retrace on a drifted layout
+            self._reshard()
 
     def _spill_pages(self, freed: list):
         """Dying-page exit: spill indexed pages to the host store (one
@@ -1323,18 +1410,18 @@ class ContinuousBatchingScheduler:
                 if pfx is not None and pfx not in self.host_swap:
                     spill.append((pid, pfx))
             if spill:
-                kpad = _next_pow2(len(spill))
-                pids = np.full((kpad,), self.trash_page, np.int32)
-                pids[:len(spill)] = [pid for pid, _ in spill]
-                self.stats["dispatches"] += 1
-                self.stats["host_syncs"] += 1
-                blocks = self.engine._gather_blocks(self.cache,
-                                                    jnp.asarray(pids))
-                blocks = {k: np.asarray(v) for k, v in blocks.items()}
-                for i, (_, pfx) in enumerate(spill):
-                    self.host_swap.put(pfx, {k: b[i]
-                                             for k, b in blocks.items()})
-                self.stats["swap_out_pages"] += len(spill)
+                with self.obs.span("swap_out", pages=len(spill)):
+                    kpad = _next_pow2(len(spill))
+                    pids = np.full((kpad,), self.trash_page, np.int32)
+                    pids[:len(spill)] = [pid for pid, _ in spill]
+                    self.stats["dispatches"] += 1
+                    blocks = self.engine._gather_blocks(self.cache,
+                                                        jnp.asarray(pids))
+                    blocks = self._block_on(blocks, "swap_out")
+                    for i, (_, pfx) in enumerate(spill):
+                        self.host_swap.put(pfx, {k: b[i]
+                                                 for k, b in blocks.items()})
+                    self.stats["swap_out_pages"] += len(spill)
         for pid in freed:
             self.prefix_index.drop(pid)
 
@@ -1417,36 +1504,40 @@ class ContinuousBatchingScheduler:
     def _harvest(self):
         """Collect lanes whose request left the active partition (pending
         chunked-prefill lanes are reserved, not finished)."""
-        self.stats["host_syncs"] += 1
-        finished = np.flatnonzero((self.lane_rid >= 0) & ~np.asarray(self.p)
-                                  & ~self._lane_pending)
-        if finished.size == 0:
-            return
-        out = np.asarray(self.out_buf[finished])
-        n_gen = np.asarray(self.n_gen[finished])
-        t = time.perf_counter()
-        freed: list = []
-        for j, lane in enumerate(finished):
-            rid = int(self.lane_rid[lane])
-            n = int(n_gen[j])
-            self.results[rid] = {"tokens": out[j, :n].copy(),
-                                 "n_generated": n,
-                                 "finished_at": self.now}
-            self.req_times[rid]["finished"] = t
-            self.lane_rid[lane] = -1
-            self._lane_stoch[lane] = False
+        with self.obs.span("harvest"):
+            p_h, out_all, ngen_all = self._block_on(
+                (self.p, self.out_buf, self.n_gen), "harvest")
+            finished = np.flatnonzero((self.lane_rid >= 0) & ~p_h
+                                      & ~self._lane_pending)
+            if finished.size == 0:
+                return
+            out = out_all[finished]
+            n_gen = ngen_all[finished]
+            t = time.perf_counter()
+            freed: list = []
+            for j, lane in enumerate(finished):
+                rid = int(self.lane_rid[lane])
+                n = int(n_gen[j])
+                self.results[rid] = {"tokens": out[j, :n].copy(),
+                                     "n_generated": n,
+                                     "finished_at": self.now}
+                self.req_times[rid]["finished"] = t
+                self.obs.request_end(rid, n_generated=n,
+                                     finished_at=self.now)
+                self.lane_rid[lane] = -1
+                self._lane_stoch[lane] = False
+                if self.page_size is not None:
+                    for pid in self.lane_pages.pop(int(lane)):
+                        if self.allocator.release(pid):
+                            freed.append(pid)
             if self.page_size is not None:
-                for pid in self.lane_pages.pop(int(lane)):
-                    if self.allocator.release(pid):
-                        freed.append(pid)
-        if self.page_size is not None:
-            if freed:
-                self._spill_pages(freed)
-            # retired lanes keep decoding architecturally until their slot is
-            # refilled: repoint their table rows at the trash page so the
-            # freed pages can be reused without interference
-            self.cache["page_table"] = self.cache["page_table"].at[
-                jnp.asarray(finished, jnp.int32)].set(self.trash_page)
+                if freed:
+                    self._spill_pages(freed)
+                # retired lanes keep decoding architecturally until their
+                # slot is refilled: repoint their table rows at the trash
+                # page so the freed pages can be reused without interference
+                self.cache["page_table"] = self.cache["page_table"].at[
+                    jnp.asarray(finished, jnp.int32)].set(self.trash_page)
 
     def _maybe_compact(self):
         """SVE ``compact`` over the lane vector: squeeze live lanes to the
@@ -1466,6 +1557,10 @@ class ContinuousBatchingScheduler:
         n_live = int(occupied.sum())
         if occupied[:n_live].all():
             return
+        with self.obs.span("compact", live=n_live):
+            self._compact(occupied)
+
+    def _compact(self, occupied):
         # the SVE compact permutation (partition.compact_perm) computed
         # host-side — a stable argsort of the inactive flag — so deciding to
         # compact never blocks on the device
