@@ -19,6 +19,14 @@ per-request TTFT/TPOT p50/p99, and ``--min-continuous-ratio`` gates the
 largest capacity's ratio in CI — per-round host dispatch overhead creeping
 back into the serve loop shows up as that ratio collapsing.
 
+``--chaos`` adds an OVERLOAD leg: priority bursts with deadlines and a
+bounded queue against a pool sized for half the lanes, under a deterministic
+``ChaosMonkey`` alloc-failure schedule.  It is a behavior gate, not a speed
+number: zero page leaks after drain, ``preemptions > 0`` (the starved
+high-priority arrivals actually preempted), and every request finishing as
+``done``/``preempted_resumed`` must serve tokens byte-identical to a calm
+twin on ample resources — preemption spill/resume is bit-exact.
+
 ``--tp-mesh DxM`` adds a tensor-parallel leg: the same trace served through
 a mesh-backed engine (lanes sharded over "data", KV-head pools and MLP over
 "model").  On the forced host-device CPU mesh this is a STRUCTURE check,
@@ -42,6 +50,7 @@ for the CI smoke job (deterministic, < 2 min).
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import os
 import time
@@ -55,7 +64,15 @@ from repro.dist import collectives as C
 from repro.launch.mesh import force_host_devices, make_mesh, parse_mesh
 from repro.models import ModelConfig, get_model
 from repro.obs import Obs, Tracer
-from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
+from repro.serve import (
+    ChaosConfig,
+    ChaosMonkey,
+    ContinuousBatchingScheduler,
+    FinishReason,
+    SamplingParams,
+    ServeEngine,
+    burst_trace,
+)
 
 CFG = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
            vocab_size=256, param_dtype="float32", compute_dtype="float32")
@@ -232,6 +249,63 @@ def bench_static(eng, trace, *, capacity, max_len):
             "tokens_per_s": toks / wall}
 
 
+def bench_overload(eng, reqs, *, capacity, max_len, page_size, pool_pages,
+                   max_queue=None, chaos=None, obs=None, trace_dir=None,
+                   leg="chaos"):
+    """Overload leg: a priority burst trace on a deliberately starved pool,
+    optionally under a deterministic :class:`ChaosMonkey`.  Returns the
+    per-leg record plus ``{rid: tokens}`` for the calm-twin identity gate.
+
+    Unlike the throughput legs this one measures BEHAVIOR, not speed: the
+    record carries the robustness counters (preemptions / shed / cancelled /
+    deadline_misses / resume_page_ins), a finish-reason census, injected
+    fault counts and ``page_leaks`` (allocator pages still live after
+    drain — the number the CI gate pins at zero)."""
+    if obs is None:
+        obs = Obs(tracer=Tracer()) if trace_dir else Obs()
+    sched = ContinuousBatchingScheduler(
+        eng, capacity=capacity, max_len=max_len, chunk=1,
+        compact_threshold=0.5, page_size=page_size, pool_pages=pool_pages,
+        fused=True, overlap=True, max_queue=max_queue, obs=obs)
+    monkey = ChaosMonkey(chaos).install(sched) if chaos else None
+    for r in reqs:
+        sched.submit(r["tokens"], arrival=r["arrival"],
+                     priority=r["priority"], deadline=r.get("deadline"))
+    t0 = time.perf_counter()
+    results = monkey.run(sched) if monkey else sched.run()
+    wall = time.perf_counter() - t0
+    reasons = collections.Counter(
+        r["finish_reason"].value for r in results.values())
+    toks = sum(r["n_generated"] for r in results.values())
+    rec = {
+        "capacity": capacity,
+        "pool_pages": pool_pages,
+        "max_queue": max_queue,
+        "requests": len(results),
+        "tokens": int(toks),
+        "wall_s": wall,
+        "tokens_per_s": toks / wall,
+        "page_leaks": int(sched.allocator.live_pages),
+        "finish_reasons": {k.value: int(reasons.get(k.value, 0))
+                           for k in FinishReason},
+    }
+    if monkey:
+        rec.update({
+            "chaos_seed": chaos.seed,
+            "chaos_alloc_failures": monkey.alloc_failures,
+            "chaos_cancels": monkey.cancels,
+            "chaos_corruptions": monkey.corruptions,
+        })
+    rec.update(obs.metrics.snapshot())
+    if trace_dir and obs.tracing:
+        os.makedirs(trace_dir, exist_ok=True)
+        rec["trace_events"] = obs.export(os.path.join(trace_dir,
+                                                      f"{leg}.json"))
+    tokens = {rid: (r["tokens"], r["finish_reason"])
+              for rid, r in results.items()}
+    return rec, tokens
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -293,6 +367,17 @@ def main(argv=None):
                          "count — sharding must not add host syncs")
     ap.add_argument("--psum", choices=C.PSUM_MODES, default="fast",
                     help="psum flavor for shard_map-level collectives")
+    ap.add_argument("--chaos", action="store_true",
+                    help="overload + fault-injection leg: a priority burst "
+                         "on a pool sized for HALF the lanes (preemption "
+                         "must fire) with deadlines, a bounded queue and a "
+                         "deterministic alloc-failure schedule; gates zero "
+                         "page leaks, preemptions > 0 and byte-identity of "
+                         "every finished request against a calm twin on "
+                         "ample resources")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="ChaosConfig seed: the injected fault schedule is "
+                         "a pure function of this (replayable)")
     ap.add_argument("--sampling", action="store_true",
                     help="add a stochastic leg (temperature=0.8, top_p=0.9, "
                          "per-request seed = rid): exercises the per-lane "
@@ -349,7 +434,7 @@ def main(argv=None):
               "psum_mode": args.psum,
               "continuous": [], "static": [], "paged": [], "paged_half": [],
               "quantized": [], "session": [], "sampled": [], "tp": [],
-              "traced": []}
+              "traced": [], "chaos": []}
 
     def _sampled_params(rid: int):
         # fixed per-request seed (the rid) => the stochastic leg is exactly
@@ -457,6 +542,60 @@ def main(argv=None):
                   f"{q['tokens_per_s']:8.1f} tok/s "
                   f"(p50/p99 {q['decode_step_p50_ms']:.1f}/"
                   f"{q['decode_step_p99_ms']:.1f} ms)")
+
+    if args.chaos:
+        # overload leg: bursts of prompts (every 4th at priority 5, every
+        # 5th with a tight deadline) against a pool sized for HALF the
+        # lanes and a bounded queue — shed, deadline misses and preemption
+        # all fire on this trace by construction.  The calm twin replays
+        # the SAME submissions (same rids) on ample pages with no queue
+        # bound or chaos; every request the chaos leg finishes as done /
+        # preempted_resumed must serve byte-identical tokens.
+        cap = capacities[-1]
+        per_lane = pages_needed(max_len, args.page_size)
+        n_chaos = max(n_requests, 12)
+        reqs = burst_trace(n_chaos, prompt_len=9, vocab=CFG["vocab_size"],
+                           burst=cap, gap=8.0, seed=args.seed,
+                           priority_of=lambda i: 5 if i % 4 == 3 else 0)
+        for i, r in enumerate(reqs):
+            if i % 5 == 4:
+                r["deadline"] = r["arrival"] + 4.0
+        # the whole trace is submitted up front (arrivals gate DUE-ness,
+        # not queue entry), so the queue bound must leave room for the
+        # later high-priority bursts to contend — bound it just under the
+        # trace length: the overflow sheds, the rest overloads
+        chaos_cfg = ChaosConfig(seed=args.chaos_seed, alloc_fail_rate=0.1)
+        kw = dict(capacity=cap, max_len=max_len, page_size=args.page_size)
+        bench_overload(eng, reqs, pool_pages=(cap // 2) * per_lane,
+                       max_queue=n_chaos - 2, chaos=chaos_cfg, **kw)  # warmup
+        ch, got = bench_overload(eng, reqs, pool_pages=(cap // 2) * per_lane,
+                                 max_queue=n_chaos - 2, chaos=chaos_cfg, **kw,
+                                 trace_dir=args.trace_dir,
+                                 leg=f"chaos_cap{cap}")
+        calm_reqs = [dict(r, deadline=None) for r in reqs]
+        _, calm = bench_overload(eng, calm_reqs, pool_pages=cap * per_lane,
+                                 **kw)
+        finished = {rid for rid, (_, why) in got.items()
+                    if why in (FinishReason.DONE,
+                               FinishReason.PREEMPTED_RESUMED)}
+        ch["tokens_identical_calm"] = all(
+            got[rid][0].tobytes() == calm[rid][0].tobytes()
+            for rid in finished)
+        record["chaos"].append(ch)
+        fr = ch["finish_reasons"]
+        print(f"chaos({n_chaos} reqs, burst={cap})  "
+              f"preempt {ch['preemptions']} shed {ch['shed']} "
+              f"deadline {ch['deadline_misses']} "
+              f"cancelled {ch['cancelled']}  "
+              f"alloc-faults {ch['chaos_alloc_failures']}  "
+              f"leaks {ch['page_leaks']}pg  "
+              f"done {fr['done']}+{fr['preempted_resumed']} resumed  "
+              f"identical to calm: {ch['tokens_identical_calm']}")
+        if (ch["page_leaks"] != 0 or ch["preemptions"] == 0
+                or not ch["tokens_identical_calm"]):
+            print("FAIL chaos leg: expected zero page leaks, "
+                  "preemptions > 0 and byte-identical finished tokens")
+            raise SystemExit(1)
 
     if args.session_users:
         # multi-turn SESSION leg: each user's turn t+1 prompt extends turn

@@ -17,7 +17,13 @@ from repro.configs import all_arch_names, get_config
 from repro.dist import collectives as C
 from repro.models import get_model
 from repro.obs import Obs, Tracer
-from repro.serve import ContinuousBatchingScheduler, SamplingParams, ServeEngine
+from repro.serve import (
+    ChaosConfig,
+    ChaosMonkey,
+    ContinuousBatchingScheduler,
+    SamplingParams,
+    ServeEngine,
+)
 
 from .mesh import force_host_devices, make_mesh, parse_mesh
 from .train import REDUCE
@@ -75,6 +81,34 @@ def main():
                          "allocates caches for (default: --prompt-len)")
     ap.add_argument("--static", action="store_true",
                     help="one-shot ServeEngine.generate instead of scheduler")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue: submits past this many "
+                         "queued requests are SHED (typed partial result) "
+                         "instead of queueing unboundedly")
+    ap.add_argument("--deadline-steps", type=float, default=None,
+                    help="per-request completion deadline, in decode steps "
+                         "after arrival: a request still decoding past it "
+                         "retires with its partial output "
+                         "(finish_reason='deadline')")
+    ap.add_argument("--priority-every", type=int, default=0,
+                    help="mark every Nth request priority 5 (0 disables): "
+                         "under page/lane starvation high-priority arrivals "
+                         "preempt a lower-priority lane and the victim later "
+                         "resumes bit-exactly")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="install a deterministic ChaosMonkey with this "
+                         "seed (requires --chaos-* rates below to do "
+                         "anything)")
+    ap.add_argument("--chaos-alloc-fail-rate", type=float, default=0.0,
+                    help="probability each page allocation spuriously fails "
+                         "(models transient pool pressure)")
+    ap.add_argument("--chaos-cancel-rate", type=float, default=0.0,
+                    help="per-round probability each live request is "
+                         "cancelled (exercises every cancel branch)")
+    ap.add_argument("--chaos-swap-corrupt-rate", type=float, default=0.0,
+                    help="probability a host-swap insert is byte-flipped "
+                         "after its CRC — the next hit must degrade to a "
+                         "cold prefill, never serve corrupt K/V")
     ap.add_argument("--temperature", type=float, default=None,
                     help="enable per-request stochastic sampling at this "
                          "temperature (default: greedy argmax)")
@@ -197,7 +231,14 @@ def main():
         host_swap_pages=args.host_swap_pages,
         prefill_chunk=args.prefill_chunk,
         fused=not args.no_fused, overlap=args.overlap, src_len=src_len,
-        obs=obs)
+        max_queue=args.max_queue, obs=obs)
+    monkey = None
+    if args.chaos_seed is not None:
+        monkey = ChaosMonkey(ChaosConfig(
+            seed=args.chaos_seed,
+            alloc_fail_rate=args.chaos_alloc_fail_rate,
+            cancel_rate=args.chaos_cancel_rate,
+            swap_corrupt_rate=args.chaos_swap_corrupt_rate)).install(sched)
     rid_len = {}
     for i in range(args.requests):
         plen = int(rng.randint(4, args.prompt_len + 1))
@@ -206,13 +247,19 @@ def main():
             sl = int(rng.randint(2, src_len + 1))
             extras = {"src_emb": rng.randn(sl, cfg.d_model)
                       .astype(np.float32)}
+        prio = (5 if args.priority_every and i % args.priority_every == 0
+                else 0)
         rid = sched.submit(rng.randint(1, cfg.vocab_size, plen),
-                           sampling=_sampling(i), extras=extras)
+                           sampling=_sampling(i), extras=extras,
+                           priority=prio,
+                           deadline=(args.deadline_steps
+                                     if args.deadline_steps else None))
         rid_len[rid] = plen
-    results = sched.run()
+    results = monkey.run(sched) if monkey else sched.run()
     for rid in sorted(results):
         r = results[rid]
-        print(f"req{rid} len={rid_len[rid]:2d} -> "
+        print(f"req{rid} len={rid_len[rid]:2d} "
+              f"[{r['finish_reason'].value}] -> "
               f"{r['tokens'].tolist()}")
     occ = sched.stats["occupancy_trace"]
     print(f"[scheduler] rounds={sched.stats['steps']} "
@@ -222,6 +269,17 @@ def main():
           f"mean occupancy={sum(occ) / max(len(occ), 1):.2f}"
           + (f"  prefill chunks={sched.stats['prefill_chunks']}"
              if args.prefill_chunk else ""))
+    st = sched.stats
+    if (st["preemptions"] or st["cancelled"] or st["shed"]
+            or st["deadline_misses"] or monkey):
+        print(f"[robustness] preemptions={st['preemptions']} "
+              f"(pages back in={st['resume_page_ins']})  "
+              f"cancelled={st['cancelled']}  shed={st['shed']}  "
+              f"deadline misses={st['deadline_misses']}"
+              + (f"  [chaos seed={args.chaos_seed}: "
+                 f"alloc fails={monkey.alloc_failures} "
+                 f"cancels={monkey.cancels} "
+                 f"corruptions={monkey.corruptions}]" if monkey else ""))
     if args.page_size is not None:
         pocc = sched.stats["page_occupancy_trace"]
         print(f"[paged] pool={sched.pool_pages} pages "
@@ -237,7 +295,9 @@ def main():
                   f"({sched.stats['session_hit_tokens']} tokens skipped)  "
                   f"out={sched.stats['swap_out_pages']} "
                   f"in={sched.stats['swap_in_pages']} pages  "
-                  f"store={len(sched.host_swap)}/{args.host_swap_pages}")
+                  f"store={len(sched.host_swap)}/{args.host_swap_pages}  "
+                  f"checksum failures="
+                  f"{sched.stats['swap_checksum_failures']}")
     _finish_obs(args, obs)
 
 

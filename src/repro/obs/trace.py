@@ -9,9 +9,12 @@ One :class:`Tracer` records a serve run's timeline as two processes:
   docs/ARCHITECTURE.md §1.  Counter tracks (``occupancy``,
   ``pool_occupancy``) ride alongside as ``ph: "C"`` events.
 * pid 2, "requests" — one lifecycle track per request (tid = rid): a
-  ``req<rid>`` span opened at submit and closed at harvest, with instant
-  events for ``admitted`` / ``first_token`` and page/prefix/session
-  annotations in ``args``.
+  ``req<rid>`` span opened at submit and closed at harvest (or at any other
+  typed finish — cancel, deadline, shed), with instant events for
+  ``admitted`` / ``first_token`` and the robustness arcs ``cancelled`` /
+  ``preempted`` / ``resumed`` / ``deadline`` / ``shed``, plus
+  page/prefix/session annotations in ``args``.  Lifecycle instants always
+  land INSIDE the request's open span — ``validate_trace`` pins that.
 
 Timestamps are host ``perf_counter_ns`` microseconds relative to the
 tracer's birth; everything recorded is a value the serve loop already
@@ -159,8 +162,11 @@ def validate_trace(events: list) -> list:
 
     Pinned properties (the schema subset Perfetto relies on): every B has a
     matching same-track E (proper nesting, all spans closed), per-track
-    timestamps are monotonically non-decreasing, and E names — when present
-    — match their B.  Metadata (``ph: "M"``) events are exempt.
+    timestamps are monotonically non-decreasing, E names — when present —
+    match their B, and request-lifecycle instants (pid 2) fall inside their
+    request's open span — an ``admitted``/``cancelled``/``preempted`` landing
+    on a closed track means the scheduler finished a request twice.
+    Metadata (``ph: "M"``) events are exempt.
     """
     errors: list = []
     stacks: dict = {}
@@ -177,6 +183,11 @@ def validate_trace(events: list) -> list:
         if ts < last_ts.get(key, float("-inf")):
             errors.append(f"event {i}: ts {ts} not monotonic on track {key}")
         last_ts[key] = ts
+        if ph == "i" and ev.get("pid") == PID_REQUESTS \
+                and not stacks.get(key):
+            errors.append(f"event {i}: lifecycle instant "
+                          f"{ev.get('name')!r} outside any open request "
+                          f"span on track {key}")
         if ph == "B":
             stacks.setdefault(key, []).append((i, ev.get("name")))
         elif ph == "E":

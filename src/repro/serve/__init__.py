@@ -1,11 +1,15 @@
 from repro.sample import SamplingParams  # noqa: F401  (re-export: serve API)
 
+from .chaos import ChaosConfig, ChaosMonkey, burst_trace  # noqa: F401
 from .engine import ServeEngine  # noqa: F401
 from .scheduler import (  # noqa: F401
     ContinuousBatchingScheduler,
+    FinishReason,
     HostSwapStore,
     PageAllocator,
     PrefixIndex,
+    PreemptedState,
     Request,
+    RequestRejected,
 )
 from .speculative import speculative_decode  # noqa: F401

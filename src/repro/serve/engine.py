@@ -150,6 +150,11 @@ class ServeEngine:
         # scheduler pads the page-id vectors to pow2 buckets.
         self._gather_blocks = jax.jit(self._gather_blocks_impl)
         self._scatter_blocks = jax.jit(self._scatter_blocks_impl)
+        # preemption lane movers: one-dispatch gather of a lane's dense
+        # carries + decode rows (spill half) and the splice that puts them
+        # back (resume half) — the scheduler's bit-exact preempt/resume path
+        self._spill_lane = jax.jit(self._spill_lane_impl)
+        self._resume_lane = jax.jit(self._resume_lane_impl)
         if self.mesh is not None:
             # commit params to their TP placement and trace every entry
             # point under the ambient serve rules so the model's logical-
@@ -157,7 +162,8 @@ class ServeEngine:
             self.params = DS.shard_params(self.model, self.cfg, self.params,
                                           self.mesh)
             for name in ("_prefill", "_decode_chunk", "_decode_chunk_serve",
-                         "_fused_step", "_gather_blocks", "_scatter_blocks"):
+                         "_fused_step", "_gather_blocks", "_scatter_blocks",
+                         "_spill_lane", "_resume_lane"):
                 setattr(self, name, self._with_mesh(getattr(self, name)))
         self._warned_gather_fallback = False
 
@@ -415,6 +421,48 @@ class ServeEngine:
                     cache[pk] = PG.scatter_block(cache[pk], pids, blocks[pk],
                                                  n_lead=len(lead))
         return cache
+
+    # ------------------------------------------------------------------
+    # preemption lane movers (the scheduler's bit-exact preempt/resume)
+    # ------------------------------------------------------------------
+
+    def _spill_lane_impl(self, cache, out_buf, tok, n_gen, budget, sstate,
+                         lane):
+        """Gather ONE lane's host-spillable state in a single dispatch: its
+        dense per-lane cache carries (every key with a declared lane axis —
+        page pools and the page table are excluded; their content moves
+        through ``_gather_blocks``), its decode rows (out_buf/tok/n_gen/
+        budget) and its sampler-state row.  Together with the lane's page
+        blocks this is the complete request state: splicing it back resumes
+        the token stream byte-exactly (the per-lane PRNG chain position is
+        the committed token count, which rides ``n_gen``)."""
+        lane = jnp.asarray(lane, jnp.int32)
+        axes = self.model.cache_batch_axes(self.cfg)
+        lc = gather_lanes(self.cfg, cache, lane)
+        dense = {k: v for k, v in lc.items() if k in axes}
+        row = {"out": out_buf[lane], "tok": tok[lane],
+               "ngen": n_gen[lane], "budget": budget[lane]}
+        return dense, row, S.gather_lanes(sstate, lane)
+
+    def _resume_lane_impl(self, cache, out_buf, tok, p, n_gen, budget, sstate,
+                          lane, dense, row, srow, table_row):
+        """Splice a spilled lane back (the resume half of preemption): the
+        dense carries slot_update into the lane (pool keys absent from
+        ``dense`` pass through untouched), the rebuilt page-table row is
+        installed when paged, and the decode/sampler rows are restored
+        exactly as spilled — the lane continues as if never interrupted."""
+        lane = jnp.asarray(lane, jnp.int32)
+        cache = slot_update(self.cfg, cache, lane, dense)
+        if table_row is not None:
+            cache = dict(cache)
+            cache["page_table"] = cache["page_table"].at[lane].set(table_row)
+        sstate = S.slot_update(sstate, lane, srow)
+        out_buf = out_buf.at[lane].set(row["out"])
+        tok = tok.at[lane].set(row["tok"])
+        n_gen = n_gen.at[lane].set(row["ngen"])
+        budget = budget.at[lane].set(row["budget"])
+        p = p.at[lane].set(True)
+        return cache, out_buf, tok, p, n_gen, budget, sstate
 
     def _splice_admission(self, cache, out_buf, tok, p, n_gen, budget, sstate,
                           lanes, first_tok, sub_cache, sub_state, budgets,

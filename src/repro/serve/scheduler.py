@@ -54,7 +54,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import time
+import zlib
 from typing import Optional
 
 import jax
@@ -84,7 +86,33 @@ _STAT_COUNTERS = (
     ("dispatches", None), ("host_syncs", None), ("swap_out_pages", None),
     ("swap_in_pages", None), ("session_hits", None),
     ("session_hit_tokens", None),
+    # request-lifecycle robustness counters (deadlines / cancellation /
+    # preemption / shedding / swap integrity)
+    ("preemptions", None), ("shed", None), ("cancelled", None),
+    ("deadline_misses", None), ("resume_page_ins", None),
+    ("swap_checksum_failures", None),
 )
+
+
+class FinishReason(str, enum.Enum):
+    """Why a request's result is what it is.  Every entry in ``run()``'s
+    results carries one under ``"finish_reason"``; the str values are what
+    lands in bench JSON / logs.  ``PREEMPTED_RESUMED`` marks a request that
+    finished normally but was preempted (and bit-exactly resumed) at least
+    once along the way — its tokens are still byte-identical to an
+    uninterrupted run."""
+    DONE = "done"
+    CANCELLED = "cancelled"
+    DEADLINE = "deadline"
+    SHED = "shed"
+    PREEMPTED_RESUMED = "preempted_resumed"
+
+
+class RequestRejected(ValueError):
+    """Typed rejection raised by ``submit`` for a request that could NEVER
+    be admitted (prompt longer than the lane cache, or a worst-case page
+    demand the pool cannot cover even when empty) — fail at the front door
+    instead of queueing a request that waits forever."""
 
 
 def _next_pow2(n: int) -> int:
@@ -140,6 +168,15 @@ class PageAllocator:
         return False
 
 
+def _entry_crc(entry: dict) -> int:
+    """Content checksum of one swap-store entry (all pool blocks, key-sorted
+    so the digest is layout-stable)."""
+    crc = 0
+    for k in sorted(entry):
+        crc = zlib.crc32(np.ascontiguousarray(entry[k]).tobytes(), crc)
+    return crc
+
+
 class HostSwapStore:
     """Host-side LRU store of evicted prefix pages (the swap tier).
 
@@ -151,6 +188,12 @@ class HostSwapStore:
     (Hkv, ps[, D]))}`` — quantized pools store narrow bytes + scales, so
     page-in is bit-exact.  Capacity is counted in PAGES; insertion past
     capacity evicts least-recently-used entries.
+
+    Every entry carries a CRC taken at ``put`` time and verified at ``get``:
+    a corrupted entry (host memory fault, or the chaos harness flipping
+    bytes) is dropped and ``get`` returns None, so the planner's swap-chain
+    walk simply stops extending there and the request cold-prefills the
+    rest — degraded latency, NEVER wrong tokens.
     """
 
     def __init__(self, max_pages: int):
@@ -158,7 +201,9 @@ class HostSwapStore:
             raise ValueError(f"host_swap_pages must be >= 1, got {max_pages}")
         self.max_pages = max_pages
         self._store: collections.OrderedDict = collections.OrderedDict()
+        self._crc: dict = {}
         self.evictions = 0
+        self.checksum_failures = 0
 
     def __len__(self):
         return len(self._store)
@@ -167,11 +212,18 @@ class HostSwapStore:
         return key in self._store
 
     def get(self, key: bytes):
-        """The entry for ``key`` (refreshed to most-recently-used), or
-        None."""
+        """The entry for ``key`` (refreshed to most-recently-used), or None.
+        An entry whose content no longer matches its put-time CRC is deleted
+        and reported as None (counted in ``checksum_failures``)."""
         entry = self._store.get(key)
-        if entry is not None:
-            self._store.move_to_end(key)
+        if entry is None:
+            return None
+        if _entry_crc(entry) != self._crc[key]:
+            del self._store[key]
+            del self._crc[key]
+            self.checksum_failures += 1
+            return None
+        self._store.move_to_end(key)
         return entry
 
     def put(self, key: bytes, entry: dict):
@@ -181,8 +233,10 @@ class HostSwapStore:
             self._store.move_to_end(key)
             return
         self._store[key] = entry
+        self._crc[key] = _entry_crc(entry)
         while len(self._store) > self.max_pages:
-            self._store.popitem(last=False)
+            k, _ = self._store.popitem(last=False)
+            self._crc.pop(k, None)
             self.evictions += 1
 
 
@@ -312,13 +366,41 @@ class _PartStep:
 class Request:
     """One generation request.  ``arrival`` is in scheduler decode-step units
     (0 = available immediately); the scheduler never admits a request before
-    its arrival time, which is what the Poisson serving benchmark drives."""
+    its arrival time, which is what the Poisson serving benchmark drives.
+    ``priority`` orders admission (higher first; FIFO within a level) and
+    arms preemption: a page-starved higher-priority request may evict a
+    strictly-lower-priority resident lane.  ``deadline`` / ``ttft_deadline``
+    are absolute decode-step timestamps (same clock as ``arrival``) by which
+    the request must finish / produce its first token — infeasible requests
+    are SHED at admission time, resident ones past ``deadline`` retire with
+    partial output."""
     rid: int
     tokens: np.ndarray                      # (S,) prompt token ids
     max_new_tokens: Optional[int] = None    # default: engine budget
     arrival: float = 0.0
     extras: Optional[dict] = None           # modality extras (cross_emb, ...)
     sampling: Optional[S.SamplingParams] = None  # default: engine default
+    priority: int = 0
+    deadline: Optional[float] = None        # absolute finish deadline (steps)
+    ttft_deadline: Optional[float] = None   # absolute first-token deadline
+
+
+@dataclasses.dataclass
+class PreemptedState:
+    """Complete host-side state of a preempted mid-decode request: its page
+    blocks (spilled through the same batched gather the host-swap tier
+    uses), dense lane carries, decode rows and sampler-state row.  Resuming
+    splices everything back bit-exactly — the per-lane PRNG chain position
+    is the committed token count, so the resumed stream continues as if the
+    preemption never happened."""
+    req: Request
+    dense: dict                             # per-lane cache carries (host)
+    blocks: Optional[dict]                  # page-chain pool blocks (host)
+    n_pages: int                            # pages to re-allocate at resume
+    row: dict                               # out/tok/ngen/budget rows (host)
+    srow: dict                              # sampler-state row (host)
+    stoch: bool                             # lane sampled stochastically
+    order: int                              # preemption sequence number
 
 
 class ContinuousBatchingScheduler:
@@ -379,6 +461,10 @@ class ContinuousBatchingScheduler:
     src_len: encoder memory length for encdec serving (every request's
         ``src_emb`` extra is zero-padded to this length at submit; required
         for the encdec family, ignored otherwise).
+    max_queue: bounded admission queue — a ``submit`` past this many queued
+        requests is SHED immediately (recorded result with
+        ``finish_reason="shed"``) instead of queueing unboundedly under
+        overload.  None = unbounded (the default).
     obs: an ``repro.obs.Obs`` handle — its metrics registry backs ``stats``
         and, when it carries a tracer, the round/request timeline is
         recorded at the host-side seams (never inside jitted code, never
@@ -397,7 +483,10 @@ class ContinuousBatchingScheduler:
                  prefill_chunk: Optional[int] = None,
                  fused: bool = True, overlap: bool = False,
                  src_len: Optional[int] = None,
+                 max_queue: Optional[int] = None,
                  obs: Optional[Obs] = None):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if engine.cfg.family == "encdec" and src_len is None:
             raise ValueError(
                 "encdec serving needs src_len= (the padded encoder memory "
@@ -435,6 +524,15 @@ class ContinuousBatchingScheduler:
         self.results: dict[int, dict] = {}
         self._next_rid = 0
         self.now = 0.0                       # decode-step clock
+        self.max_queue = max_queue
+        # request-lifecycle control plane: live requests by rid (queued,
+        # pending, resident or preempted), spilled preempted state awaiting
+        # re-admission, and how often each rid was preempted (a finished
+        # request with a nonzero count reports PREEMPTED_RESUMED)
+        self._live_req: dict[int, Request] = {}
+        self._preempted: list[PreemptedState] = []
+        self._rid_preempts: dict[int, int] = {}
+        self._preempt_seq = 0
 
         b = capacity
         self.lane_rid = np.full((b,), -1, np.int64)   # -1 = free lane
@@ -500,6 +598,12 @@ class ContinuousBatchingScheduler:
             reg.counter(name, key=key)
         reg.series("occupancy_trace", key="mean_occupancy")
         reg.series("page_occupancy_trace", key="mean_page_occupancy")
+        # queue-wait-to-first-token in DECODE STEPS (observed at admission:
+        # the first token commits in the admitting dispatch, so TTFT-in-steps
+        # == now - arrival).  The streaming p50 is the deadline-feasibility
+        # estimate admission shedding uses.
+        self._ttft_hist = reg.histogram("ttft_steps", unit="steps",
+                                        percentiles=(50,))
         self.stats = reg.stats_view()
         # async-overlap state: the in-flight round's result handles (with
         # host copies prefetched) plus the lane view they were dispatched
@@ -563,7 +667,9 @@ class ContinuousBatchingScheduler:
 
     def submit(self, tokens, *, max_new_tokens: Optional[int] = None,
                arrival: float = 0.0, extras: Optional[dict] = None,
-               sampling: Optional[S.SamplingParams] = None) -> int:
+               sampling: Optional[S.SamplingParams] = None,
+               priority: int = 0, deadline: Optional[float] = None,
+               ttft_deadline: Optional[float] = None) -> int:
         """Queue a request; returns its rid (key into ``run()``'s results).
 
         ``tokens`` is the 1-D int prompt (<= ``max_len``).  ``arrival`` is
@@ -574,25 +680,133 @@ class ContinuousBatchingScheduler:
         request's own decoding distribution (None: engine default/greedy) —
         lanes with different distributions coexist in one burst.  ``extras``
         holds per-request side inputs (encdec: ``src_emb``/``src_lens``).
+        ``priority`` orders admission and arms preemption (see ``Request``);
+        ``deadline`` / ``ttft_deadline`` are absolute decode-step timestamps
+        the request must finish / first-token by — infeasible ones are shed.
         Submission never touches the device; planning happens at admission.
+
+        Raises :class:`RequestRejected` for a request that could NEVER be
+        admitted (over-long prompt, or a worst-case page demand above the
+        whole pool) — fail fast instead of queueing it forever.  A request
+        past a full ``max_queue`` bound is not an error: it is recorded
+        immediately as a ``shed`` result and its rid returned.
         """
         tokens = np.asarray(tokens, np.int32)
         if tokens.ndim != 1:
             raise ValueError(f"prompt must be 1-D, got shape {tokens.shape}")
         if len(tokens) > self.max_len:
-            raise ValueError(
+            raise RequestRejected(
                 f"prompt length {len(tokens)} exceeds lane capacity "
                 f"max_len={self.max_len}")
+        if self.page_size is not None:
+            own = (self.engine.max_new_tokens if max_new_tokens is None
+                   else min(max_new_tokens, self.engine.max_new_tokens))
+            n_total = PG.pages_needed(
+                min(len(tokens) + own, self.max_len), self.page_size)
+            # maximal prefix sharing still leaves a non-empty suffix, so at
+            # best (plen-1)//page_size pages come from donors — below that
+            # the pool can never cover the request, even empty
+            max_shared = ((len(tokens) - 1) // self.page_size
+                          if self.prefix_sharing and not extras else 0)
+            if n_total - max_shared > self.pool_pages:
+                raise RequestRejected(
+                    f"request needs {n_total - max_shared} fresh pages "
+                    f"worst-case but the pool has only {self.pool_pages}")
         if self.engine.cfg.family == "encdec":
             extras = self._pad_encdec_extras(extras)
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, tokens, max_new_tokens, arrival,
-                                  extras, sampling))
+        req = Request(rid, tokens, max_new_tokens, arrival, extras, sampling,
+                      priority, deadline, ttft_deadline)
         self.req_times[rid] = {"submitted": time.perf_counter()}
         self.obs.request_begin(rid, prompt_len=len(tokens),
                                arrival=float(arrival))
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._shed(req)                 # bounded queue: overload -> shed
+            return rid
+        self._live_req[rid] = req
+        self.queue.append(req)
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live request wherever it is in its lifecycle; returns
+        True when it was cancelled, False when it had already finished (its
+        result stands) or was never submitted.
+
+        A queued / preempted / chunk-prefilling request is dropped host-side
+        (lane + page reservations released); a RESIDENT request retires
+        mid-flight through the same trash-page path harvest uses — its
+        partial output is recorded with ``finish_reason="cancelled"``.  The
+        overlap stash is flushed first so an in-flight round that actually
+        finished the request wins over the cancel."""
+        if rid in self.results:
+            return False
+        if any(r.rid == rid for r in self.queue):
+            self.queue = collections.deque(
+                r for r in self.queue if r.rid != rid)
+            self._finish_cancel(rid, np.zeros((0,), np.int32), 0)
+            return True
+        for i, ps in enumerate(self._preempted):
+            if ps.req.rid == rid:
+                del self._preempted[i]
+                n = int(ps.row["ngen"][0])
+                self._finish_cancel(rid, ps.row["out"][0, :n].copy(), n)
+                return True
+        for i, part in enumerate(self._partials):
+            if part.req.rid == rid:
+                del self._partials[i]
+                lane = part.lane
+                self.lane_rid[lane] = -1
+                self._lane_pending[lane] = False
+                if part.plan is not None:
+                    freed = [pid for pid in (part.plan.shared
+                                             + part.plan.swapped
+                                             + part.plan.new)
+                             if self.allocator.release(pid)]
+                    if freed:
+                        self._spill_pages(freed)
+                self._finish_cancel(rid, np.zeros((0,), np.int32), 0)
+                return True
+        if (self.lane_rid == rid).any():
+            self._flush_stash()
+            if rid in self.results:         # finished in the flushed round
+                return False
+            lanes = np.flatnonzero(self.lane_rid == rid)
+            if lanes.size == 0:
+                return False
+            self.stats["cancelled"] += 1
+            self.obs.request_event(rid, "cancelled")
+            self._retire_lane(int(lanes[0]), FinishReason.CANCELLED)
+            return True
+        return False
+
+    def _finish_cancel(self, rid: int, tokens, n: int):
+        self.stats["cancelled"] += 1
+        self.obs.request_event(rid, "cancelled")
+        self._record_result(rid, tokens, n, FinishReason.CANCELLED)
+
+    def _shed(self, req: Request):
+        """Refuse a request the system cannot serve (full queue or an
+        infeasible deadline): record an immediate empty ``shed`` result so
+        the caller learns NOW instead of after a futile wait."""
+        self.stats["shed"] += 1
+        self.obs.request_event(req.rid, "shed")
+        self._record_result(req.rid, np.zeros((0,), np.int32), 0,
+                            FinishReason.SHED)
+
+    def _record_result(self, rid: int, tokens, n: int,
+                       reason: "FinishReason"):
+        """Single exit point for every non-harvest finish (cancel, deadline,
+        shed, drain): records the typed result, closes the request's trace
+        track and drops it from the live set."""
+        self.results[rid] = {"tokens": np.asarray(tokens, np.int32),
+                             "n_generated": int(n),
+                             "finished_at": self.now,
+                             "finish_reason": reason}
+        self.req_times.setdefault(rid, {})["finished"] = time.perf_counter()
+        self._live_req.pop(rid, None)
+        self.obs.request_end(rid, n_generated=int(n), finished_at=self.now,
+                             reason=reason.value)
 
     def _pad_encdec_extras(self, extras: Optional[dict]) -> dict:
         """Zero-pad a request's encoder memory to the scheduler-wide
@@ -628,6 +842,9 @@ class ContinuousBatchingScheduler:
             return self._step_fused()
         with self.obs.span("round", round=self.stats["steps"]):
             self._maybe_compact()
+            self._sweep_deadlines()
+            self._maybe_preempt()
+            self._try_resume()
             self._advance_partials()
             self._admit()
             self._reshard()
@@ -677,6 +894,9 @@ class ContinuousBatchingScheduler:
         obs = self.obs
         with obs.span("round", round=self.stats["steps"]):
             self._maybe_compact()
+            self._sweep_deadlines()
+            self._maybe_preempt()
+            self._try_resume()
             self._reshard()
             with obs.span("plan"):
                 part_steps = self._plan_partial_steps()
@@ -819,6 +1039,8 @@ class ContinuousBatchingScheduler:
             base[st["admitted"]] = 1
             self.stats["active_lane_steps"] += int(ngen.sum() - base.sum())
             self._host_ngen = ngen.astype(np.int64)
+            for lane, v in st.get("resumed_fix", {}).items():
+                self._host_ngen[lane] = v
             self.now += steps
             finished = np.flatnonzero((st["lane_rid"] >= 0) & ~p
                                       & ~st["pending"])
@@ -830,12 +1052,18 @@ class ContinuousBatchingScheduler:
                 lane = int(lane)
                 rid = int(st["lane_rid"][lane])
                 n = int(ngen[lane])
+                reason = (FinishReason.PREEMPTED_RESUMED
+                          if self._rid_preempts.get(rid)
+                          else FinishReason.DONE)
                 self.results[rid] = {"tokens": out[lane, :n].copy(),
                                      "n_generated": n,
-                                     "finished_at": self.now}
+                                     "finished_at": self.now,
+                                     "finish_reason": reason}
                 self.req_times[rid]["finished"] = t
+                self._live_req.pop(rid, None)
                 self.obs.request_end(rid, n_generated=n,
-                                     finished_at=self.now)
+                                     finished_at=self.now,
+                                     reason=reason.value)
                 self.lane_rid[lane] = -1
                 self._lane_stoch[lane] = False
                 if self.page_size is not None:
@@ -859,11 +1087,332 @@ class ContinuousBatchingScheduler:
         ``run`` is resumable: more ``submit``s after it returns and a second
         ``run()`` continue on the same lanes/pages/prefix state — with the
         host-swap tier on, later calls hit prefixes earlier calls retired.
+
+        ``run`` never strands state: a ``KeyboardInterrupt`` drains the loop
+        (stash flushed, every live request recorded with partial output and
+        ``finish_reason="cancelled"``, allocator leak-free) and RETURNS the
+        partial results; any other exception drains the same way and then
+        re-raises — the scheduler is consistent either way.
         """
-        while self.queue or (self.lane_rid >= 0).any():
-            self.step()
-        self._flush_stash()
+        try:
+            while (self.queue or self._preempted
+                   or (self.lane_rid >= 0).any()):
+                self.step()
+        except KeyboardInterrupt:
+            self._abort_drain()
+        except BaseException:
+            self._abort_drain()
+            raise
+        finally:
+            self._flush_stash()
         return self.results
+
+    def _abort_drain(self):
+        """Tear the serve loop down to a consistent idle state: flush the
+        in-flight stash, record partial ``cancelled`` results for every live
+        request (resident, chunk-prefilling, preempted or queued) and free
+        their lanes/pages.  Asserts the allocator ends leak-free — resident
+        == 0 after a full drain, so ``live_pages`` must be 0 too."""
+        try:
+            self._flush_stash()
+        except Exception:           # a broken device must not block drain
+            self._stash = None
+        for part in list(self._partials):
+            self.cancel(part.req.rid)
+        for lane in np.flatnonzero(self.lane_rid >= 0):
+            rid = int(self.lane_rid[int(lane)])
+            self.stats["cancelled"] += 1
+            self.obs.request_event(rid, "cancelled")
+            self._retire_lane(int(lane), FinishReason.CANCELLED)
+        for ps in list(self._preempted):
+            self.cancel(ps.req.rid)
+        for req in list(self.queue):
+            self.cancel(req.rid)
+        if self.page_size is not None:
+            assert self.allocator.live_pages == 0, (
+                f"page leak after drain: {self.allocator.live_pages} "
+                "pages still held with no resident lane")
+
+    # ------------------------------------------------------------------
+    # request-lifecycle control plane: deadlines, preemption, resume
+    # ------------------------------------------------------------------
+
+    def _retire_lane(self, lane: int, reason: "FinishReason"):
+        """Retire a RESIDENT lane mid-flight (cancel/deadline/drain): read
+        its partial output, record the typed result and free the lane + its
+        page chain through the same trash-page path harvest uses.  The
+        caller must have flushed the stash first — retiring under an
+        unharvested snapshot would double-harvest the lane."""
+        rid = int(self.lane_rid[lane])
+        out, ngen = self._block_on((self.out_buf[lane], self.n_gen[lane]),
+                                   "retire")
+        n = int(ngen)
+        self._record_result(rid, out[:n].copy(), n, reason)
+        self.p = self.p.at[lane].set(False)
+        self.lane_rid[lane] = -1
+        self._lane_stoch[lane] = False
+        # keep the host n_gen mirror at the DEVICE value (stale rows of free
+        # lanes are part of the active_lane_steps accounting contract)
+        self._host_ngen[lane] = n
+        if self.page_size is not None:
+            freed = [pid for pid in self.lane_pages.pop(lane, [])
+                     if self.allocator.release(pid)]
+            if freed:
+                self._spill_pages(freed)
+            self.cache["page_table"] = self.cache["page_table"].at[
+                lane].set(self.trash_page)
+        self._reshard()
+
+    def _sweep_deadlines(self):
+        """Retire resident lanes whose finish deadline has passed (partial
+        output, ``finish_reason="deadline"``).  The cheap pre-check keeps
+        the overlap loop's one-sync-per-round property: the stash is only
+        flushed when some lane is actually over deadline."""
+        over = [int(l) for l in np.flatnonzero(self.lane_rid >= 0)
+                if not self._lane_pending[int(l)]
+                and (r := self._live_req.get(int(self.lane_rid[int(l)])))
+                is not None and r.deadline is not None
+                and self.now > r.deadline]
+        if not over:
+            return
+        self._flush_stash()
+        for lane in over:
+            rid = int(self.lane_rid[lane])
+            req = self._live_req.get(rid)
+            if rid < 0 or req is None:      # finished in the flushed round
+                continue
+            self.stats["deadline_misses"] += 1
+            self.obs.request_event(rid, "deadline")
+            self._retire_lane(lane, FinishReason.DEADLINE)
+
+    def _est_ttft(self) -> float:
+        """Estimated queue-wait-to-first-token in decode steps: the p50 of
+        the ``ttft_steps`` histogram (0 before any admission — optimistic
+        until the system has seen its own latency)."""
+        h = self._ttft_hist
+        return float(h.percentile(50)) if h.count else 0.0
+
+    def _shed_infeasible(self, req: Request) -> bool:
+        """True when the request can no longer meet its deadlines: its
+        predicted first-token time — now, or its arrival plus the observed
+        p50 queue wait, whichever is later — is past ``ttft_deadline`` or
+        ``deadline``.  Pure estimate, no device touch."""
+        if req.ttft_deadline is None and req.deadline is None:
+            return False
+        first = max(self.now, req.arrival + self._est_ttft())
+        if req.ttft_deadline is not None and first > req.ttft_deadline:
+            return True
+        return req.deadline is not None and first > req.deadline
+
+    def _fresh_pages_needed(self, req: Request) -> int:
+        """Pages ``_plan_pages`` would freshly allocate for this request —
+        the same lookup, side-effect-free (no refcounts, no stats).  Drives
+        the preemption trigger: preempt only when the top-priority waiter
+        cannot get this many pages from the free list."""
+        if self.page_size is None:
+            return 0
+        ps = self.page_size
+        plen = len(req.tokens)
+        shared: list = []
+        if self.prefix_sharing and not req.extras:
+            shared = self.prefix_index.lookup(req.tokens, ps)
+            while shared and len(shared) * ps >= plen:
+                shared.pop()
+        budget = self._budget_for(req, plen)
+        return (PG.pages_needed(min(plen + budget, self.max_len), ps)
+                - len(shared))
+
+    def _maybe_preempt(self):
+        """Priority preemption trigger, run once per round before planning:
+        while the highest-priority waiting request (queued-and-due or
+        already preempted) is starved — no free lane, or fewer free pages
+        than it needs — evict the lowest-priority resident lane whose
+        priority is STRICTLY below it.  Equal priorities never preempt each
+        other, so all-default-priority traffic behaves exactly as before."""
+        for _ in range(self.capacity):
+            best_q = None
+            for r in self.queue:
+                if self._due(r) and (best_q is None
+                                     or r.priority > best_q.priority):
+                    best_q = r
+            top_pri = None if best_q is None else best_q.priority
+            top_need = None
+            for ps in self._preempted:
+                if top_pri is None or ps.req.priority > top_pri:
+                    top_pri, top_need = ps.req.priority, ps.n_pages
+            if top_pri is None:
+                return
+            # victim check BEFORE the page-need lookup: with all-equal
+            # priorities (the common case) no lane can ever be evicted, and
+            # the per-round prefix-index walk in _fresh_pages_needed would
+            # be pure overhead on the admission hot path
+            victim = self._victim_lane(top_pri)
+            if victim is None:
+                return
+            if top_need is None:
+                top_need = self._fresh_pages_needed(best_q)
+            starved = len(self._free_lanes()) == 0 or (
+                self.page_size is not None
+                and top_need > self.allocator.free_pages)
+            if not starved:
+                return
+            self._preempt_lane(victim)
+
+    def _victim_lane(self, above: int) -> Optional[int]:
+        """Lowest-priority resident non-pending lane strictly below
+        ``above`` (ties: lowest lane index — deterministic), or None."""
+        best = None
+        for lane in np.flatnonzero(self.lane_rid >= 0):
+            lane = int(lane)
+            if self._lane_pending[lane]:
+                continue
+            req = self._live_req.get(int(self.lane_rid[lane]))
+            if req is None or req.priority >= above:
+                continue
+            if best is None or req.priority < best[0]:
+                best = (req.priority, lane)
+        return None if best is None else best[1]
+
+    def _preempt_lane(self, lane: int):
+        """Spill a resident lane's COMPLETE state to host and free it: page
+        blocks through the host-swap gather path, dense carries + decode
+        rows + sampler row through ``_spill_lane`` — one blocking sync for
+        all of it.  The request re-queues as a ``PreemptedState``; resuming
+        splices everything back bit-exactly."""
+        self._flush_stash()
+        rid = int(self.lane_rid[lane])
+        if rid < 0:                         # finished in the flushed round
+            return
+        req = self._live_req[rid]
+        eng = self.engine
+        lane_idx = np.asarray([lane], np.int32)
+        stoch = bool(self._lane_stoch[lane])
+        with self.obs.span("preempt", rid=rid, lane=lane):
+            self.stats["dispatches"] += 1
+            dense_h, row_h, srow_h = eng._spill_lane(
+                self.cache, self.out_buf, self.tok, self.n_gen, self.budget,
+                self.sstate, lane_idx)
+            blocks_h = None
+            pages: list = []
+            if self.page_size is not None:
+                pages = self.lane_pages.get(lane, [])
+                if pages:
+                    kpad = _next_pow2(len(pages))
+                    pids = np.full((kpad,), self.trash_page, np.int32)
+                    pids[:len(pages)] = pages
+                    self.stats["dispatches"] += 1
+                    blocks_h = eng._gather_blocks(self.cache,
+                                                  jnp.asarray(pids))
+            # np.array (copy=True) leaves: PreemptedState must own its bytes
+            # — on donating backends the device buffers are recycled next
+            # dispatch
+            dense, row, srow, blocks = jax.tree_util.tree_map(
+                np.array, self._block_on((dense_h, row_h, srow_h, blocks_h),
+                                         "preempt"))
+            if blocks is not None:
+                blocks = {k: b[:len(pages)] for k, b in blocks.items()}
+            if self.page_size is not None:
+                freed = [pid for pid in self.lane_pages.pop(lane, [])
+                         if self.allocator.release(pid)]
+                if freed:
+                    self._spill_pages(freed)
+                self.cache["page_table"] = self.cache["page_table"].at[
+                    lane].set(self.trash_page)
+            self.p = self.p.at[lane].set(False)
+            self.lane_rid[lane] = -1
+            self._lane_stoch[lane] = False
+            self._host_ngen[lane] = int(row["ngen"][0])
+            self._preempted.append(PreemptedState(
+                req=req, dense=dense, blocks=blocks, n_pages=len(pages),
+                row=row, srow=srow, stoch=stoch, order=self._preempt_seq))
+            self._preempt_seq += 1
+            self.stats["preemptions"] += 1
+            self._rid_preempts[rid] = self._rid_preempts.get(rid, 0) + 1
+            self.obs.request_event(rid, "preempted", lane=lane,
+                                   n_gen=int(row["ngen"][0]))
+            self._reshard()
+
+    def _try_resume(self):
+        """Re-admit preempted requests (highest priority first, FIFO within
+        a level) as soon as a lane and their full page-chain allocation are
+        available.  Resume takes the LOWEST free lane — the same fill order
+        admission uses, so burst narrowing stays valid."""
+        if not self._preempted:
+            return
+        # never resume BELOW a due queued request's priority: preemption
+        # just freed resources for it, and resuming the victim right back
+        # would thrash (preempt -> resume -> preempt) until the pool grows
+        top_queued = max((r.priority for r in self.queue if self._due(r)),
+                         default=None)
+        still: list[PreemptedState] = []
+        for ps in sorted(self._preempted,
+                         key=lambda s: (-s.req.priority, s.order)):
+            if top_queued is not None and ps.req.priority < top_queued:
+                still.append(ps)
+                continue
+            free = self._free_lanes()
+            if len(free) == 0:
+                still.append(ps)
+                continue
+            new = None
+            if self.page_size is not None and ps.n_pages:
+                new = self.allocator.alloc(ps.n_pages)
+                if new is None:
+                    self.stats["page_waits"] += 1
+                    still.append(ps)
+                    continue
+            self._resume_state(ps, int(free[0]), new)
+        self._preempted = still
+
+    def _resume_state(self, ps: PreemptedState, lane: int, new_pages):
+        """Splice a ``PreemptedState`` back into ``lane``: scatter its page
+        blocks into freshly allocated pages (same batched write as swap-in),
+        rebuild the page-table row (tail-padded with the last page, the
+        clamped-write containment rule), then restore dense carries + decode
+        rows + sampler row via ``_resume_lane``.  The resumed chain is NOT
+        re-registered in the prefix index — its pages are private now; a
+        later prompt sharing this prefix pays a cold prefill (correct,
+        merely unshared)."""
+        eng = self.engine
+        rid = ps.req.rid
+        lane_idx = np.asarray([lane], np.int32)
+        table_row = None
+        with self.obs.span("resume", rid=rid, lane=lane):
+            if self.page_size is not None and ps.n_pages:
+                kpad = _next_pow2(ps.n_pages)
+                pids = np.full((kpad,), self.trash_page, np.int32)
+                pids[:ps.n_pages] = new_pages
+                blocks = {}
+                for pk, b in ps.blocks.items():
+                    pad = np.zeros((kpad - ps.n_pages,) + b.shape[1:],
+                                   b.dtype)
+                    blocks[pk] = np.concatenate([b, pad]) if kpad > \
+                        ps.n_pages else b
+                self.stats["dispatches"] += 1
+                self.cache = eng._scatter_blocks(self.cache,
+                                                 jnp.asarray(pids), blocks)
+                tab = np.full((self.n_pages,), new_pages[-1], np.int32)
+                tab[:ps.n_pages] = new_pages
+                table_row = tab
+                self.lane_pages[lane] = list(new_pages)
+                self.stats["resume_page_ins"] += ps.n_pages
+            self.stats["dispatches"] += 1
+            (self.cache, self.out_buf, self.tok, self.p, self.n_gen,
+             self.budget, self.sstate) = eng._resume_lane(
+                self.cache, self.out_buf, self.tok, self.p, self.n_gen,
+                self.budget, self.sstate, lane_idx, ps.dense, ps.row,
+                ps.srow, table_row)
+            self._reshard()
+            self.lane_rid[lane] = rid
+            self._lane_stoch[lane] = ps.stoch
+            self._host_ngen[lane] = int(ps.row["ngen"][0])
+            if self._stash is not None:
+                # the in-flight round's device n_gen row for this lane may
+                # belong to a PREVIOUS occupant: pin the post-harvest mirror
+                # back to the resumed value when that stash lands
+                self._stash.setdefault("resumed_fix", {})[lane] = int(
+                    ps.row["ngen"][0])
+            self.obs.request_event(rid, "resumed", lane=lane)
 
     # ------------------------------------------------------------------
     # lane lifecycle
@@ -897,7 +1446,7 @@ class ContinuousBatchingScheduler:
         plen = len(req.tokens)
         budget = self._budget_for(req, plen)
         shared: list = []
-        swap_keys: list = []
+        swap_entries: list = []
         if self.prefix_sharing and not req.extras:
             shared = self.prefix_index.lookup(req.tokens, ps)
             # the suffix prefill must be non-empty (the last prompt token's
@@ -905,15 +1454,23 @@ class ContinuousBatchingScheduler:
             while shared and len(shared) * ps >= plen:
                 shared.pop()
             if self.host_swap is not None:
-                # extend the resident chain through the host store; same
-                # non-empty-suffix guard as above
+                # extend the resident chain through the host store (same
+                # non-empty-suffix guard as above), VERIFYING each entry's
+                # checksum on the way — a corrupt hit drops out of the store
+                # and degrades the rest of the chain to cold prefill, never
+                # to wrong tokens
+                cf0 = self.host_swap.checksum_failures
                 j = len(shared)
                 while (j + 1) * ps < plen:
-                    key = req.tokens[:(j + 1) * ps].tobytes()
-                    if key not in self.host_swap:
+                    entry = self.host_swap.get(
+                        req.tokens[:(j + 1) * ps].tobytes())
+                    if entry is None:
                         break
-                    swap_keys.append(key)
+                    swap_entries.append(entry)
                     j += 1
+                cf = self.host_swap.checksum_failures - cf0
+                if cf:
+                    self.stats["swap_checksum_failures"] += cf
         n_total = PG.pages_needed(min(plen + budget, self.max_len), ps)
         new = self.allocator.alloc(n_total - len(shared))
         if new is None:
@@ -921,9 +1478,9 @@ class ContinuousBatchingScheduler:
             return None
         for pid in shared:
             self.allocator.retain(pid)
-        swapped, new = new[:len(swap_keys)], new[len(swap_keys):]
+        swapped, new = new[:len(swap_entries)], new[len(swap_entries):]
         if swapped:
-            self._page_in(swapped, swap_keys)
+            self._page_in(swapped, swap_entries)
             self.stats["session_hits"] += 1
             self.stats["session_hit_tokens"] += len(swapped) * ps
         if shared:
@@ -969,13 +1526,23 @@ class ContinuousBatchingScheduler:
         free = self._free_lanes()
         batch_reqs: list[Request] = []
         plans: list[_PagePlan] = []
-        rest: list[Request] = []
+        queue = list(self.queue)
+        keep = [True] * len(queue)          # stays queued for a later round
         extras_keys = None
         n_claimed = 0                       # lanes claimed by new partials
         suffix_max = pos0_max = 0
-        for req in self.queue:
-            if len(batch_reqs) + n_claimed >= len(free) or not self._due(req):
-                rest.append(req)
+        # higher priority scans first; the sort is stable, so FIFO holds
+        # within a level and all-default-priority traffic scans in exactly
+        # the old submission order
+        for qi in sorted(range(len(queue)), key=lambda i: -queue[i].priority):
+            req = queue[qi]
+            if not self._due(req):
+                continue
+            if self._shed_infeasible(req):  # can't meet its deadline: shed
+                keep[qi] = False
+                self._shed(req)
+                continue
+            if len(batch_reqs) + n_claimed >= len(free):
                 continue
             keys = frozenset(req.extras) if req.extras else frozenset()
             # extras ride chunked prefill only when they are per-request
@@ -984,22 +1551,22 @@ class ContinuousBatchingScheduler:
             chunkable = self.prefill_chunk is not None and (
                 not req.extras or self.engine.cfg.family == "encdec")
             if extras_keys is not None and keys != extras_keys:
-                rest.append(req)
                 continue
             if self.page_size is None and chunkable \
                     and len(req.tokens) > self.prefill_chunk:
                 self._start_partial(req, None, free[len(free) - 1 - n_claimed])
                 n_claimed += 1
+                keep[qi] = False
                 continue
             if self.page_size is not None:
                 plan = self._plan_pages(req)
                 if plan is None:                    # pool exhausted: wait
-                    rest.append(req)
                     continue
                 if chunkable and plan.plen - plan.pos0 > self.prefill_chunk:
                     self._start_partial(req, plan,
                                         free[len(free) - 1 - n_claimed])
                     n_claimed += 1
+                    keep[qi] = False
                     continue
                 # group-fit guard: the prefill writes ONE padded suffix block
                 # per row at its pos0, and dynamic_update_slice CLAMPS the
@@ -1012,14 +1579,15 @@ class ContinuousBatchingScheduler:
                 p_max = max(pos0_max, plan.pos0)
                 if min(_next_pow2(s_max), self.max_len - p_max) < s_max:
                     self._unplan_pages(plan)        # wait for a better group
-                    rest.append(req)
                     continue
                 suffix_max, pos0_max = s_max, p_max
                 plans.append(plan)
             batch_reqs.append(req)
+            keep[qi] = False
             if extras_keys is None:
                 extras_keys = keys
-        self.queue = collections.deque(rest)
+        self.queue = collections.deque(
+            q for i, q in enumerate(queue) if keep[i])
         if not batch_reqs:
             return None
         n = len(batch_reqs)
@@ -1052,6 +1620,8 @@ class ContinuousBatchingScheduler:
         t = time.perf_counter()
         for i, r in enumerate(batch_reqs):
             self.req_times[r.rid]["first_token"] = t
+            # queue-wait-to-first-token in steps: feeds the shed estimator
+            self._ttft_hist.record(self.now - r.arrival)
             pl = plans[i] if plans else None
             self.obs.request_event(
                 r.rid, "admitted", lane=int(lanes[i]),
@@ -1283,6 +1853,7 @@ class ContinuousBatchingScheduler:
             self._round_admitted.append(part.lane)
             t = time.perf_counter() if t is None else t
             self.req_times[part.req.rid]["first_token"] = t
+            self._ttft_hist.record(self.now - part.req.arrival)
             self.obs.request_event(part.req.rid, "admitted",
                                    lane=part.lane, chunked=True)
             self.obs.request_event(part.req.rid, "first_token")
@@ -1375,14 +1946,13 @@ class ContinuousBatchingScheduler:
     def _paged_spec(self):
         return get_model(self.engine.cfg).paged_cache_spec(self.engine.cfg)
 
-    def _page_in(self, pages: list, keys: list):
-        """Swap-in: scatter host-store entries ``keys`` into freshly
-        allocated ``pages`` (one batched jitted write, pid vector padded to
-        a power of two aimed at the trash page).  The pages then seed the
-        admission prefill exactly like resident shared pages; the host
-        entries stay (content-addressed) for future hits."""
+    def _page_in(self, pages: list, entries: list):
+        """Swap-in: scatter checksum-verified host-store ``entries`` into
+        freshly allocated ``pages`` (one batched jitted write, pid vector
+        padded to a power of two aimed at the trash page).  The pages then
+        seed the admission prefill exactly like resident shared pages; the
+        host entries stay (content-addressed) for future hits."""
         with self.obs.span("swap_in", pages=len(pages)):
-            entries = [self.host_swap.get(k) for k in keys]
             kpad = _next_pow2(len(pages))
             pids = np.full((kpad,), self.trash_page, np.int32)
             pids[:len(pages)] = pages
@@ -1518,12 +2088,18 @@ class ContinuousBatchingScheduler:
             for j, lane in enumerate(finished):
                 rid = int(self.lane_rid[lane])
                 n = int(n_gen[j])
+                reason = (FinishReason.PREEMPTED_RESUMED
+                          if self._rid_preempts.get(rid)
+                          else FinishReason.DONE)
                 self.results[rid] = {"tokens": out[j, :n].copy(),
                                      "n_generated": n,
-                                     "finished_at": self.now}
+                                     "finished_at": self.now,
+                                     "finish_reason": reason}
                 self.req_times[rid]["finished"] = t
+                self._live_req.pop(rid, None)
                 self.obs.request_end(rid, n_generated=n,
-                                     finished_at=self.now)
+                                     finished_at=self.now,
+                                     reason=reason.value)
                 self.lane_rid[lane] = -1
                 self._lane_stoch[lane] = False
                 if self.page_size is not None:
